@@ -1,0 +1,220 @@
+"""Benchmark harness — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.  ``--quick`` shortens training
+runs; ``--only <name>`` selects a single table.
+
+  table1    heterogeneity sweep (alpha x method, ring-16)      [Table 1]
+  table2    D^2 / gradient-tracking comparison                 [Table 2]
+  table4    time-varying 1-peer exponential graph vs ring      [Table 4]
+  table5    DSGD-variant ablation zoo                          [Table 5]
+  table6    decentralized Adam variants                        [Table 6]
+  fig3      average-consensus speedup                          [Fig. 3]
+  fig6      topology scales (ring n in {8,16,32})              [Fig. 6/T7]
+  serving   batched prefill+decode throughput (reduced archs)
+  kernels   Pallas kernel microbench vs jnp reference
+  roofline  aggregate the dry-run artifacts into the §Roofline table
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import time
+
+from .common import csv_row, run_decentralized
+
+
+def table1(quick=False):
+    steps = 120 if quick else 300
+    for alpha in (10.0, 1.0, 0.1):
+        for method in ("dsgd", "dsgdm_n", "qg_dsgdm_n"):
+            r = run_decentralized(method, alpha=alpha, steps=steps)
+            csv_row(f"table1/{method}/alpha{alpha}", r["us_per_step"],
+                    f"acc={r['acc']:.4f}")
+
+
+def table2(quick=False):
+    steps = 120 if quick else 300
+    for method in ("dsgdm_n", "gt", "gt_dsgdm_n", "d2", "d2_plus",
+                   "qg_dsgdm_n"):
+        for alpha in (1.0, 0.1):
+            r = run_decentralized(method, alpha=alpha, steps=steps)
+            csv_row(f"table2/{method}/alpha{alpha}", r["us_per_step"],
+                    f"acc={r['acc']:.4f}")
+
+
+def table4(quick=False):
+    """Table 4: time-varying 1-peer directed exponential graph (Assran'19)
+    vs fixed ring — QG generalizes to time-varying topologies."""
+    steps = 120 if quick else 300
+    for topo in ("ring", "exp"):
+        for method in ("dsgdm_n", "qg_dsgdm_n"):
+            r = run_decentralized(method, alpha=0.1, topo_name=topo,
+                                  n_nodes=16, steps=steps)
+            csv_row(f"table4/{method}/{topo}16/alpha0.1", r["us_per_step"],
+                    f"acc={r['acc']:.4f}")
+
+
+def table5(quick=False):
+    steps = 120 if quick else 300
+    methods = ("dsgd", "dsgdm", "dsgdm_n", "dsgdm_sync", "dsgdm_n_sync",
+               "dsgdm_n_sync_global", "slowmo", "dmsgd", "qg_dsgdm",
+               "qg_dsgdm_n")
+    for method in methods:
+        r = run_decentralized(method, alpha=0.1, steps=steps)
+        csv_row(f"table5/{method}/alpha0.1", r["us_per_step"],
+                f"acc={r['acc']:.4f},consensus={r['consensus']:.2e}")
+
+
+def table6(quick=False):
+    steps = 120 if quick else 300
+    for method in ("dadam", "qg_dadam"):
+        r = run_decentralized(method, alpha=0.1, steps=steps, lr=0.003)
+        csv_row(f"table6/{method}/alpha0.1", r["us_per_step"],
+                f"acc={r['acc']:.4f}")
+
+
+def fig3(quick=False):
+    from repro.core import consensus, topology
+    steps = 400 if quick else 800
+    for topo in (topology.ring(16), topology.ring(32),
+                 topology.social_network(), topology.torus(4, 4)):
+        t0 = time.time()
+        hg = consensus.run_gossip(topo, steps=steps)
+        hq = consensus.run_qg_consensus(topo, steps=steps)
+        us = (time.time() - t0) / (2 * steps) * 1e6
+        sg = consensus.steps_to_distance(hg, 1e-2)
+        sq = consensus.steps_to_distance(hq, 1e-2)
+        csv_row(f"fig3/{topo.name}", us,
+                f"gossip_steps_to_1e-2={sg},qg_steps_to_1e-2={sq}")
+
+
+def fig6(quick=False):
+    steps = 120 if quick else 300
+    for n in (8, 16, 32):
+        for alpha in (1.0, 0.1):
+            for method in ("dsgdm_n", "qg_dsgdm_n"):
+                r = run_decentralized(method, alpha=alpha, n_nodes=n,
+                                      steps=steps)
+                csv_row(f"fig6/{method}/ring{n}/alpha{alpha}",
+                        r["us_per_step"], f"acc={r['acc']:.4f}")
+
+
+def serving(quick=False):
+    """Batched-decode throughput on a reduced arch (CPU; the decode_32k
+    dry-run bounds the TPU-side numbers)."""
+    import jax
+    import jax.numpy as jnp
+    from repro.configs import get_config
+    from repro.launch.serve import generate
+    from repro.models import transformer as tf
+
+    for arch in ("tinyllama-1.1b", "gemma2-27b", "zamba2-7b"):
+        cfg = get_config(arch, reduced=True)
+        key = jax.random.PRNGKey(0)
+        params = tf.init_lm(key, cfg)
+        b, plen, glen = 8, 32, 32 if not quick else 8
+        prompts = jax.random.randint(key, (b, plen), 0, cfg.vocab_size)
+        img = None
+        t0 = time.time()
+        toks = generate(params, cfg, prompts, gen_len=glen,
+                        cache_len=plen + glen, img=img)
+        jax.block_until_ready(toks)
+        dt = time.time() - t0
+        csv_row(f"serving/{arch}-reduced", dt / (b * glen) * 1e6,
+                f"tok_per_s={b * glen / dt:.1f},batch={b},gen={glen}")
+
+
+def kernels(quick=False):
+    import jax
+    import jax.numpy as jnp
+    from repro.kernels import ops, ref
+
+    key = jax.random.PRNGKey(0)
+    reps = 3 if quick else 10
+
+    def bench(fn, *args, **kw):
+        out = fn(*args, **kw)  # compile
+        jax.block_until_ready(out)
+        t0 = time.time()
+        for _ in range(reps):
+            out = fn(*args, **kw)
+        jax.block_until_ready(out)
+        return (time.time() - t0) / reps * 1e6
+
+    shape = (512, 1024)
+    x = jax.random.normal(key, shape)
+    m = jax.random.normal(jax.random.fold_in(key, 1), shape)
+    g = jax.random.normal(jax.random.fold_in(key, 2), shape)
+    us_k = bench(ops.qg_local_step, x, m, g, eta=0.1, beta=0.9)
+    us_r = bench(jax.jit(lambda *a: ref.qg_local_step_ref(
+        *a, eta=0.1, beta=0.9, nesterov=False)), x, m, g)
+    csv_row("kernels/qg_local_step_pallas_interp", us_k,
+            f"jnp_ref_us={us_r:.1f}")
+
+    b, s, h, kh, d = 1, 512, 8, 4, 64
+    q = jax.random.normal(key, (b, s, h, d))
+    k = jax.random.normal(jax.random.fold_in(key, 3), (b, s, kh, d))
+    v = jax.random.normal(jax.random.fold_in(key, 4), (b, s, kh, d))
+    us_k = bench(ops.flash_attention, q, k, v, block_q=128, block_k=128)
+    us_r = bench(jax.jit(lambda *a: ref.flash_attention_ref(*a)), q, k, v)
+    csv_row("kernels/flash_attention_pallas_interp", us_k,
+            f"jnp_ref_us={us_r:.1f}")
+
+    b, s, h, p, n = 1, 512, 4, 32, 32
+    xs = jax.random.normal(key, (b, s, h, p)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(jax.random.fold_in(key, 5),
+                                           (b, s, h)))
+    a = -jnp.exp(jax.random.normal(jax.random.fold_in(key, 6), (h,)) * 0.3)
+    bb = jax.random.normal(jax.random.fold_in(key, 7), (b, s, n)) * 0.3
+    cc = jax.random.normal(jax.random.fold_in(key, 8), (b, s, n)) * 0.3
+    dsk = jnp.ones((h,))
+    us_k = bench(ops.ssd_scan, xs, dt, a, bb, cc, dsk, chunk=128)
+    us_r = bench(jax.jit(lambda *a_: ref.ssd_scan_ref(*a_)), xs, dt, a, bb, cc)
+    csv_row("kernels/ssd_scan_pallas_interp", us_k, f"jnp_ref_us={us_r:.1f}")
+
+
+def roofline(quick=False):
+    """Aggregate dry-run JSON artifacts into §Roofline CSV rows."""
+    pat = os.path.join("experiments", "dryrun", "*.json")
+    rows = sorted(glob.glob(pat))
+    if not rows:
+        print("# no dry-run artifacts found — run: "
+              "PYTHONPATH=src python -m repro.launch.dryrun")
+        return
+    for path in rows:
+        rec = json.load(open(path))
+        rt = rec.get("roofline")
+        if not rt:
+            continue
+        name = os.path.basename(path).replace(".json", "")
+        lower = rt["step_s_lower_bound"] * 1e6
+        csv_row(
+            f"roofline/{name}", lower,
+            f"bottleneck={rt['bottleneck']},compute_s={rt['compute_s']:.4f},"
+            f"memory_s={rt['memory_s']:.4f},"
+            f"collective_s={rt['collective_s']:.4f},"
+            f"useful_flops={rec.get('useful_flops_ratio', 0):.3f}")
+
+
+TABLES = {
+    "table1": table1, "table2": table2, "table4": table4, "table5": table5,
+    "table6": table6, "fig3": fig3, "fig6": fig6, "serving": serving,
+    "kernels": kernels, "roofline": roofline,
+}
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="")
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args(argv)
+    names = [args.only] if args.only else list(TABLES)
+    print("name,us_per_call,derived")
+    for n in names:
+        TABLES[n](quick=args.quick)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,74 @@
+"""Paper-faithful CV experiment (Table 1 protocol, scaled down): ResNet-20
+with EvoNorm-S0 on synthetic CIFAR-shaped data, ring topology, Dirichlet
+heterogeneity sweep, DSGDm-N vs QG-DSGDm-N.
+
+    PYTHONPATH=src python examples/heterogeneous_cifar.py --steps 60
+
+(ResNet-20 on CPU is slow; defaults are sized for a few minutes.)
+"""
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import optim, topology
+from repro.data import ClientDataset, dirichlet_partition, make_classification
+from repro.models import resnet
+from repro.train import DecentralizedTrainer, lr_schedule, run_training
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=60)
+    ap.add_argument("--nodes", type=int, default=4)
+    ap.add_argument("--alphas", default="10,0.1")
+    ap.add_argument("--norm", default="evonorm", choices=["bn", "gn", "evonorm"])
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--lr", type=float, default=0.03)
+    args = ap.parse_args()
+
+    x, y = make_classification(n=1024, hw=16, n_classes=10, noise=1.2, seed=0)
+    x_tr, y_tr, x_te, y_te = x[:768], y[:768], x[768:], y[768:]
+    norm = args.norm
+
+    def init_fn(key):
+        return resnet.init_resnet20(key, norm=norm)
+
+    def loss_fn(p, s, batch, rng):
+        xb, yb = batch
+        logits, ns = resnet.apply_resnet20(p, s, xb, norm=norm, train=True)
+        yb = yb.astype(jnp.int32)
+        ce = jnp.mean(jax.nn.logsumexp(logits, -1) -
+                      jnp.take_along_axis(logits, yb[:, None], -1)[:, 0])
+        return ce, (ns, {})
+
+    for alpha in [float(a) for a in args.alphas.split(",")]:
+        parts = dirichlet_partition(y_tr, args.nodes, alpha, seed=0)
+        for method in ("dsgdm_n", "qg_dsgdm_n"):
+            ds = ClientDataset((x_tr, y_tr), parts, batch=args.batch, seed=0)
+            trainer = DecentralizedTrainer(
+                loss_fn, optim.make_optimizer(method, lr=args.lr,
+                                              weight_decay=1e-4),
+                topology.ring(args.nodes),
+                lr_fn=lr_schedule(args.lr, total_steps=args.steps,
+                                  warmup=5, decay_at=(0.5, 0.75)))
+            state = trainer.init(jax.random.PRNGKey(0), init_fn)
+            state, hist = run_training(
+                trainer, state, iter(lambda: ds.next_batch(), None),
+                args.steps, log_every=0, log_fn=lambda *_: None)
+
+            def node_acc(p, s):
+                logits, _ = resnet.apply_resnet20(
+                    p, s, jnp.asarray(x_te), norm=norm, train=False)
+                return jnp.mean(jnp.argmax(logits, -1) == jnp.asarray(y_te))
+
+            accs = jax.vmap(node_acc)(state.params, state.model_state)
+            print(f"alpha={alpha:5.1f}  {method:12s}  "
+                  f"test acc={float(accs.mean()):.4f}  "
+                  f"final loss={hist[-1]['loss']:.3f}  "
+                  f"consensus={hist[-1]['consensus']:.2e}")
+
+
+if __name__ == "__main__":
+    main()

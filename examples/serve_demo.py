@@ -1,0 +1,20 @@
+"""Batched serving example: prefill + KV-cache decode on a reduced assigned
+architecture — the same step functions the dry-run lowers for decode_32k.
+
+    PYTHONPATH=src python examples/serve_demo.py --arch gemma2-27b
+"""
+import argparse
+
+from repro.launch import serve
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma2-27b")
+    args = ap.parse_args()
+    serve.main(["--arch", args.arch, "--batch", "4", "--prompt-len", "32",
+                "--gen-len", "16"])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,83 @@
+"""End-to-end driver: decentralized training of a ~100M-parameter llama-style
+transformer for a few hundred steps on synthetic non-i.i.d. LM data.
+
+8 nodes on a ring, QG-DSGDm-N, node-stacked params (the exact layout the
+TPU launch shards over the mesh).  On this CPU container a full run takes a
+while — use --steps to size it.
+
+    PYTHONPATH=src python examples/train_100m.py --steps 200
+"""
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.core import optim, topology
+from repro.data import ClientDataset, dirichlet_partition, make_lm_domains
+from repro.models import transformer as tf
+from repro.train import DecentralizedTrainer, lr_schedule, run_training
+
+
+def model_100m():
+    """~100M params: llama-style, vocab 8192."""
+    base = get_config("tinyllama-1.1b")
+    return dataclasses.replace(
+        base, name="llama-100m", n_layers=8, d_model=768, n_heads=12,
+        n_kv_heads=4, head_dim=64, d_ff=2048, vocab_size=8192,
+        mesh_divisor=1)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--nodes", type=int, default=8)
+    ap.add_argument("--batch", type=int, default=2)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--alpha", type=float, default=0.1)
+    ap.add_argument("--lr", type=float, default=0.02)
+    args = ap.parse_args()
+
+    cfg = model_100m()
+    print(f"model: {cfg.name}, {cfg.n_params():,} params "
+          f"({cfg.n_params()/1e6:.0f}M), {args.nodes} nodes, ring, "
+          f"alpha={args.alpha}")
+
+    tokens, domain = make_lm_domains(
+        n_domains=args.nodes, vocab=cfg.vocab_size, seq_len=args.seq_len,
+        n_seq_per_domain=max(64, args.batch * 16), seed=0)
+    parts = dirichlet_partition(domain, args.nodes, args.alpha, seed=0)
+    ds = ClientDataset((tokens,), parts, batch=args.batch, seed=0)
+
+    def loss_fn(params, _ms, batch, _rng):
+        (toks,) = batch
+        b = {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+        return tf.train_loss(params, b, cfg, chunk=args.seq_len), ({}, {})
+
+    trainer = DecentralizedTrainer(
+        loss_fn,
+        optim.make_optimizer("qg_dsgdm_n", lr=args.lr, weight_decay=1e-4),
+        topology.ring(args.nodes),
+        lr_fn=lr_schedule(args.lr, total_steps=args.steps,
+                          warmup=max(1, args.steps // 20),
+                          decay_at=(0.5, 0.75)))
+    state = trainer.init(jax.random.PRNGKey(0),
+                         lambda k: (tf.init_lm(k, cfg), {}))
+
+    t0 = time.time()
+    state, hist = run_training(
+        trainer, state, iter(lambda: ds.next_batch(), None), args.steps,
+        log_every=max(1, args.steps // 10))
+    dt = time.time() - t0
+    tok_per_step = args.nodes * args.batch * args.seq_len
+    print(f"\n{args.steps} steps in {dt:.0f}s "
+          f"({tok_per_step * args.steps / dt:.0f} tok/s on CPU); "
+          f"loss {hist[0]['loss']:.3f} -> {hist[-1]['loss']:.3f}; "
+          f"consensus {hist[-1]['consensus']:.2e}")
+    assert hist[-1]["loss"] < hist[0]["loss"]
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+"""repro — Quasi-Global Momentum (Lin et al., ICML 2021) as a production
+JAX framework: decentralized optimizers + gossip schedules, ten assigned
+architectures, Pallas TPU kernels, multi-pod dry-run and roofline tooling."""
+__version__ = "0.1.0"

@@ -1,0 +1,11 @@
+"""Core: the paper's contribution — quasi-global momentum for decentralized
+learning — plus topologies, gossip schedules, and every baseline optimizer."""
+from . import consensus, gossip, optim, topology
+from .optim import OPTIMIZERS, DecentralizedOptimizer, make_optimizer
+from .topology import Topology, get_topology
+
+__all__ = [
+    "consensus", "gossip", "optim", "topology",
+    "OPTIMIZERS", "DecentralizedOptimizer", "make_optimizer",
+    "Topology", "get_topology",
+]

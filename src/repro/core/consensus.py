@@ -1,0 +1,83 @@
+"""Distributed average-consensus experiments (paper §4.1 / Fig. 3, App. D.1).
+
+Isolated from learning: compare plain gossip averaging ``X <- X W`` with the
+gradient-free QG iteration (Eq. 4)
+
+    X^{t+1} = W (X^t - beta M^t)
+    M^{t+1} = mu M^t + (1-mu) (X^t - X^{t+1})
+
+measuring the consensus distance || X - X_bar ||_F / sqrt(n) per round.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .topology import Topology
+
+__all__ = ["run_gossip", "run_qg_consensus", "steps_to_distance"]
+
+
+def _dist(x: jax.Array) -> jax.Array:
+    xbar = jnp.mean(x, axis=0, keepdims=True)
+    return jnp.linalg.norm(x - xbar) / jnp.sqrt(x.shape[0])
+
+
+@functools.partial(jax.jit, static_argnames=("steps",))
+def _gossip_loop(ws: jax.Array, x0: jax.Array, steps: int) -> jax.Array:
+    nw = ws.shape[0]
+
+    def body(x, t):
+        x = ws[t % nw] @ x
+        return x, _dist(x)
+
+    _, hist = jax.lax.scan(body, x0, jnp.arange(steps))
+    return hist
+
+
+@functools.partial(jax.jit, static_argnames=("steps",))
+def _qg_loop(ws: jax.Array, x0: jax.Array, beta: float, mu: float,
+             steps: int) -> jax.Array:
+    nw = ws.shape[0]
+
+    def body(carry, t):
+        x, m = carry
+        x_new = ws[t % nw] @ (x - beta * m)
+        m_new = mu * m + (1.0 - mu) * (x - x_new)
+        return (x_new, m_new), _dist(x_new)
+
+    (_, _), hist = jax.lax.scan(body, (x0, jnp.zeros_like(x0)),
+                                jnp.arange(steps))
+    return hist
+
+
+def _init(topo: Topology, dim: int, seed: int) -> jax.Array:
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(size=(topo.n, dim)), dtype=jnp.float32)
+
+
+def run_gossip(topo: Topology, *, dim: int = 128, steps: int = 200,
+               seed: int = 0) -> np.ndarray:
+    """Consensus distance history for plain gossip averaging."""
+    ws = jnp.asarray(topo.mixing, dtype=jnp.float32)
+    return np.asarray(_gossip_loop(ws, _init(topo, dim, seed), steps))
+
+
+def run_qg_consensus(topo: Topology, *, beta: float = 0.9, mu: float = 0.9,
+                     dim: int = 128, steps: int = 200,
+                     seed: int = 0) -> np.ndarray:
+    """Consensus distance history for the QG iteration (Eq. 4)."""
+    ws = jnp.asarray(topo.mixing, dtype=jnp.float32)
+    return np.asarray(_qg_loop(ws, _init(topo, dim, seed), beta, mu, steps))
+
+
+def steps_to_distance(history: np.ndarray, target: float) -> int:
+    """First round index at which the consensus distance drops below target
+    (relative to the round-0 distance); -1 if never."""
+    rel = history / history[0]
+    hits = np.nonzero(rel <= target)[0]
+    return int(hits[0]) if hits.size else -1

@@ -1,0 +1,133 @@
+"""Gossip averaging primitives over a node-stacked pytree.
+
+Layout convention (see DESIGN.md §3): every parameter / optimizer-state leaf
+carries the decentralized node index as its *leading* axis, shape
+``[n_nodes, ...]``.  On CPU that axis lives in memory; on a TPU mesh it is
+sharded over the ``data`` (or ``pod``) mesh axis, so the mixing contraction
+below becomes collectives over that axis.
+
+Two schedules:
+
+* ``mix_dense``  — paper-faithful: ``x <- einsum('nm,m...->n...', W, x)``.
+  For a sharded node axis XLA lowers this to an all-gather (every node reads
+  every other node's model) even when W is sparse.  This is the *baseline*
+  collective schedule recorded in EXPERIMENTS.md §Perf.
+* ``mix_ring_shardmap`` — beyond-paper TPU schedule: for a ring W, exchange
+  only the two neighbours with ``jax.lax.ppermute`` inside ``shard_map``;
+  2/(n-1) of the all-gather bytes.  Bit-wise it computes the same weighted
+  sum (tested against ``mix_dense``).
+
+Both act on whole pytrees and are differentiable (gossip happens outside the
+gradient in DSGD-family algorithms, but consensus experiments use it inside
+jitted loops).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from .topology import Topology
+
+PyTree = Any
+
+__all__ = [
+    "mix_dense",
+    "mix_leaf_dense",
+    "mix_ring_shardmap",
+    "neighbor_sum_ppermute",
+    "consensus_distance",
+    "node_mean",
+]
+
+
+def mix_leaf_dense(w: jax.Array, x: jax.Array) -> jax.Array:
+    """x[n, ...] -> (W @ x) with the contraction on the node axis."""
+    flat = x.reshape(x.shape[0], -1)
+    out = jnp.einsum("nm,mf->nf", w.astype(flat.dtype), flat,
+                     preferred_element_type=flat.dtype)
+    return out.reshape(x.shape)
+
+
+def mix_dense(w: jax.Array | np.ndarray, tree: PyTree) -> PyTree:
+    """Dense mixing of a node-stacked pytree: leaf[n,...] <- sum_m W[n,m] leaf[m,...]."""
+    w = jnp.asarray(w)
+    return jax.tree.map(functools.partial(mix_leaf_dense, w), tree)
+
+
+def neighbor_sum_ppermute(
+    x: jax.Array,
+    *,
+    axis_name: str,
+    self_weight: float,
+    side_weight: float,
+) -> jax.Array:
+    """Ring mixing of a *sharded* (per-node local) array inside shard_map.
+
+    ``x`` here is the local shard (no node axis); neighbours are reached with
+    two collective-permutes around the ring defined by ``axis_name``.
+    """
+    n = jax.lax.axis_size(axis_name)
+    if n == 1:
+        return x
+    fwd = [(i, (i + 1) % n) for i in range(n)]
+    bwd = [(i, (i - 1) % n) for i in range(n)]
+    from_left = jax.lax.ppermute(x, axis_name, perm=fwd)   # value of node i-1
+    from_right = jax.lax.ppermute(x, axis_name, perm=bwd)  # value of node i+1
+    if n == 2:
+        # left and right neighbour coincide; weights collapse to 1/2, 1/2.
+        return (x + from_left) * 0.5
+    return self_weight * x + side_weight * (from_left + from_right)
+
+
+def mix_ring_shardmap(
+    tree: PyTree,
+    *,
+    mesh: jax.sharding.Mesh,
+    axis_name: str,
+    self_weight: float = 1.0 / 3.0,
+) -> PyTree:
+    """Ring gossip over a pytree whose leaves have a leading node axis
+    sharded on ``axis_name``.  Equivalent to ``mix_dense(ring(n).w(), tree)``
+    but exchanges only the two ring neighbours (2/(n-1) of the all-gather
+    bytes).  Mesh axes other than the node axis stay under compiler control
+    (``auto``), so leaves may simultaneously be sharded over 'model'/'data'.
+    """
+    side = (1.0 - self_weight) / 2.0
+
+    def local_fn(local_tree):
+        return jax.tree.map(
+            lambda x: neighbor_sum_ppermute(
+                x, axis_name=axis_name, self_weight=self_weight,
+                side_weight=side),
+            local_tree,
+        )
+
+    specs = jax.tree.map(
+        lambda x: P(axis_name, *([None] * (x.ndim - 1))), tree
+    )
+    # manual only over the node axis; 'model'/'data' stay compiler-managed
+    return jax.shard_map(
+        local_fn, mesh=mesh, in_specs=(specs,), out_specs=specs,
+        axis_names=frozenset({axis_name}),
+    )(tree)
+
+
+def node_mean(tree: PyTree) -> PyTree:
+    """Global average over the node axis (the hypothetical 'global' model)."""
+    return jax.tree.map(lambda x: jnp.mean(x, axis=0, keepdims=True), tree)
+
+
+def consensus_distance(tree: PyTree) -> jax.Array:
+    """sqrt( mean_i || x_i - x_bar ||^2 / n ) aggregated over all leaves —
+    the quantity plotted in Fig. 3 / Kong et al. 2021."""
+    sq, cnt = 0.0, 0.0
+    for leaf in jax.tree.leaves(tree):
+        mean = jnp.mean(leaf, axis=0, keepdims=True)
+        sq = sq + jnp.sum((leaf - mean) ** 2) / leaf.shape[0]
+        cnt = cnt + np.prod(leaf.shape[1:])
+    return jnp.sqrt(sq / cnt)

@@ -1,0 +1,536 @@
+"""Decentralized optimizer zoo (the paper's core + every baseline it compares).
+
+All optimizers act on *node-stacked* pytrees: each leaf has shape
+``[n_nodes, ...]`` (see DESIGN.md §3).  A step is
+
+    params', state' = opt.step(params, grads, state, w=W_t, lr=eta_t)
+
+where ``grads`` are per-node stochastic gradients evaluated at ``params`` and
+``W_t`` is the doubly-stochastic mixing matrix for this round (time-varying
+topologies pass a different one each step).  Mixing defaults to the dense
+paper-faithful einsum (`gossip.mix_dense`); a custom ``mix_fn`` (e.g. the
+ring-ppermute schedule) can be injected — algorithms only ever mix through it.
+
+Implemented (paper reference in brackets):
+
+  dsgd          DSGD                                   [Eq. DSGD]
+  dsgdm         DSGD + local HeavyBall momentum        [Alg. 1 left]
+  dsgdm_n       DSGD + local Nesterov momentum         [§3.1 naming]
+  qg_dsgdm      Quasi-Global momentum, HeavyBall       [Alg. 1 right]
+  qg_dsgdm_n    Quasi-Global momentum, Nesterov        [§5, QG-DSGDm-N]
+  qg_dsgdm_tau  multi-step variant, update m̂ every τ   [Alg. 3 / App. D.8]
+  qhm           single-worker reduction of QG-DSGDm    [§4.2 / App. B.3.1]
+  dadam         decentralized Adam (local buffers)     [Table 6 baseline]
+  qg_dadam      Quasi-Global Adam                      [Alg. 2]
+  dsgdm_sync    DSGDm(-N) + momentum-buffer gossip     [Table 5 rows 3/8/9]
+  slowmo        SlowMo (Wang et al. 2020c)             [Alg. 5]
+  dmsgd         DMSGD option I/II (Balu et al. 2020)   [Alg. 8 / App. B.2]
+  d2            D^2 (Tang et al. 2018b)                [Table 2]
+  d2_plus       D^2 with lr-decay fix                  [footnote 9]
+  gt            DSGD with gradient tracking            [Table 2]
+  gt_dsgdm_n    DSGDm-N on tracked gradients           [Table 2]
+
+Weight decay is the paper's constant coupled L2 (1e-4), added to the raw
+gradient before any momentum logic, matching the reference PyTorch recipe.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from . import gossip
+
+PyTree = Any
+MixFn = Callable[[jax.Array, PyTree], PyTree]
+
+__all__ = ["DecentralizedOptimizer", "make_optimizer", "OPTIMIZERS"]
+
+
+# ---------------------------------------------------------------------------
+# pytree helpers
+# ---------------------------------------------------------------------------
+
+def _tmap(f, *trees):
+    return jax.tree.map(f, *trees)
+
+
+def _zeros_like(tree):
+    return _tmap(jnp.zeros_like, tree)
+
+
+def _add(a, b):
+    return _tmap(jnp.add, a, b)
+
+
+def _sub(a, b):
+    return _tmap(jnp.subtract, a, b)
+
+
+def _scale(s, a):
+    return _tmap(lambda x: s * x, a)
+
+
+def _axpy(s, a, b):
+    """s*a + b"""
+    return _tmap(lambda x, y: s * x + y, a, b)
+
+
+def _lerp(mu, a, b):
+    """mu*a + (1-mu)*b"""
+    return _tmap(lambda x, y: mu * x + (1.0 - mu) * y, a, b)
+
+
+def _apply_wd(params, grads, wd):
+    if not wd:
+        return grads
+    return _tmap(lambda g, p: g + wd * p, grads, params)
+
+
+def _global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(l.astype(jnp.float32) ** 2) for l in jax.tree.leaves(tree)))
+
+
+# ---------------------------------------------------------------------------
+# base class
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class DecentralizedOptimizer:
+    """Functional decentralized optimizer.
+
+    Subclasses implement ``init`` and ``step``.  ``mix_fn(w, tree)`` performs
+    one gossip round; the default contracts the dense mixing matrix over the
+    node axis.
+    """
+
+    lr: float = 0.1
+    weight_decay: float = 0.0
+    mix_fn: MixFn = dataclasses.field(default=gossip.mix_dense)
+    name: str = "base"
+
+    def init(self, params: PyTree) -> PyTree:
+        raise NotImplementedError
+
+    def step(self, params, grads, state, *, w, lr=None, t=0):
+        raise NotImplementedError
+
+    def _lr(self, lr):
+        return self.lr if lr is None else lr
+
+
+# ---------------------------------------------------------------------------
+# plain DSGD family
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class DSGD(DecentralizedOptimizer):
+    name: str = "dsgd"
+
+    def init(self, params):
+        return {}
+
+    def step(self, params, grads, state, *, w, lr=None, t=0):
+        eta = self._lr(lr)
+        grads = _apply_wd(params, grads, self.weight_decay)
+        half = _axpy(-eta, grads, params)
+        return self.mix_fn(w, half), state
+
+
+@dataclasses.dataclass(frozen=True)
+class DSGDm(DecentralizedOptimizer):
+    """Local HeavyBall: m <- beta m + g ; x <- W(x - eta m).  Optionally
+    gossips the momentum buffer too (Table 5 'extra communication' rows):
+    ``sync='ring'`` mixes m with the same W, ``sync='complete'`` averages it
+    globally every step."""
+
+    beta: float = 0.9
+    nesterov: bool = False
+    sync: str | None = None  # None | 'ring' (same W) | 'complete'
+    name: str = "dsgdm"
+
+    def init(self, params):
+        return {"m": _zeros_like(params)}
+
+    def step(self, params, grads, state, *, w, lr=None, t=0):
+        eta = self._lr(lr)
+        grads = _apply_wd(params, grads, self.weight_decay)
+        m = _axpy(self.beta, state["m"], grads)  # beta*m + g
+        upd = _axpy(self.beta, m, grads) if self.nesterov else m
+        half = _axpy(-eta, upd, params)
+        new_params = self.mix_fn(w, half)
+        if self.sync == "ring":
+            m = self.mix_fn(w, m)
+        elif self.sync == "complete":
+            n = jax.tree.leaves(params)[0].shape[0]
+            m = self.mix_fn(jnp.full((n, n), 1.0 / n, dtype=jnp.float32), m)
+        return new_params, {"m": m}
+
+
+# ---------------------------------------------------------------------------
+# Quasi-Global momentum (the paper's contribution)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class QGDSGDm(DecentralizedOptimizer):
+    """Algorithm 1 (right column) and its Nesterov flavour.
+
+    tau > 1 gives the multi-step variant (Alg. 3): the QG buffer is only
+    refreshed on steps where (t+1) % tau == 0, otherwise carried over.
+    """
+
+    beta: float = 0.9
+    mu: float | None = None  # paper sets mu = beta
+    nesterov: bool = False
+    tau: int = 1
+    name: str = "qg_dsgdm"
+
+    @property
+    def _mu(self):
+        return self.beta if self.mu is None else self.mu
+
+    def init(self, params):
+        return {"m_hat": _zeros_like(params)}
+
+    def step(self, params, grads, state, *, w, lr=None, t=0):
+        eta = self._lr(lr)
+        grads = _apply_wd(params, grads, self.weight_decay)
+        m_hat = state["m_hat"]
+        # local buffer seeded from the QG buffer (Alg. 1 line 5)
+        m_local = _axpy(self.beta, m_hat, grads)  # beta*m_hat + g
+        upd = _axpy(self.beta, m_local, grads) if self.nesterov else m_local
+        half = _axpy(-eta, upd, params)
+        new_params = self.mix_fn(w, half)
+        # d = (x_t - x_{t+1}) / eta  (Alg. 1 line 8)
+        d = _scale(1.0 / eta, _sub(params, new_params))
+        new_m_hat = _lerp(self._mu, m_hat, d)
+        if self.tau > 1:
+            refresh = (jnp.asarray(t) + 1) % self.tau == 0
+            new_m_hat = _tmap(
+                lambda new, old: jnp.where(refresh, new, old), new_m_hat, m_hat
+            )
+        return new_params, {"m_hat": new_m_hat}
+
+
+@dataclasses.dataclass(frozen=True)
+class QHM(DecentralizedOptimizer):
+    """Quasi-Hyperbolic Momentum — the exact single-worker reduction of
+    QG-DSGDm (App. B.3.1): with beta_hat = mu + (1-mu)*beta,
+
+        m <- beta_hat m + g
+        x <- x - eta ((1 - mu/beta_hat) m + (mu/beta_hat) g)
+
+    Used as the paper-faithful optimizer when n_nodes == 1 (e.g. the two
+    architectures whose per-node copies exceed HBM; DESIGN.md §4)."""
+
+    beta: float = 0.9
+    mu: float | None = None
+    name: str = "qhm"
+
+    @property
+    def _mu(self):
+        return self.beta if self.mu is None else self.mu
+
+    def init(self, params):
+        return {"m": _zeros_like(params)}
+
+    def step(self, params, grads, state, *, w=None, lr=None, t=0):
+        eta = self._lr(lr)
+        grads = _apply_wd(params, grads, self.weight_decay)
+        mu = self._mu
+        beta_hat = mu + (1.0 - mu) * self.beta
+        m = _axpy(beta_hat, state["m"], grads)
+        c1 = 1.0 - mu / beta_hat
+        c2 = mu / beta_hat
+        upd = _tmap(lambda mm, gg: c1 * mm + c2 * gg, m, grads)
+        return _axpy(-eta, upd, params), {"m": m}
+
+
+# ---------------------------------------------------------------------------
+# Adam variants (Table 6 / Algorithm 2)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class DAdam(DecentralizedOptimizer):
+    beta1: float = 0.9
+    beta2: float = 0.99
+    eps: float = 1e-8
+    name: str = "dadam"
+
+    def init(self, params):
+        return {"m": _zeros_like(params), "v": _zeros_like(params)}
+
+    def step(self, params, grads, state, *, w, lr=None, t=0):
+        eta = self._lr(lr)
+        grads = _apply_wd(params, grads, self.weight_decay)
+        m = _lerp(self.beta1, state["m"], grads)
+        v = _tmap(lambda vv, gg: self.beta2 * vv + (1 - self.beta2) * gg * gg,
+                  state["v"], grads)
+        upd = _tmap(lambda mm, vv: mm / (jnp.sqrt(vv) + self.eps), m, v)
+        half = _axpy(-eta, upd, params)
+        return self.mix_fn(w, half), {"m": m, "v": v}
+
+
+@dataclasses.dataclass(frozen=True)
+class QGDAdam(DecentralizedOptimizer):
+    """Algorithm 2: Adam whose first/second-moment buffers are refreshed from
+    the L2-normalized model difference d_hat after each gossip round."""
+
+    beta1: float = 0.9
+    beta2: float = 0.99
+    eps: float = 1e-8
+    name: str = "qg_dadam"
+
+    def init(self, params):
+        return {"m_hat": _zeros_like(params), "v_hat": _zeros_like(params)}
+
+    def step(self, params, grads, state, *, w, lr=None, t=0):
+        eta = self._lr(lr)
+        grads = _apply_wd(params, grads, self.weight_decay)
+        m = _lerp(self.beta1, state["m_hat"], grads)
+        v = _tmap(lambda vv, gg: self.beta2 * vv + (1 - self.beta2) * gg * gg,
+                  state["v_hat"], grads)
+        upd = _tmap(lambda mm, vv: mm / (jnp.sqrt(vv) + self.eps), m, v)
+        half = _axpy(-eta, upd, params)
+        new_params = self.mix_fn(w, half)
+        d = _sub(params, new_params)  # Alg. 2 line 8 (no 1/eta)
+        # line 9: per-node global L2 normalization of d
+        flat = jax.tree.leaves(d)
+        n_nodes = flat[0].shape[0]
+        sq = sum(jnp.sum(l.reshape(n_nodes, -1).astype(jnp.float32) ** 2, axis=-1)
+                 for l in flat)
+        inv_norm = 1.0 / (jnp.sqrt(sq) + 1e-12)  # [n]
+
+        def _nrm(leaf):
+            bshape = (n_nodes,) + (1,) * (leaf.ndim - 1)
+            return leaf * inv_norm.reshape(bshape).astype(leaf.dtype)
+
+        d_hat = _tmap(_nrm, d)
+        m_hat = _lerp(self.beta1, state["m_hat"], d_hat)
+        v_hat = _tmap(lambda vv, dd: self.beta2 * vv + (1 - self.beta2) * dd * dd,
+                      state["v_hat"], d_hat)
+        return new_params, {"m_hat": m_hat, "v_hat": v_hat}
+
+
+# ---------------------------------------------------------------------------
+# SlowMo (Wang et al., 2020c) — Table 5 baseline
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class SlowMo(DecentralizedOptimizer):
+    """Base optimizer = DSGDm(-N); every tau steps, globally average the
+    model (extra All-Reduce — the communication overhead the paper calls out),
+    then apply the slow momentum update on the outer iterates."""
+
+    beta: float = 0.9        # base momentum
+    slow_beta: float = 0.7
+    slow_alpha: float = 1.0
+    tau: int = 12
+    nesterov: bool = True
+    name: str = "slowmo"
+
+    def init(self, params):
+        return {
+            "m": _zeros_like(params),                 # base local momentum
+            "slow_m": _zeros_like(params),            # slow (outer) momentum
+            "anchor": _tmap(jnp.array, params),       # x_{i,0}^{(t)}
+        }
+
+    def step(self, params, grads, state, *, w, lr=None, t=0):
+        eta = self._lr(lr)
+        grads = _apply_wd(params, grads, self.weight_decay)
+        m = _axpy(self.beta, state["m"], grads)
+        upd = _axpy(self.beta, m, grads) if self.nesterov else m
+        half = _axpy(-eta, upd, params)
+        new_params = self.mix_fn(w, half)
+
+        do_outer = (jnp.asarray(t) + 1) % self.tau == 0
+        n = jax.tree.leaves(params)[0].shape[0]
+        avg = gossip.node_mean(new_params)
+        avg = _tmap(lambda a: jnp.broadcast_to(a, (n,) + a.shape[1:]), avg)
+        # slow momentum on the averaged iterate
+        slow_m_new = _tmap(
+            lambda sm, x0, xt: self.slow_beta * sm + (x0 - xt) / eta,
+            state["slow_m"], state["anchor"], avg,
+        )
+        outer = _tmap(
+            lambda x0, sm: x0 - self.slow_alpha * eta * sm,
+            state["anchor"], slow_m_new,
+        )
+        sel = lambda a, b: _tmap(lambda x, y: jnp.where(do_outer, x, y), a, b)
+        out_params = sel(outer, new_params)
+        return out_params, {
+            "m": sel(_zeros_like(m), m),  # reset base buffer at outer step
+            "slow_m": sel(slow_m_new, state["slow_m"]),
+            "anchor": sel(outer, state["anchor"]),
+        }
+
+
+# ---------------------------------------------------------------------------
+# DMSGD (Balu et al., 2020) — parallel work, Table 5 / App. B.2
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class DMSGD(DecentralizedOptimizer):
+    """Re-organized formulation (Alg. 7/8).  Option II buffer:
+        m_hat <- mu (beta m_hat + g) + (1-mu) (x_t - x_{t+1})/eta
+    Option I additionally replays the previous step's quantities."""
+
+    beta: float = 0.9
+    mu: float = 0.5
+    option: int = 2
+    name: str = "dmsgd"
+
+    def init(self, params):
+        z = _zeros_like(params)
+        if self.option == 1:
+            return {"m_hat": z, "prev_m_hat": z, "prev_g": z,
+                    "prev_x": _tmap(jnp.array, params)}
+        return {"m_hat": z}
+
+    def step(self, params, grads, state, *, w, lr=None, t=0):
+        eta = self._lr(lr)
+        grads = _apply_wd(params, grads, self.weight_decay)
+        m_hat = state["m_hat"]
+        local = _axpy(self.beta, m_hat, grads)  # beta m_hat + g
+        half = _axpy(-eta, local, params)
+        new_params = self.mix_fn(w, half)
+        d = _scale(1.0 / eta, _sub(params, new_params))
+        if self.option == 2:
+            new_m_hat = _lerp(self.mu, local, d)
+            return new_params, {"m_hat": new_m_hat}
+        # Option I (App. B.2 final expansion)
+        inner = _tmap(
+            lambda loc, xp, x, pm, pg: loc + (xp - x) / eta - self.beta * pm - pg,
+            local, state["prev_x"], params, state["prev_m_hat"], state["prev_g"],
+        )
+        new_m_hat = _lerp(self.mu, inner, d)
+        return new_params, {
+            "m_hat": new_m_hat,
+            "prev_m_hat": m_hat,
+            "prev_g": grads,
+            "prev_x": params,
+        }
+
+
+# ---------------------------------------------------------------------------
+# D^2 and gradient tracking (Table 2 / App. D.9)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class D2(DecentralizedOptimizer):
+    """D^2 (Tang et al. 2018b):  x^{t+1} = W(2x^t - x^{t-1} - eta(g^t - g^{t-1})),
+    first step plain DSGD.  ``plus=True`` is the paper's D^2_+ fix that
+    rescales the model-difference term by the previous learning rate
+    (footnote 9), making stage-wise lr schedules survivable."""
+
+    plus: bool = False
+    name: str = "d2"
+
+    def init(self, params):
+        return {
+            "prev_x": _tmap(jnp.array, params),
+            "prev_g": _zeros_like(params),
+            "prev_lr": jnp.asarray(0.0, jnp.float32),
+            "t": jnp.asarray(0, jnp.int32),
+        }
+
+    def step(self, params, grads, state, *, w, lr=None, t=0):
+        eta = self._lr(lr)
+        grads = _apply_wd(params, grads, self.weight_decay)
+        first = state["t"] == 0
+        prev_lr = jnp.where(first, eta, state["prev_lr"])
+        scale = (eta / prev_lr) if self.plus else 1.0
+        # correction = (x^{t-1} - x^t) * scale / eta + (g^t - g^{t-1})
+        corr = _tmap(
+            lambda xp, x, g, gp: jnp.where(
+                first, g, scale * (xp - x) / eta + g - gp
+            ),
+            state["prev_x"], params, grads, state["prev_g"],
+        )
+        half = _axpy(-eta, corr, params)
+        new_params = self.mix_fn(w, half)
+        return new_params, {
+            "prev_x": params,
+            "prev_g": grads,
+            "prev_lr": jnp.asarray(eta, jnp.float32),
+            "t": state["t"] + 1,
+        }
+
+
+@dataclasses.dataclass(frozen=True)
+class GradientTracking(DecentralizedOptimizer):
+    """DSGD with gradient tracking:
+        y^{t}   tracks the global average gradient  (extra gossip round!)
+        x^{t+1} = W(x^t - eta y^t)
+        y^{t+1} = W(y^t) + g^{t+1} - g^t
+    ``momentum``/``nesterov`` put a DSGDm-N-style buffer on top of y
+    (the Table 2 'DSGDm-N (w/ GT)' row)."""
+
+    momentum: float = 0.0
+    nesterov: bool = False
+    name: str = "gt"
+
+    def init(self, params):
+        return {
+            "y": _zeros_like(params),
+            "prev_g": _zeros_like(params),
+            "m": _zeros_like(params),
+            "t": jnp.asarray(0, jnp.int32),
+        }
+
+    def step(self, params, grads, state, *, w, lr=None, t=0):
+        eta = self._lr(lr)
+        grads = _apply_wd(params, grads, self.weight_decay)
+        first = state["t"] == 0
+        # y^t = W y^{t-1} + g^t - g^{t-1}; at t=0, y = g.
+        y_mixed = self.mix_fn(w, state["y"])
+        y = _tmap(
+            lambda ym, g, gp: jnp.where(first, g, ym + g - gp),
+            y_mixed, grads, state["prev_g"],
+        )
+        if self.momentum:
+            m = _axpy(self.momentum, state["m"], y)
+            upd = _axpy(self.momentum, m, y) if self.nesterov else m
+        else:
+            m = state["m"]
+            upd = y
+        half = _axpy(-eta, upd, params)
+        new_params = self.mix_fn(w, half)
+        return new_params, {"y": y, "prev_g": grads, "m": m,
+                            "t": state["t"] + 1}
+
+
+# ---------------------------------------------------------------------------
+# factory
+# ---------------------------------------------------------------------------
+
+OPTIMIZERS: dict[str, Callable[..., DecentralizedOptimizer]] = {
+    "dsgd": DSGD,
+    "dsgdm": lambda **kw: DSGDm(nesterov=False, name="dsgdm", **kw),
+    "dsgdm_n": lambda **kw: DSGDm(nesterov=True, name="dsgdm_n", **kw),
+    "dsgdm_sync": lambda **kw: DSGDm(nesterov=False, sync="ring", name="dsgdm_sync", **kw),
+    "dsgdm_n_sync": lambda **kw: DSGDm(nesterov=True, sync="ring", name="dsgdm_n_sync", **kw),
+    "dsgdm_n_sync_global": lambda **kw: DSGDm(
+        nesterov=True, sync="complete", name="dsgdm_n_sync_global", **kw),
+    "qg_dsgdm": lambda **kw: QGDSGDm(nesterov=False, name="qg_dsgdm", **kw),
+    "qg_dsgdm_n": lambda **kw: QGDSGDm(nesterov=True, name="qg_dsgdm_n", **kw),
+    "qhm": QHM,
+    "dadam": DAdam,
+    "qg_dadam": QGDAdam,
+    "slowmo": SlowMo,
+    "dmsgd": DMSGD,
+    "d2": lambda **kw: D2(plus=False, name="d2", **kw),
+    "d2_plus": lambda **kw: D2(plus=True, name="d2_plus", **kw),
+    "gt": GradientTracking,
+    "gt_dsgdm_n": lambda **kw: GradientTracking(
+        momentum=0.9, nesterov=True, name="gt_dsgdm_n", **kw),
+}
+
+
+def make_optimizer(name: str, **kwargs) -> DecentralizedOptimizer:
+    if name not in OPTIMIZERS:
+        raise ValueError(f"unknown optimizer {name!r}; have {sorted(OPTIMIZERS)}")
+    return OPTIMIZERS[name](**kwargs)

@@ -1,0 +1,242 @@
+"""Communication topologies and doubly-stochastic mixing matrices.
+
+The paper evaluates Ring (n=16), the Davis "Southern Women" social network
+(n=32), the 1-peer directed exponential graph (Assran et al., 2019), and the
+complete graph (centralized limit).  We implement all of them plus torus and
+star, each returning a doubly-stochastic mixing matrix ``W`` (Assumption 1.3)
+built with Metropolis-Hastings weights for undirected graphs.
+
+Everything here is plain numpy: topologies are built once at setup time and
+baked into the compiled step as constants (or realized as ppermute schedules).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import numpy as np
+
+__all__ = [
+    "Topology",
+    "ring",
+    "torus",
+    "star",
+    "complete",
+    "social_network",
+    "one_peer_exponential",
+    "metropolis_weights",
+    "spectral_gap",
+    "is_doubly_stochastic",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class Topology:
+    """A (possibly time-varying) gossip topology.
+
+    Attributes:
+      name: human-readable identifier.
+      n: number of nodes.
+      mixing: ``[T, n, n]`` stack of doubly-stochastic matrices; time-invariant
+        topologies have ``T == 1``.  Step ``t`` uses ``mixing[t % T]``.
+      neighbors: adjacency lists of the union graph (for ppermute schedules).
+    """
+
+    name: str
+    n: int
+    mixing: np.ndarray  # [T, n, n] float64
+    neighbors: tuple[tuple[int, ...], ...]
+
+    @property
+    def time_varying(self) -> bool:
+        return self.mixing.shape[0] > 1
+
+    def w(self, t: int = 0) -> np.ndarray:
+        return self.mixing[t % self.mixing.shape[0]]
+
+    @property
+    def max_degree(self) -> int:
+        return max(len(nb) for nb in self.neighbors)
+
+    def validate(self, atol: float = 1e-10) -> None:
+        for k in range(self.mixing.shape[0]):
+            if not is_doubly_stochastic(self.mixing[k], atol=atol):
+                raise ValueError(f"{self.name}: mixing[{k}] not doubly stochastic")
+
+
+def is_doubly_stochastic(w: np.ndarray, atol: float = 1e-8) -> bool:
+    n = w.shape[0]
+    ones = np.ones(n)
+    return (
+        w.shape == (n, n)
+        and bool(np.all(w >= -atol))
+        and bool(np.allclose(w @ ones, ones, atol=atol))
+        and bool(np.allclose(w.T @ ones, ones, atol=atol))
+    )
+
+
+def spectral_gap(w: np.ndarray) -> float:
+    """rho = 1 - |lambda_2|^2 for symmetric W; matches Assumption 1.4 in
+    expectation for the time-invariant case."""
+    eig = np.linalg.eigvals(w)
+    eig = np.sort(np.abs(eig))[::-1]
+    lam2 = eig[1] if len(eig) > 1 else 0.0
+    return float(1.0 - lam2**2)
+
+
+def metropolis_weights(adj: np.ndarray) -> np.ndarray:
+    """Metropolis-Hastings doubly-stochastic weights from a 0/1 adjacency."""
+    n = adj.shape[0]
+    deg = adj.sum(axis=1)
+    w = np.zeros((n, n), dtype=np.float64)
+    for i in range(n):
+        for j in range(n):
+            if i != j and adj[i, j]:
+                w[i, j] = 1.0 / (1.0 + max(deg[i], deg[j]))
+        w[i, i] = 1.0 - w[i].sum()
+    return w
+
+
+def _neighbors_from_adj(adj: np.ndarray) -> tuple[tuple[int, ...], ...]:
+    return tuple(tuple(int(j) for j in np.nonzero(row)[0]) for row in adj)
+
+
+def ring(n: int, *, self_weight: float | None = None, name: str = "ring") -> Topology:
+    """Undirected ring; default uniform 1/3 weights (paper's choice for n>2)."""
+    if n == 1:
+        w = np.ones((1, 1, 1))
+        return Topology(name, 1, w, ((),))
+    adj = np.zeros((n, n), dtype=np.int64)
+    for i in range(n):
+        adj[i, (i - 1) % n] = 1
+        adj[i, (i + 1) % n] = 1
+    if n == 2:
+        w = np.array([[[0.5, 0.5], [0.5, 0.5]]])
+        return Topology(name, 2, w, _neighbors_from_adj(adj))
+    if self_weight is None:
+        self_weight = 1.0 / 3.0
+    side = (1.0 - self_weight) / 2.0
+    w = np.zeros((n, n))
+    for i in range(n):
+        w[i, i] = self_weight
+        w[i, (i - 1) % n] = side
+        w[i, (i + 1) % n] = side
+    return Topology(name, n, w[None], _neighbors_from_adj(adj))
+
+
+def torus(rows: int, cols: int) -> Topology:
+    """2D torus with Metropolis weights (App. D.1)."""
+    n = rows * cols
+    adj = np.zeros((n, n), dtype=np.int64)
+    for r in range(rows):
+        for c in range(cols):
+            i = r * cols + c
+            for dr, dc in ((1, 0), (-1, 0), (0, 1), (0, -1)):
+                j = ((r + dr) % rows) * cols + (c + dc) % cols
+                if j != i:
+                    adj[i, j] = 1
+    w = metropolis_weights(adj)
+    return Topology(f"torus{rows}x{cols}", n, w[None], _neighbors_from_adj(adj))
+
+
+def star(n: int) -> Topology:
+    adj = np.zeros((n, n), dtype=np.int64)
+    adj[0, 1:] = 1
+    adj[1:, 0] = 1
+    w = metropolis_weights(adj)
+    return Topology(f"star{n}", n, w[None], _neighbors_from_adj(adj))
+
+
+def complete(n: int) -> Topology:
+    w = np.full((n, n), 1.0 / n)
+    adj = 1 - np.eye(n, dtype=np.int64)
+    return Topology(f"complete{n}", n, w[None], _neighbors_from_adj(adj))
+
+
+# Davis Southern Women graph (networkx.generators.social), women-projection
+# one-mode graph has 32 nodes = 18 women + 14 events as used by the paper via
+# the bipartite graph itself (18 + 14 = 32 nodes).  We hard-code the bipartite
+# attendance matrix (Davis, Gardner & Gardner 1941, Table 1) so no networkx
+# dependency is needed offline.
+_DAVIS_ATTENDANCE = np.array(
+    # events:1  2  3  4  5  6  7  8  9 10 11 12 13 14
+    [
+        [1, 1, 1, 1, 1, 1, 0, 1, 1, 0, 0, 0, 0, 0],  # Evelyn
+        [1, 1, 1, 0, 1, 1, 1, 1, 0, 0, 0, 0, 0, 0],  # Laura
+        [0, 1, 1, 1, 1, 1, 1, 1, 1, 0, 0, 0, 0, 0],  # Theresa
+        [1, 0, 1, 1, 1, 1, 1, 1, 0, 0, 0, 0, 0, 0],  # Brenda
+        [0, 0, 1, 1, 1, 0, 1, 0, 0, 0, 0, 0, 0, 0],  # Charlotte
+        [0, 0, 1, 0, 1, 1, 0, 1, 0, 0, 0, 0, 0, 0],  # Frances
+        [0, 0, 0, 0, 1, 1, 1, 1, 0, 0, 0, 0, 0, 0],  # Eleanor
+        [0, 0, 0, 0, 0, 1, 0, 1, 1, 0, 0, 0, 0, 0],  # Pearl
+        [0, 0, 0, 0, 1, 0, 1, 1, 1, 0, 0, 0, 0, 0],  # Ruth
+        [0, 0, 0, 0, 0, 0, 1, 1, 1, 0, 0, 1, 0, 0],  # Verne
+        [0, 0, 0, 0, 0, 0, 0, 1, 1, 1, 0, 1, 0, 0],  # Myra
+        [0, 0, 0, 0, 0, 0, 0, 1, 1, 1, 0, 1, 1, 1],  # Katherine
+        [0, 0, 0, 0, 0, 0, 1, 1, 1, 1, 0, 1, 1, 1],  # Sylvia
+        [0, 0, 0, 0, 0, 1, 1, 0, 1, 1, 1, 1, 1, 1],  # Nora
+        [0, 0, 0, 0, 0, 0, 1, 1, 0, 1, 1, 1, 0, 0],  # Helen
+        [0, 0, 0, 0, 0, 0, 0, 1, 1, 0, 0, 0, 0, 0],  # Dorothy
+        [0, 0, 0, 0, 0, 0, 0, 0, 1, 0, 1, 0, 0, 0],  # Olivia
+        [0, 0, 0, 0, 0, 0, 0, 0, 1, 0, 1, 0, 0, 0],  # Flora
+    ],
+    dtype=np.int64,
+)
+
+
+def social_network() -> Topology:
+    """Davis Southern Women bipartite social graph: 18 women + 14 events = 32
+    nodes (the paper's Social Network, n=32).  Metropolis weights."""
+    a = _DAVIS_ATTENDANCE
+    n_w, n_e = a.shape
+    n = n_w + n_e
+    adj = np.zeros((n, n), dtype=np.int64)
+    adj[:n_w, n_w:] = a
+    adj[n_w:, :n_w] = a.T
+    w = metropolis_weights(adj)
+    return Topology("social32", n, w[None], _neighbors_from_adj(adj))
+
+
+def one_peer_exponential(n: int) -> Topology:
+    """1-peer directed exponential graph (Assran et al. 2019): time-varying,
+    at phase k each node i sends to (i + 2^k) mod n and averages with weight
+    1/2.  Each phase matrix is doubly stochastic (a permutation average)."""
+    if n & (n - 1):
+        raise ValueError("one_peer_exponential requires power-of-two n")
+    phases = int(np.log2(n))
+    mats = []
+    adj = np.zeros((n, n), dtype=np.int64)
+    for k in range(phases):
+        off = 2**k
+        w = np.zeros((n, n))
+        for i in range(n):
+            w[i, i] = 0.5
+            w[(i + off) % n, i] = 0.5  # column i: node i's mass goes to i and i+off
+            adj[i, (i + off) % n] = 1
+        mats.append(w)
+    return Topology(
+        f"exp{n}", n, np.stack(mats), _neighbors_from_adj(adj)
+    )
+
+
+def get_topology(name: str, n: int) -> Topology:
+    """Registry-style accessor used by configs/CLI."""
+    if name == "ring":
+        return ring(n)
+    if name == "complete":
+        return complete(n)
+    if name == "star":
+        return star(n)
+    if name == "social":
+        topo = social_network()
+        if n not in (0, topo.n):
+            raise ValueError(f"social topology has fixed n=32, got {n}")
+        return topo
+    if name == "exp":
+        return one_peer_exponential(n)
+    if name == "torus":
+        r = int(np.sqrt(n))
+        while n % r:
+            r -= 1
+        return torus(r, n // r)
+    raise ValueError(f"unknown topology {name!r}")

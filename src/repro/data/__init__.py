@@ -1,0 +1,3 @@
+from . import partition, synthetic
+from .partition import dirichlet_partition, heterogeneity_stats
+from .synthetic import ClientDataset, make_classification, make_lm_domains

@@ -1,0 +1,61 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+``interpret`` defaults to True unless a TPU backend is present — on this CPU
+container the kernels execute their Python bodies via the Pallas interpreter
+(the sanctioned validation mode); on TPU they compile to Mosaic.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import flash_attention as _fa
+from . import qg_update as _qg
+from . import ssd_scan as _ssd
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def qg_local_step(x, m_hat, g, *, eta, beta, nesterov=False, interpret=None):
+    return _qg.qg_local_step(
+        x, m_hat, g, eta=eta, beta=beta, nesterov=nesterov,
+        interpret=_default_interpret() if interpret is None else interpret)
+
+
+def qg_buffer_update(x_old, x_new, m_hat, *, eta, mu, interpret=None):
+    return _qg.qg_buffer_update(
+        x_old, x_new, m_hat, eta=eta, mu=mu,
+        interpret=_default_interpret() if interpret is None else interpret)
+
+
+def flash_attention(q, k, v, *, causal=True, window=0, softcap=0.0,
+                    block_q=128, block_k=128, interpret=None):
+    return _fa.flash_attention(
+        q, k, v, causal=causal, window=window, softcap=softcap,
+        block_q=block_q, block_k=block_k,
+        interpret=_default_interpret() if interpret is None else interpret)
+
+
+def ssd_scan(x, dt, a, b, c, d_skip, *, chunk=128, interpret=None):
+    """Model-layout entry: x [B,S,H,P], dt [B,S,H], a [H], b/c [B,S,N].
+
+    Rearranges to the kernel's [B*H, ...] layout, runs the Pallas scan, adds
+    the D-skip term, and returns (y [B,S,H,P], final_state [B,H,N,P])."""
+    interpret = _default_interpret() if interpret is None else interpret
+    bsz, s, h, p = x.shape
+    n = b.shape[-1]
+    xf = jnp.moveaxis(x, 2, 1).reshape(bsz * h, s, p)
+    dtf = jnp.moveaxis(dt, 2, 1).reshape(bsz * h, s).astype(jnp.float32)
+    adt = dtf * jnp.tile(a.astype(jnp.float32), bsz)[:, None]
+    bf = jnp.broadcast_to(b[:, None], (bsz, h, s, n)).reshape(bsz * h, s, n)
+    cf = jnp.broadcast_to(c[:, None], (bsz, h, s, n)).reshape(bsz * h, s, n)
+    y, fin = _ssd.ssd_scan_bh(xf, dtf, adt, bf, cf, chunk=chunk,
+                              interpret=interpret)
+    y = jnp.moveaxis(y.reshape(bsz, h, s, p), 1, 2)
+    y = y + x.astype(y.dtype) * d_skip[None, None, :, None].astype(y.dtype)
+    fin = fin.reshape(bsz, h, n, p)
+    return y, fin

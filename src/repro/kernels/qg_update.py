@@ -1,0 +1,76 @@
+"""Fused quasi-global momentum update — Pallas TPU kernel.
+
+At 27-480B parameters the optimizer pass is an HBM-bandwidth-bound streaming
+pass over every parameter.  Unfused, Alg. 1 lines 5-9 read/write each array
+several times; these two kernels fuse the arithmetic so each tensor is
+streamed through VMEM exactly once per phase:
+
+  * ``qg_local_step``    x_half = x - eta * (beta*m_hat + g)   (+ Nesterov)
+  * ``qg_buffer_update`` m_hat' = mu*m_hat + (1-mu)*(x_old - x_new)/eta
+
+1D grid over VMEM tiles of the flattened parameter; tile = 128Ki elements
+(0.5 MiB fp32 per operand -> <=2.5 MiB VMEM live, well under the ~16 MiB
+budget, and a multiple of the 8x128 VREG lane layout).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE = 128 * 1024
+
+
+def _local_step_kernel(x_ref, m_ref, g_ref, o_ref, *, eta, beta, nesterov):
+    x = x_ref[...]
+    m = m_ref[...]
+    g = g_ref[...]
+    m_local = beta * m + g
+    upd = g + beta * m_local if nesterov else m_local
+    o_ref[...] = x - eta * upd
+
+
+def _buffer_update_kernel(xo_ref, xn_ref, m_ref, o_ref, *, inv_eta, mu):
+    xo = xo_ref[...]
+    xn = xn_ref[...]
+    m = m_ref[...]
+    o_ref[...] = mu * m + (1.0 - mu) * (xo - xn) * inv_eta
+
+
+def _flat_call(kernel, args, *, interpret: bool):
+    """Launch an elementwise kernel over 1D tiles of flattened input."""
+    flat = [a.reshape(-1) for a in args]
+    n = flat[0].size
+    tile = min(TILE, max(512, n))
+    pad = (-n) % tile
+    if pad:
+        flat = [jnp.pad(f, (0, pad)) for f in flat]
+    grid = (flat[0].size // tile,)
+    spec = pl.BlockSpec((tile,), lambda i: (i,))
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[spec] * len(flat),
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct(flat[0].shape, flat[0].dtype),
+        interpret=interpret,
+    )(*flat)
+    return out[:n].reshape(args[0].shape)
+
+
+@functools.partial(jax.jit, static_argnames=("eta", "beta", "nesterov",
+                                             "interpret"))
+def qg_local_step(x, m_hat, g, *, eta: float, beta: float,
+                  nesterov: bool = False, interpret: bool = True):
+    kernel = functools.partial(_local_step_kernel, eta=eta, beta=beta,
+                               nesterov=nesterov)
+    return _flat_call(kernel, (x, m_hat, g), interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("eta", "mu", "interpret"))
+def qg_buffer_update(x_old, x_new, m_hat, *, eta: float, mu: float,
+                     interpret: bool = True):
+    kernel = functools.partial(_buffer_update_kernel, inv_eta=1.0 / eta, mu=mu)
+    return _flat_call(kernel, (x_old, x_new, m_hat), interpret=interpret)

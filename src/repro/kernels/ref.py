@@ -1,0 +1,86 @@
+"""Pure-jnp oracles for every Pallas kernel (the `ref.py` contract).
+
+These are the semantics the kernels must match bit-for-bit (up to fp
+accumulation order); tests sweep shapes/dtypes and assert allclose.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# qg_update — fused quasi-global momentum arithmetic (elementwise)
+# ---------------------------------------------------------------------------
+
+def qg_local_step_ref(x, m_hat, g, *, eta: float, beta: float,
+                      nesterov: bool) -> jax.Array:
+    """Alg. 1 lines 5-6 (+ PyTorch-style Nesterov): the half step
+    x - eta * upd  with  upd = beta*m_hat + g  (HeavyBall)
+                   or    upd = g + beta*(beta*m_hat + g)  (Nesterov)."""
+    m_local = beta * m_hat + g
+    upd = g + beta * m_local if nesterov else m_local
+    return x - eta * upd
+
+
+def qg_buffer_update_ref(x_old, x_new, m_hat, *, eta: float,
+                         mu: float) -> jax.Array:
+    """Alg. 1 lines 8-9:  m_hat <- mu*m_hat + (1-mu)*(x_old - x_new)/eta."""
+    return mu * m_hat + (1.0 - mu) * (x_old - x_new) / eta
+
+
+# ---------------------------------------------------------------------------
+# flash_attention — causal GQA attention (optional window / softcap)
+# ---------------------------------------------------------------------------
+
+def flash_attention_ref(q, k, v, *, causal: bool = True, window: int = 0,
+                        softcap: float = 0.0) -> jax.Array:
+    """Quadratic masked softmax attention.  q [B,S,H,D]; k/v [B,T,K,D]."""
+    b, s, h, d = q.shape
+    t, kh = k.shape[1], k.shape[2]
+    g = h // kh
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, jnp.float32))
+    qf = q.reshape(b, s, kh, g, d).astype(jnp.float32) * scale
+    sc = jnp.einsum("bskgd,btkd->bskgt", qf, k.astype(jnp.float32))
+    if softcap:
+        sc = softcap * jnp.tanh(sc / softcap)
+    q_pos = jnp.arange(s)[:, None]
+    k_pos = jnp.arange(t)[None, :]
+    mask = jnp.ones((s, t), bool)
+    if causal:
+        mask &= q_pos >= k_pos
+    if window:
+        mask &= q_pos - k_pos < window
+    sc = jnp.where(mask[None, :, None, None, :], sc, -2.0e38)
+    p = jax.nn.softmax(sc, axis=-1)
+    out = jnp.einsum("bskgt,btkd->bskgd", p, v.astype(jnp.float32))
+    return out.reshape(b, s, h, d).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# ssd_scan — Mamba-2 SSD recurrence
+# ---------------------------------------------------------------------------
+
+def ssd_scan_ref(x, dt, a, b, c, *, initial_state=None):
+    """Sequential oracle.  x [B,S,H,P]; dt [B,S,H]; a [H] (negative);
+    b/c [B,S,N].  Returns (y [B,S,H,P], final_state [B,H,N,P]).
+    NOTE: no D-skip here — the model applies it outside the kernel."""
+    bsz, s, h, p = x.shape
+    n = b.shape[-1]
+
+    def step(hstate, inp):
+        xt, dtt, bt, ct = inp
+        decay = jnp.exp(a * dtt)[..., None, None]
+        inject = dtt[..., None, None] * bt[:, None, :, None] * xt[:, :, None, :]
+        hstate = decay * hstate + inject
+        yt = jnp.einsum("bhnp,bn->bhp", hstate, ct)
+        return hstate, yt
+
+    h0 = (jnp.zeros((bsz, h, n, p), jnp.float32) if initial_state is None
+          else initial_state.astype(jnp.float32))
+    xs = (jnp.moveaxis(x.astype(jnp.float32), 1, 0),
+          jnp.moveaxis(dt.astype(jnp.float32), 1, 0),
+          jnp.moveaxis(b.astype(jnp.float32), 1, 0),
+          jnp.moveaxis(c.astype(jnp.float32), 1, 0))
+    hfin, ys = jax.lax.scan(step, h0, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype), hfin

@@ -1,0 +1,41 @@
+"""Production mesh construction (FUNCTION, never touches jax device state at
+import time).
+
+Target hardware: TPU v5e, 256 chips/pod (16x16), 2 pods = 512 chips.
+On this CPU container the dry-run forces 512 host platform devices before any
+jax import (see launch/dryrun.py lines 1-2)."""
+from __future__ import annotations
+
+import math
+
+import numpy as np
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    import jax
+
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = math.prod(shape)
+    devices = jax.devices()
+    if len(devices) == n:
+        return jax.make_mesh(shape, axes)
+    if len(devices) < n:
+        raise RuntimeError(
+            f"need {n} devices for mesh {shape}, have {len(devices)} — "
+            "the dry-run entry point must set "
+            "XLA_FLAGS=--xla_force_host_platform_device_count=512 before "
+            "any jax import")
+    # more devices than needed (e.g. single-pod mesh on the 512-device
+    # dry-run host): take a contiguous prefix
+    sub = np.array(devices[:n]).reshape(shape)
+    return jax.sharding.Mesh(sub, axes)
+
+
+def make_debug_mesh(shape=(2, 2), axes=("data", "model")):
+    """Small mesh for tests (run in a subprocess with forced host devices)."""
+    import jax
+
+    n = math.prod(shape)
+    sub = np.array(jax.devices()[:n]).reshape(shape)
+    return jax.sharding.Mesh(sub, axes)

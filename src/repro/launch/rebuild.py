@@ -1,0 +1,50 @@
+"""Recompute roofline summaries in dry-run artifacts from their stored raw
+probe costs (used after changes to launch/roofline.py math).
+
+    PYTHONPATH=src python -m repro.launch.rebuild [--dir experiments/dryrun]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+from repro.configs import ARCHS, INPUT_SHAPES, get_config
+from repro.launch import roofline
+
+
+def rebuild(path: str) -> bool:
+    rec = json.load(open(path))
+    if "probe1" not in rec or "probe2" not in rec:
+        return False
+    cfg = get_config(rec["arch"])
+    shape = INPUT_SHAPES[rec["shape"]]
+    p1 = roofline.ProbeCost(**rec["probe1"])
+    p2 = roofline.ProbeCost(**rec["probe2"])
+    summary = roofline.summarize(
+        cfg, shape, n_chips=rec["n_chips"], probe1=p1, probe2=p2,
+        n_periods=cfg.n_periods, memory_analysis=rec.get("memory_analysis"),
+        extra={"probe1": rec["probe1"], "probe2": rec["probe2"]})
+    rec.update({k: v for k, v in summary.items()
+                if k not in ("arch", "shape", "memory_analysis")})
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1, default=str)
+    return True
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    args = ap.parse_args(argv)
+    n = 0
+    for p in sorted(glob.glob(os.path.join(args.dir, "*.json"))):
+        if rebuild(p):
+            n += 1
+    print(f"rebuilt {n} artifacts")
+
+
+if __name__ == "__main__":
+    main()
+
+

@@ -1,0 +1,92 @@
+"""Render the §Dry-run / §Roofline markdown tables from dryrun artifacts.
+
+    PYTHONPATH=src python -m repro.launch.report [--dir experiments/dryrun]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+
+def load(dir_: str) -> list[dict]:
+    recs = []
+    for p in sorted(glob.glob(os.path.join(dir_, "*.json"))):
+        r = json.load(open(p))
+        r["_file"] = os.path.basename(p)
+        recs.append(r)
+    return recs
+
+
+def fmt_s(x: float) -> str:
+    if x >= 1.0:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x*1e3:.1f}ms"
+    return f"{x*1e6:.0f}us"
+
+
+def roofline_table(recs: list[dict], mesh: str = "single",
+                   gossip: str | None = None) -> str:
+    rows = []
+    head = ("| arch | shape | nodes | compute | memory | collective | "
+            "bottleneck | useful FLOPs | per-chip temp mem |\n"
+            "|---|---|---|---|---|---|---|---|---|")
+    for r in recs:
+        if r.get("mesh") != mesh or "roofline" not in r:
+            continue
+        if r.get("variant", "baseline") != "baseline":
+            continue
+        if gossip is not None and (r.get("gossip") or "dense") != gossip:
+            continue
+        if gossip is None and (r.get("gossip") or "dense") != "dense":
+            continue
+        rt = r["roofline"]
+        mem = r.get("memory_analysis", "")
+        temp = ""
+        if "temp=" in mem:
+            temp = mem.split("temp=")[1].split(" ")[0]
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {r.get('n_nodes','-')} | "
+            f"{fmt_s(rt['compute_s'])} | {fmt_s(rt['memory_s'])} | "
+            f"{fmt_s(rt['collective_s'])} | **{rt['bottleneck']}** | "
+            f"{r.get('useful_flops_ratio', 0):.2f} | {temp} |")
+    return "\n".join([head] + rows)
+
+
+def dryrun_table(recs: list[dict]) -> str:
+    head = ("| arch | shape | mesh | chips | compiled | memory analysis "
+            "(per chip) |\n|---|---|---|---|---|---|")
+    rows = []
+    for r in recs:
+        if r.get("variant", "baseline") != "baseline" or \
+                (r.get("gossip") or "dense") != "dense":
+            continue
+        ok = "yes" if ("memory_analysis" in r and
+                       "failed" not in str(r["memory_analysis"])) else "?"
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r['n_chips']} | "
+            f"{ok} ({r.get('full_compile_s','-')}s) | "
+            f"{str(r.get('memory_analysis',''))[:70]} |")
+    return "\n".join([head] + rows)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--what", default="roofline",
+                    choices=["roofline", "dryrun", "both"])
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--gossip", default=None)
+    args = ap.parse_args(argv)
+    recs = load(args.dir)
+    if args.what in ("roofline", "both"):
+        print(roofline_table(recs, mesh=args.mesh, gossip=args.gossip))
+    if args.what in ("dryrun", "both"):
+        print()
+        print(dryrun_table(recs))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,203 @@
+"""Sharding rules: PartitionSpecs for params / batches / caches.
+
+Greedy divisibility rule: given an ordered list of mesh axes to place, assign
+each to the largest still-unassigned tensor dim (beyond ``skip_leading``)
+that is divisible by the axis size and at least twice its size.  Special
+case: MoE expert stacks put 'model' on the expert axis when divisible
+(expert parallelism -> all-to-all shows up in the dry-run as it should).
+
+Modes (DESIGN.md §2):
+  decentralized  params [n_nodes, (layers), ...]: node axis -> node mesh axis
+                 ('data' in-pod, 'pod' across pods), weights -> 'model'
+                 (+ 'data' FSDP when nodes ride on 'pod').
+  fsdp           no node axis (n_nodes=1, QHM limit): weights sharded over
+                 'model' and 'data' (+'pod' folded into 'data').
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+PyTree = Any
+
+_EXPERT_KEYS = ("w_gate", "w_up", "w_down")
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingPlan:
+    mesh: Any
+    node_axis: Optional[str]       # 'data' | 'pod' | None (fsdp)
+    fsdp_axes: tuple[str, ...]     # axes used for weight FSDP beyond 'model'
+
+    @property
+    def data_axes(self) -> tuple[str, ...]:
+        """Mesh axes carrying the (per-node) batch dimension."""
+        names = list(self.mesh.axis_names)
+        if self.node_axis:
+            names.remove(self.node_axis)
+        if "model" in names:
+            names.remove("model")
+        return tuple(names)
+
+
+def make_plan(mesh, *, n_nodes: int) -> ShardingPlan:
+    axes = mesh.axis_names
+    if n_nodes <= 1:
+        return ShardingPlan(mesh, None, tuple(a for a in axes if a != "model"))
+    if "pod" in axes and n_nodes == mesh.shape["pod"]:
+        return ShardingPlan(mesh, "pod", ("data",))
+    if n_nodes == mesh.shape["data"]:
+        fsdp = ("pod",) if "pod" in axes else ()
+        return ShardingPlan(mesh, "data", fsdp)
+    raise ValueError(f"n_nodes={n_nodes} does not match any mesh axis of "
+                     f"{dict(mesh.shape)}")
+
+
+def _greedy_spec(shape, axis_order, mesh_shape, skip_leading=0,
+                 pinned=None, tie_break_last=False) -> P:
+    """Assign mesh axes to dims greedily by size.
+
+    tie_break_last=True prefers the LAST dim on size ties — megatron-style
+    output-dim tensor parallelism for square weights (hillclimb H2: the
+    first-dim default puts 'model' on the *input* dim of square attention
+    projections, which makes XLA reshard activations with collective-permute
+    storms)."""
+    assign: dict[int, str] = dict(pinned or {})
+    used_dims = set(assign)
+    for ax in axis_order:
+        if ax in assign.values():
+            continue
+        size = mesh_shape[ax]
+        best = None
+        for i in range(skip_leading, len(shape)):
+            if i in used_dims:
+                continue
+            if shape[i] % size == 0 and shape[i] >= 2 * size:
+                better = best is None or shape[i] > shape[best] or (
+                    tie_break_last and shape[i] == shape[best])
+                if better:
+                    best = i
+        if best is not None:
+            assign[best] = ax
+            used_dims.add(best)
+    return P(*[assign.get(i) for i in range(len(shape))])
+
+
+def param_specs(plan: ShardingPlan, params_shape: PyTree, *,
+                node_stacked: bool = False,
+                tie_break_last: bool = False) -> PyTree:
+    """PartitionSpec pytree matching a params eval_shape."""
+    mesh_shape = dict(plan.mesh.shape)
+    weight_axes = ["model", *plan.fsdp_axes]
+
+    def spec_for(path, leaf):
+        keys = [getattr(p, "key", getattr(p, "idx", None)) for p in path]
+        skip = 0
+        pinned = {}
+        if node_stacked:
+            skip = 1  # node axis (size n_nodes, possibly 1)
+            if plan.node_axis:
+                pinned[0] = plan.node_axis
+        if "blocks" in keys:
+            skip += 1  # stacked layer axis stays unsharded
+        shape = leaf.shape
+        # expert parallelism: experts axis (first after skips) -> 'model'
+        if any(k in keys for k in _EXPERT_KEYS) and len(shape) > skip:
+            e = shape[skip]
+            if e % mesh_shape["model"] == 0 and e >= mesh_shape["model"]:
+                pinned[skip] = "model"
+        return _greedy_spec(shape, weight_axes, mesh_shape,
+                            skip_leading=skip, pinned=pinned,
+                            tie_break_last=tie_break_last)
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params_shape)
+    return jax.tree_util.tree_unflatten(
+        treedef, [spec_for(kp, leaf) for kp, leaf in flat])
+
+
+def batch_specs(plan: ShardingPlan, batch_shape: PyTree) -> PyTree:
+    """Batches: [n_nodes, per_node_batch, ...] (decentralized) or
+    [global_batch, ...] (fsdp).  Batch dim sharded over the data axes."""
+    mesh_shape = dict(plan.mesh.shape)
+    daxes = plan.data_axes
+
+    total = 1
+    for a in daxes:
+        total *= mesh_shape[a]
+
+    def spec_for(leaf):
+        shape = leaf.shape
+        spec = [None] * len(shape)
+        start = 0
+        if plan.node_axis and shape and shape[0] > 1:
+            spec[0] = plan.node_axis
+            start = 1
+        elif shape and shape[0] == 1:
+            start = 1  # degenerate node axis (n_nodes == 1)
+        if daxes:
+            for i in range(start, len(shape)):
+                if shape[i] % total == 0 and shape[i] >= total:
+                    spec[i] = daxes if len(daxes) > 1 else daxes[0]
+                    break
+        return P(*spec)
+
+    return jax.tree.map(spec_for, batch_shape)
+
+
+def cache_specs(plan: ShardingPlan, cache_shape: PyTree, *,
+                shard_features: bool = True) -> PyTree:
+    """KV caches [(layers), B, T, K, D] / ssm states: batch over data axes if
+    divisible, else the largest trailing dim over 'model'/'data'."""
+    mesh_shape = dict(plan.mesh.shape)
+    daxes = plan.data_axes
+    d_total = 1
+    for a in daxes:
+        d_total *= mesh_shape[a]
+
+    def spec_for(path, leaf):
+        keys = [getattr(p, "key", getattr(p, "idx", None)) for p in path]
+        shape = leaf.shape
+        skip = 1 if "blocks" in keys or "shared_attn" in keys else 0
+        spec = [None] * len(shape)
+        used = set()
+        # batch axis right after the optional layer-stack axis
+        if len(shape) > skip and shape[skip] % d_total == 0 and \
+                shape[skip] >= d_total and daxes:
+            spec[skip] = daxes if len(daxes) > 1 else daxes[0]
+            used.add(skip)
+        else:
+            # long_500k: batch=1 — shard the sequence/cache axis instead
+            for i in range(skip + 1, len(shape)):
+                if i not in used and shape[i] % d_total == 0 and \
+                        shape[i] >= 2 * d_total and daxes:
+                    spec[i] = daxes if len(daxes) > 1 else daxes[0]
+                    used.add(i)
+                    break
+        # 'model' on the LAST divisible dim (head_dim/feature dims preferred
+        # over the cache sequence axis — sharding T over 'model' would
+        # all-gather the whole cache every decode step).  shard_features=False
+        # replicates caches over 'model' entirely (decode hillclimb knob: XLA
+        # emits involuntary-remat collectives when the dus/attention layouts
+        # disagree on the feature sharding).
+        if not shard_features:
+            return P(*spec)
+        for i in range(len(shape) - 1, skip, -1):
+            if i in used:
+                continue
+            if shape[i] % mesh_shape["model"] == 0 and \
+                    shape[i] >= mesh_shape["model"]:
+                spec[i] = "model"
+                break
+        return P(*spec)
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache_shape)
+    return jax.tree_util.tree_unflatten(
+        treedef, [spec_for(kp, leaf) for kp, leaf in flat])
+
+
+def named(plan: ShardingPlan, specs: PyTree) -> PyTree:
+    return jax.tree.map(lambda s: NamedSharding(plan.mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,246 @@
+"""Step builders shared by dryrun / train / serve launchers.
+
+Three step kinds, matching the input shapes:
+
+  train_step   decentralized QG-DSGDm-N step: per-node grads (vmap over the
+               node axis) -> local QG half-step -> gossip -> buffer update.
+               n_nodes=1 degrades to QHM (paper §4.2) for the two archs whose
+               per-node copies exceed HBM (DESIGN.md §4).
+  prefill_step tokens [B,S] -> (last logits, KV caches)
+  decode_step  one token + caches (seq_len capacity) -> (logits, caches)
+
+All builders are pure closures over static config; the dry-run jits them with
+explicit in/out shardings from launch/sharding.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import InputShape, ModelConfig
+from repro.core import gossip, topology as topo_lib
+from repro.core.optim import QGDSGDm, QHM
+from repro.models import transformer as tf
+
+PyTree = Any
+
+# per-chip HBM budget used to decide decentralized feasibility (v5e = 16 GB;
+# leave headroom for activations)
+HBM_BYTES = 16e9
+NODE_BUDGET = 14e9
+
+
+@dataclasses.dataclass(frozen=True)
+class StepConfig:
+    cfg: ModelConfig
+    shape: InputShape
+    n_nodes: int
+    lr: float = 0.1
+    beta: float = 0.9
+    weight_decay: float = 1e-4
+    chunk: int = 1024          # attention kv-chunk
+    ssd_chunk: int = 256
+    unroll: bool = False
+    remat: str = "full"
+    param_dtype: Any = jnp.bfloat16
+    gossip_schedule: str = "dense"   # dense | ring_ppermute (hillclimb)
+    skip_masked_chunks: bool = False
+    cache_shard_features: bool = True   # decode: shard K/D dims over model
+    remat_attention: bool = False       # recompute attn chunks in backward
+    pin_decode_cache: bool = False      # decode: with_sharding_constraint fix
+    shard_tie_break_last: bool = False  # TP on output dim for square weights
+    decode_lowp: bool = False           # decode attn bf16 operands
+    shard_activations: bool = False     # residual-stream P(...,'model') pin
+    repeat_kv: bool = False             # GQA scores: one 16-divisible head dim
+    megatron_attn: bool = False         # pin heads to 'model' (implies repeat_kv)
+    pin_moe_dispatch: bool = False      # MoE: expert-parallel dispatch pin
+
+
+def choose_n_nodes(cfg: ModelConfig, mesh) -> int:
+    """Decentralization arity for a mesh (DESIGN.md §4 feasibility table)."""
+    axes = dict(mesh.shape)
+    if "pod" in axes:
+        return axes["pod"]  # hierarchical pods-as-clients
+    n = axes["data"]
+    # per-chip bytes for x + m_hat + grads (bf16), FSDP over the model axis
+    per_chip = cfg.n_params() * 2 * 3 / axes["model"]
+    return n if per_chip <= NODE_BUDGET else 1
+
+
+# ---------------------------------------------------------------------------
+# input specs (ShapeDtypeStruct stand-ins; no allocation)
+# ---------------------------------------------------------------------------
+
+def train_batch_specs(sc: StepConfig) -> dict:
+    cfg, shape = sc.cfg, sc.shape
+    n = sc.n_nodes
+    assert shape.global_batch % n == 0
+    b = shape.global_batch // n
+    sds = jax.ShapeDtypeStruct
+    batch = {
+        "tokens": sds((n, b, shape.seq_len), jnp.int32),
+        "labels": sds((n, b, shape.seq_len), jnp.int32),
+    }
+    if cfg.n_image_tokens:
+        batch["image_embeds"] = sds(
+            (n, b, cfg.n_image_tokens, cfg.d_model), sc.param_dtype)
+    return batch
+
+
+def params_shape(sc: StepConfig, *, node_stacked: bool) -> PyTree:
+    cfg = sc.cfg
+    base = jax.eval_shape(
+        lambda: tf.init_lm(jax.random.PRNGKey(0), cfg, dtype=sc.param_dtype))
+    if not node_stacked:
+        return base
+    n = sc.n_nodes
+    return jax.tree.map(
+        lambda l: jax.ShapeDtypeStruct((n,) + l.shape, l.dtype), base)
+
+
+def opt_state_shape(sc: StepConfig, params: PyTree) -> PyTree:
+    opt = make_opt(sc)
+    return jax.eval_shape(opt.init, params)
+
+
+def prefill_specs(sc: StepConfig) -> dict:
+    cfg, shape = sc.cfg, sc.shape
+    sds = jax.ShapeDtypeStruct
+    out = {"tokens": sds((shape.global_batch, shape.seq_len), jnp.int32)}
+    if cfg.n_image_tokens:
+        out["img"] = sds((shape.global_batch, cfg.n_image_tokens,
+                          cfg.d_model), sc.param_dtype)
+    return out
+
+
+def decode_specs(sc: StepConfig) -> dict:
+    cfg, shape = sc.cfg, sc.shape
+    sds = jax.ShapeDtypeStruct
+    cache = jax.eval_shape(functools.partial(
+        tf.init_cache, cfg, shape.global_batch, shape.seq_len,
+        dtype=sc.param_dtype))
+    return {
+        "token": sds((shape.global_batch, 1), jnp.int32),
+        "pos": sds((), jnp.int32),
+        "cache": cache,
+    }
+
+
+# ---------------------------------------------------------------------------
+# optimizers / gossip
+# ---------------------------------------------------------------------------
+
+def make_opt(sc: StepConfig):
+    mix_fn = gossip.mix_dense
+    if sc.n_nodes == 1:
+        return QHM(lr=sc.lr, beta=sc.beta, weight_decay=sc.weight_decay,
+                   name="qhm")
+    if sc.gossip_schedule == "ring_ppermute":
+        # resolved inside the step builder (needs the mesh)
+        pass
+    return QGDSGDm(lr=sc.lr, beta=sc.beta, weight_decay=sc.weight_decay,
+                   nesterov=True, name="qg_dsgdm_n", mix_fn=mix_fn)
+
+
+def ring_w(n: int) -> np.ndarray:
+    return topo_lib.ring(n).w(0)
+
+
+# ---------------------------------------------------------------------------
+# step functions
+# ---------------------------------------------------------------------------
+
+def build_train_step(sc: StepConfig, *, mesh=None, node_axis: str | None = None):
+    cfg = sc.cfg
+    w_const = jnp.asarray(ring_w(sc.n_nodes), jnp.float32)
+
+    act_spec = None
+    head_spec = None
+    if mesh is not None:
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        if sc.shard_activations:
+            act_spec = NamedSharding(mesh, P(None, None, "model"))
+        if sc.megatron_attn:
+            head_spec = NamedSharding(mesh, P(None, None, "model", None))
+    moe_spec = None
+    if sc.pin_moe_dispatch and mesh is not None and cfg.moe is not None \
+            and cfg.moe.n_experts % dict(mesh.shape)["model"] == 0:
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        moe_spec = NamedSharding(mesh, P("model", None, None))
+
+    opt = make_opt(sc)
+    if sc.gossip_schedule == "ring_ppermute" and sc.n_nodes > 1:
+        if mesh is None or node_axis is None:
+            raise ValueError("ring_ppermute needs mesh + node_axis")
+
+        def mix(w, tree):
+            return gossip.mix_ring_shardmap(tree, mesh=mesh,
+                                            axis_name=node_axis)
+
+        opt = dataclasses.replace(opt, mix_fn=mix)
+
+    def loss_fn(p, batch):
+        return tf.train_loss(
+            p, batch, cfg, chunk=sc.chunk, ssd_chunk=sc.ssd_chunk,
+            remat=sc.remat, unroll=sc.unroll,
+            skip_masked_chunks=sc.skip_masked_chunks,
+            remat_attention=sc.remat_attention, act_spec=act_spec,
+            repeat_kv=sc.repeat_kv or sc.megatron_attn,
+            head_spec=head_spec, moe_expert_spec=moe_spec)
+
+    spmd_kw = {}
+    if act_spec is not None and node_axis is not None:
+        spmd_kw = {"spmd_axis_name": node_axis}
+
+    def train_step(params, opt_state, batch):
+        losses, grads = jax.vmap(jax.value_and_grad(loss_fn),
+                                 **spmd_kw)(params, batch)
+        new_params, new_opt = opt.step(params, grads, opt_state,
+                                       w=w_const, lr=sc.lr, t=0)
+        return new_params, new_opt, jnp.mean(losses)
+
+    return train_step
+
+
+def build_prefill_step(sc: StepConfig, *, mesh=None):
+    cfg = sc.cfg
+
+    act_spec = None
+    head_spec = None
+    if mesh is not None:
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        if sc.shard_activations:
+            act_spec = NamedSharding(mesh, P(None, None, "model"))
+        if sc.megatron_attn:
+            head_spec = NamedSharding(mesh, P(None, None, "model", None))
+
+    def prefill_step(params, tokens, img=None):
+        return tf.prefill(params, tokens, cfg, img=img, chunk=sc.chunk,
+                          ssd_chunk=sc.ssd_chunk, unroll=sc.unroll,
+                          cache_len=sc.shape.seq_len,
+                          skip_masked_chunks=sc.skip_masked_chunks,
+                          act_spec=act_spec,
+                          repeat_kv=sc.repeat_kv or sc.megatron_attn,
+                          head_spec=head_spec)
+
+    return prefill_step
+
+
+def build_decode_step(sc: StepConfig, *, cache_constraint=None):
+    """cache_constraint: optional NamedSharding applied to the KV cache right
+    after the decode write, pinning the layout XLA would otherwise flip
+    (the involuntary-remat fix measured in EXPERIMENTS.md §Perf)."""
+    cfg = sc.cfg
+
+    def decode_step(params, token, pos, cache):
+        return tf.decode_step(params, token, pos, cache, cfg,
+                              unroll=sc.unroll,
+                              cache_constraint=cache_constraint,
+                              decode_lowp=sc.decode_lowp)
+
+    return decode_step

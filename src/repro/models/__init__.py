@@ -1,0 +1,6 @@
+from . import attention, layers, moe, ssm, transformer
+from .transformer import decode_step, forward, init_cache, init_lm, prefill, train_loss
+
+__all__ = ["attention", "layers", "moe", "ssm", "transformer",
+           "decode_step", "forward", "init_cache", "init_lm", "prefill",
+           "train_loss"]

@@ -1,0 +1,280 @@
+"""Attention: GQA self-attention (full / sliding-window / softcap / qkv-bias),
+cross-attention (VLM), and KV-cache decode.
+
+The training/prefill path uses an *online-softmax chunked* implementation
+(`chunked_attention`) — a pure-jnp flash-attention: `lax.scan` over KV chunks
+so compiled peak memory is O(S * chunk) instead of O(S^2).  This is also the
+semantics the Pallas kernel (`repro.kernels.flash_attention`) implements; the
+model picks the kernel when ``use_pallas`` is set (TPU), jnp otherwise (CPU
+dry-run / tests).
+
+Sliding-window layers can skip KV chunks that are entirely outside the
+window (``skip_masked_chunks``) — a beyond-paper compute optimization
+measured in EXPERIMENTS.md §Perf.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from . import layers
+
+PyTree = Any
+NEG_INF = -2.0e38
+
+
+# ---------------------------------------------------------------------------
+# params
+# ---------------------------------------------------------------------------
+
+def init_attention(key, d_model: int, n_heads: int, n_kv_heads: int,
+                   head_dim: int, *, qkv_bias: bool = False,
+                   dtype=jnp.float32) -> PyTree:
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    p = {
+        "wq": layers.dense_init(kq, d_model, n_heads * head_dim, dtype),
+        "wk": layers.dense_init(kk, d_model, n_kv_heads * head_dim, dtype),
+        "wv": layers.dense_init(kv, d_model, n_kv_heads * head_dim, dtype),
+        "wo": layers.dense_init(ko, n_heads * head_dim, d_model, dtype),
+    }
+    if qkv_bias:
+        p["bq"] = jnp.zeros((n_heads * head_dim,), dtype)
+        p["bk"] = jnp.zeros((n_kv_heads * head_dim,), dtype)
+        p["bv"] = jnp.zeros((n_kv_heads * head_dim,), dtype)
+    return p
+
+
+def _proj(x, w, b=None):
+    y = jnp.einsum("...d,df->...f", x, w)
+    return y if b is None else y + b.astype(y.dtype)
+
+
+def qkv(params: PyTree, x: jax.Array, n_heads: int, n_kv_heads: int,
+        head_dim: int):
+    """x: [B,S,d] -> q [B,S,H,D], k/v [B,S,K,D]."""
+    b, s, _ = x.shape
+    q = _proj(x, params["wq"], params.get("bq")).reshape(b, s, n_heads, head_dim)
+    k = _proj(x, params["wk"], params.get("bk")).reshape(b, s, n_kv_heads, head_dim)
+    v = _proj(x, params["wv"], params.get("bv")).reshape(b, s, n_kv_heads, head_dim)
+    return q, k, v
+
+
+# ---------------------------------------------------------------------------
+# chunked (flash-style) attention — train / prefill
+# ---------------------------------------------------------------------------
+
+def chunked_attention(
+    q: jax.Array,            # [B, S, H, D]
+    k: jax.Array,            # [B, T, K, D]
+    v: jax.Array,            # [B, T, K, D]
+    *,
+    causal: bool = True,
+    window: int = 0,         # 0 = full; else sliding window (causal only)
+    softcap: float = 0.0,
+    chunk: int = 1024,
+    skip_masked_chunks: bool = False,
+    unroll: bool = False,
+    remat_chunks: bool = False,
+    repeat_kv: bool = False,
+) -> jax.Array:
+    """Online-softmax attention scanning KV in chunks; GQA via head groups."""
+    b, s, h, d = q.shape
+    t = k.shape[1]
+    kh = k.shape[2]
+    assert h % kh == 0
+    if repeat_kv and kh != h:
+        # GQA score tensors [B,S,KH,G,C] split the head count over two dims
+        # (8x8 for 64 heads), which the SPMD partitioner can only shard
+        # 16-ways by 2D-splitting + collective-permuting the fp32 scores.
+        # Repeating KV to the full head count keeps ONE 16-divisible head dim
+        # (cheap: K/V are GQA-small; scores are the big tensor).
+        g_rep = h // kh
+        k = jnp.repeat(k, g_rep, axis=2)
+        v = jnp.repeat(v, g_rep, axis=2)
+        kh = h
+    g = h // kh
+    chunk = min(chunk, t)
+    t_valid = t
+    if t % chunk:  # pad KV to a chunk multiple; padded keys masked below
+        pad = chunk - t % chunk
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        t = t + pad
+    n_chunks = t // chunk
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, jnp.float32))
+
+    qf = q.reshape(b, s, kh, g, d).astype(jnp.float32) * scale
+    kc = k.reshape(b, n_chunks, chunk, kh, d)
+    vc = v.reshape(b, n_chunks, chunk, kh, d)
+    q_pos = jnp.arange(s)
+
+    def one_chunk(carry, inp):
+        acc, m, l = carry
+        kb, vb, c_idx = inp
+        k_pos = c_idx * chunk + jnp.arange(chunk)
+        # scores: [B, S, KH, G, C]
+        sc = jnp.einsum("bskgd,bckd->bskgc", qf, kb.astype(jnp.float32))
+        if softcap:
+            sc = layers.softcap(sc, softcap)
+        mask = jnp.broadcast_to(k_pos[None, :] < t_valid, (s, chunk))
+        if causal:
+            mask &= q_pos[:, None] >= k_pos[None, :]
+        if window:
+            mask &= q_pos[:, None] - k_pos[None, :] < window
+        bmask = mask[None, :, None, None, :]
+        sc = jnp.where(bmask, sc, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(sc, axis=-1))
+        # zero fully-masked chunks explicitly: exp(NEG_INF - NEG_INF) == 1
+        p = jnp.where(bmask, jnp.exp(sc - m_new[..., None]), 0.0)
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("bskgc,bckd->bskgd", p, vb.astype(jnp.float32))
+        acc_new = acc * corr[..., None] + pv
+        return (acc_new, m_new, l_new), None
+
+    acc0 = jnp.zeros((b, s, kh, g, d), jnp.float32)
+    m0 = jnp.full((b, s, kh, g), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, s, kh, g), jnp.float32)
+
+    kc_t = jnp.moveaxis(kc, 1, 0)  # [n_chunks, B, C, KH, D]
+    vc_t = jnp.moveaxis(vc, 1, 0)
+    idx = jnp.arange(n_chunks)
+
+    if skip_masked_chunks and window and causal and s == t:
+        # Only chunks whose k range intersects [q_start - window, q_end] can
+        # contribute.  With q covering [0, s) this keeps chunks where
+        # c*chunk <= s-1 and (c+1)*chunk > -window... for same-length
+        # self-attention every chunk intersects *some* query row, so the win
+        # comes from processing each query-chunk separately.  We implement the
+        # query-chunked variant below instead.
+        return _windowed_attention_qchunked(
+            q, k, v, window=window, softcap=softcap, chunk=chunk)
+
+    if remat_chunks:
+        # flash-attention-style backward: recompute each chunk's scores in
+        # the backward pass instead of saving [B,S,KH,G,C] fp32 residuals
+        # per chunk (the Pallas kernel does this natively on TPU)
+        one_chunk = jax.checkpoint(one_chunk)
+    (acc, m, l), _ = jax.lax.scan(one_chunk, (acc0, m0, l0), (kc_t, vc_t, idx),
+                                  unroll=unroll)
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return out.reshape(b, s, h, d).astype(q.dtype)
+
+
+def _windowed_attention_qchunked(
+    q: jax.Array, k: jax.Array, v: jax.Array, *, window: int,
+    softcap: float, chunk: int,
+) -> jax.Array:
+    """Sliding-window attention that only touches the KV chunks each query
+    chunk can see: O(S * window) compute instead of O(S^2).
+
+    Requires window % chunk == 0 (or window <= chunk).  Each query chunk i
+    attends to KV span [i*chunk - window_chunks*chunk, (i+1)*chunk).
+    """
+    b, s, h, d = q.shape
+    kh = k.shape[2]
+    g = h // kh
+    chunk = min(chunk, s)
+    assert s % chunk == 0
+    w_chunks = max(1, -(-window // chunk))  # ceil
+    span = (w_chunks + 1) * chunk
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, jnp.float32))
+    n_q = s // chunk
+
+    # pad KV on the left so every span slice is in-bounds
+    pad = w_chunks * chunk
+    kp = jnp.pad(k, ((0, 0), (pad, 0), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (pad, 0), (0, 0), (0, 0)))
+
+    def one_q_chunk(i):
+        qb = jax.lax.dynamic_slice_in_dim(q, i * chunk, chunk, axis=1)
+        qb = qb.reshape(b, chunk, kh, g, d).astype(jnp.float32) * scale
+        kb = jax.lax.dynamic_slice_in_dim(kp, i * chunk, span, axis=1)
+        vb = jax.lax.dynamic_slice_in_dim(vp, i * chunk, span, axis=1)
+        q_pos = i * chunk + jnp.arange(chunk)
+        k_pos = i * chunk - pad + jnp.arange(span)
+        sc = jnp.einsum("bskgd,bckd->bskgc", qb, kb.astype(jnp.float32))
+        if softcap:
+            sc = layers.softcap(sc, softcap)
+        mask = (q_pos[:, None] >= k_pos[None, :]) & \
+               (q_pos[:, None] - k_pos[None, :] < window) & \
+               (k_pos[None, :] >= 0)
+        sc = jnp.where(mask[None, :, None, None, :], sc, NEG_INF)
+        p = jax.nn.softmax(sc, axis=-1)
+        out = jnp.einsum("bskgc,bckd->bskgd", p, vb.astype(jnp.float32))
+        return out.reshape(b, chunk, h, d)
+
+    outs = jax.lax.map(one_q_chunk, jnp.arange(n_q))  # [n_q, B, chunk, H, D]
+    out = jnp.moveaxis(outs, 0, 1).reshape(b, s, h, d)
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# decode attention (one query token over a KV cache)
+# ---------------------------------------------------------------------------
+
+def decode_attention(
+    q: jax.Array,            # [B, 1, H, D]
+    k_cache: jax.Array,      # [B, T, K, D]
+    v_cache: jax.Array,      # [B, T, K, D]
+    cur_pos: jax.Array,      # [] int32 — position of the new token
+    *,
+    window: int = 0,
+    softcap: float = 0.0,
+    k_pos: jax.Array | None = None,  # [T] per-slot positions (ring buffers)
+    lowp: bool = False,  # keep K/V in storage dtype; f32 MXU accumulation
+) -> jax.Array:
+    b, _, h, d = q.shape
+    t = k_cache.shape[1]
+    kh = k_cache.shape[2]
+    g = h // kh
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, jnp.float32))
+    if lowp:
+        # avoid materializing an fp32 copy of the whole cache (decode is
+        # cache-bandwidth bound): bf16 operands, fp32 accumulation on the MXU
+        qf = (q.reshape(b, 1, kh, g, d).astype(jnp.float32)
+              * scale).astype(k_cache.dtype)
+        sc = jnp.einsum("bskgd,btkd->bskgt", qf, k_cache,
+                        preferred_element_type=jnp.float32)
+    else:
+        qf = q.reshape(b, 1, kh, g, d).astype(jnp.float32) * scale
+        sc = jnp.einsum("bskgd,btkd->bskgt", qf, k_cache.astype(jnp.float32))
+    if softcap:
+        sc = layers.softcap(sc, softcap)
+    if k_pos is None:
+        k_pos = jnp.arange(t)
+        mask = k_pos <= cur_pos
+    else:
+        mask = (k_pos >= 0) & (k_pos <= cur_pos)
+    if window:
+        mask &= k_pos > cur_pos - window
+    sc = jnp.where(mask[None, None, None, None, :], sc, NEG_INF)
+    p = jax.nn.softmax(sc, axis=-1)
+    if lowp:
+        out = jnp.einsum("bskgt,btkd->bskgd", p.astype(v_cache.dtype),
+                         v_cache, preferred_element_type=jnp.float32)
+    else:
+        out = jnp.einsum("bskgt,btkd->bskgd", p, v_cache.astype(jnp.float32))
+    return out.reshape(b, 1, h, d).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# cross attention (VLM) — queries from text, KV from image embeddings
+# ---------------------------------------------------------------------------
+
+def cross_attention(
+    params: PyTree, x: jax.Array, kv_src: jax.Array,
+    n_heads: int, n_kv_heads: int, head_dim: int,
+) -> jax.Array:
+    """x: [B,S,d] text hidden; kv_src: [B,T,d] image embeddings (stub)."""
+    b, s, _ = x.shape
+    t = kv_src.shape[1]
+    q = _proj(x, params["wq"], params.get("bq")).reshape(b, s, n_heads, head_dim)
+    k = _proj(kv_src, params["wk"], params.get("bk")).reshape(b, t, n_kv_heads, head_dim)
+    v = _proj(kv_src, params["wv"], params.get("bv")).reshape(b, t, n_kv_heads, head_dim)
+    out = chunked_attention(q, k, v, causal=False, chunk=min(1024, t))
+    out = out.reshape(b, s, n_heads * head_dim)
+    return jnp.einsum("...f,fd->...d", out, params["wo"])

@@ -1,0 +1,468 @@
+"""Unified decoder LM covering all ten assigned architectures.
+
+A model is a repeating *period* of block kinds (see configs.base.ModelConfig):
+
+    dense   self-attention (full causal) + SwiGLU MLP
+    local   self-attention with sliding window
+    global  full self-attention (alias of dense; used in alternating patterns)
+    moe     self-attention + mixture-of-experts FFN (optional dense residual)
+    mamba   Mamba-2 SSD mixer (no MLP)
+    cross   gated cross-attention to image embeddings + gated MLP (VLM)
+
+The main stack is ``lax.scan`` over periods (stacked params, compact HLO);
+``tail_layers`` and the zamba2 shared-attention block are applied outside the
+scan.  Three entry points: ``train_loss`` (tokens+labels -> scalar),
+``prefill`` (tokens -> last logits + KV caches), ``decode_step`` (one token +
+caches -> logits + caches).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import TYPE_CHECKING, Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import attention, layers, moe as moe_lib, ssm as ssm_lib
+
+if TYPE_CHECKING:  # avoid configs <-> models import cycle
+    from repro.configs.base import ModelConfig
+else:
+    ModelConfig = Any
+
+PyTree = Any
+
+ATTN_KINDS = ("dense", "local", "global", "moe")
+
+
+@dataclasses.dataclass(frozen=True)
+class RunCtx:
+    cfg: ModelConfig
+    mode: str                       # train | prefill | decode
+    pos: Any = None                 # decode: scalar current position
+    img: Any = None                 # vlm: [B, T_img, d] stub embeddings
+    chunk: int = 1024               # attention KV-chunk size
+    ssd_chunk: int = 128
+    cache_len: int = 0              # prefill: total KV capacity (>= seq len)
+    use_pallas: bool = False
+    skip_masked_chunks: bool = False
+    remat: str = "none"             # none | full
+    unroll: bool = False            # unroll ALL scans (dry-run probes)
+    remat_attention: bool = False   # recompute attn chunks in backward
+    cache_constraint: Any = None    # decode: PartitionSpec pin for KV caches
+    decode_lowp: bool = False       # decode attn: bf16 operands, f32 accum
+    act_spec: Any = None            # sharding constraint for the residual x
+    repeat_kv: bool = False         # GQA: repeat K/V to full head count
+    head_spec: Any = None           # pin q/k/v heads to 'model' (Megatron)
+    moe_expert_spec: Any = None     # pin MoE dispatch to expert-parallel
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _init_block(key, kind: str, cfg: ModelConfig, dtype) -> PyTree:
+    d, f = cfg.d_model, cfg.d_ff
+    hd = cfg.resolved_head_dim
+    ks = jax.random.split(key, 4)
+    if kind == "mamba":
+        return {"ln": jnp.zeros((d,), dtype),
+                "mixer": ssm_lib.init_mamba(ks[0], d, cfg.ssm, dtype)}
+    if kind == "cross":
+        return {
+            "ln1": jnp.zeros((d,), dtype),
+            "xattn": attention.init_attention(
+                ks[0], d, cfg.n_heads, cfg.n_kv_heads, hd, dtype=dtype),
+            "gate_attn": jnp.zeros((), jnp.float32),
+            "ln2": jnp.zeros((d,), dtype),
+            "mlp": layers.init_mlp(ks[1], d, f, dtype),
+            "gate_mlp": jnp.zeros((), jnp.float32),
+        }
+    p = {
+        "ln1": jnp.zeros((d,), dtype),
+        "attn": attention.init_attention(
+            ks[0], d, cfg.n_heads, cfg.n_kv_heads, hd,
+            qkv_bias=cfg.qkv_bias, dtype=dtype),
+        "ln2": jnp.zeros((d,), dtype),
+    }
+    if kind == "moe":
+        p["moe"] = moe_lib.init_moe(ks[1], d, f, cfg.moe, dtype)
+    else:
+        p["mlp"] = layers.init_mlp(ks[1], d, f, dtype)
+    return p
+
+
+def init_lm(key, cfg: ModelConfig, dtype=jnp.float32) -> PyTree:
+    keys = jax.random.split(key, 8)
+    vp = cfg.vocab_padded
+    params: dict[str, Any] = {
+        "embed": layers.embed_init(keys[0], vp, cfg.d_model, dtype),
+        "final_norm": jnp.zeros((cfg.d_model,), dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = layers.dense_init(keys[1], cfg.d_model, vp, dtype)
+    # main scanned stack: per period position, params stacked over n_periods
+    blocks = []
+    for j, kind in enumerate(cfg.period):
+        bkeys = jax.random.split(jax.random.fold_in(keys[2], j), cfg.n_periods)
+        blocks.append(layers.stack_layers(
+            bkeys, lambda k: _init_block(k, kind, cfg, dtype)))
+    params["blocks"] = tuple(blocks)
+    params["tail"] = tuple(
+        _init_block(jax.random.fold_in(keys[3], i), cfg.period[0], cfg, dtype)
+        for i in range(cfg.tail_layers))
+    if cfg.shared_attn_every:
+        params["shared_attn"] = _init_block(keys[4], "dense", cfg, dtype)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# caches
+# ---------------------------------------------------------------------------
+
+def _attn_cache_len(kind: str, cfg: ModelConfig, cache_len: int) -> int:
+    if kind == "local" and cfg.window:
+        return min(cfg.window, cache_len)
+    return cache_len
+
+
+def _empty_block_cache(kind: str, cfg: ModelConfig, batch: int,
+                       cache_len: int, dtype):
+    hd = cfg.resolved_head_dim
+    if kind == "mamba":
+        return ssm_lib.init_mamba_state(batch, cfg.d_model, cfg.ssm, dtype)
+    if kind == "cross":
+        t = cfg.n_image_tokens
+        return {"k": jnp.zeros((batch, t, cfg.n_kv_heads, hd), dtype),
+                "v": jnp.zeros((batch, t, cfg.n_kv_heads, hd), dtype)}
+    length = _attn_cache_len(kind, cfg, cache_len)
+    return {
+        "k": jnp.zeros((batch, length, cfg.n_kv_heads, hd), dtype),
+        "v": jnp.zeros((batch, length, cfg.n_kv_heads, hd), dtype),
+        "slot_pos": jnp.full((length,), -1, jnp.int32),
+    }
+
+
+def init_cache(cfg: ModelConfig, batch: int, cache_len: int,
+               dtype=jnp.float32) -> PyTree:
+    def stacked(kind):
+        one = _empty_block_cache(kind, cfg, batch, cache_len, dtype)
+        return jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (cfg.n_periods,) + x.shape), one)
+
+    cache: dict[str, Any] = {
+        "blocks": tuple(stacked(kind) for kind in cfg.period),
+        "tail": tuple(
+            _empty_block_cache(cfg.period[0], cfg, batch, cache_len, dtype)
+            for _ in range(cfg.tail_layers)),
+    }
+    if cfg.shared_attn_every:
+        # one KV cache per use-site (the shared block runs once per period)
+        cache["shared_attn"] = stacked("local" if cfg.window else "dense")
+    return cache
+
+
+# ---------------------------------------------------------------------------
+# block application
+# ---------------------------------------------------------------------------
+
+def _self_attn(p, x, kind: str, ctx: RunCtx, cache):
+    cfg = ctx.cfg
+    hd = cfg.resolved_head_dim
+    window = cfg.window if kind == "local" else 0
+    if ctx.mode == "decode":
+        b = x.shape[0]
+        q, k, v = attention.qkv(p, x, cfg.n_heads, cfg.n_kv_heads, hd)
+        q = layers.apply_rope(q, ctx.pos + jnp.zeros((b, 1), jnp.int32),
+                              cfg.rope_theta)
+        k = layers.apply_rope(k, ctx.pos + jnp.zeros((b, 1), jnp.int32),
+                              cfg.rope_theta)
+        length = cache["k"].shape[1]
+        slot = ctx.pos % length
+        k_cache = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, slot, 1)
+        v_cache = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, slot, 1)
+        if ctx.cache_constraint is not None:
+            k_cache = jax.lax.with_sharding_constraint(
+                k_cache, ctx.cache_constraint)
+            v_cache = jax.lax.with_sharding_constraint(
+                v_cache, ctx.cache_constraint)
+        slot_pos = jax.lax.dynamic_update_slice_in_dim(
+            cache["slot_pos"], ctx.pos[None].astype(jnp.int32), slot, 0)
+        out = attention.decode_attention(
+            q, k_cache, v_cache, ctx.pos, window=window,
+            softcap=cfg.attn_softcap, k_pos=slot_pos, lowp=ctx.decode_lowp)
+        new_cache = {"k": k_cache, "v": v_cache, "slot_pos": slot_pos}
+    else:
+        b, s, _ = x.shape
+        q, k, v = attention.qkv(p, x, cfg.n_heads, cfg.n_kv_heads, hd)
+        pos = jnp.arange(s)[None, :]
+        q = layers.apply_rope(q, pos, cfg.rope_theta)
+        k = layers.apply_rope(k, pos, cfg.rope_theta)
+        if ctx.head_spec is not None and ctx.repeat_kv:
+            # Megatron-style: heads live on 'model'; scores/softmax stay
+            # chip-local, wo becomes the row-parallel matmul (one psum)
+            g_rep = cfg.n_heads // k.shape[2]
+            if g_rep > 1:
+                k = jnp.repeat(k, g_rep, axis=2)
+                v = jnp.repeat(v, g_rep, axis=2)
+            q = jax.lax.with_sharding_constraint(q, ctx.head_spec)
+            k = jax.lax.with_sharding_constraint(k, ctx.head_spec)
+            v = jax.lax.with_sharding_constraint(v, ctx.head_spec)
+        if ctx.use_pallas:
+            from repro.kernels import ops as kops
+            out = kops.flash_attention(
+                q, k, v, causal=True, window=window, softcap=cfg.attn_softcap)
+        else:
+            out = attention.chunked_attention(
+                q, k, v, causal=True, window=window,
+                softcap=cfg.attn_softcap, chunk=ctx.chunk,
+                skip_masked_chunks=ctx.skip_masked_chunks,
+                unroll=ctx.unroll, remat_chunks=ctx.remat_attention,
+                repeat_kv=ctx.repeat_kv)
+        new_cache = None
+        if ctx.mode == "prefill":
+            cap = max(ctx.cache_len, s)
+            length = _attn_cache_len(kind, cfg, cap)
+            if length >= s:  # pad; position p sits at slot p % length == p
+                pad = length - s
+                kc = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+                vc = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+                slot_pos = jnp.concatenate(
+                    [jnp.arange(s, dtype=jnp.int32),
+                     jnp.full((pad,), -1, jnp.int32)])
+            else:  # ring buffer: keep last `length`, slot = pos % length
+                positions = jnp.arange(s - length, s, dtype=jnp.int32)
+                shift = int((s - length) % length)
+                kc = jnp.roll(k[:, s - length:], shift, axis=1)
+                vc = jnp.roll(v[:, s - length:], shift, axis=1)
+                slot_pos = jnp.roll(positions, shift)
+            new_cache = {"k": kc, "v": vc, "slot_pos": slot_pos}
+    out = out.reshape(out.shape[0], out.shape[1], cfg.n_heads * hd)
+    return jnp.einsum("...f,fd->...d", out, p["wo"]), new_cache
+
+
+def apply_block(kind: str, p, x, ctx: RunCtx, cache):
+    cfg = ctx.cfg
+    aux = jnp.zeros((), jnp.float32)
+    if kind == "mamba":
+        h = layers.rms_norm(x, p["ln"], cfg.norm_eps)
+        if ctx.mode == "decode":
+            out, new_cache = ssm_lib.mamba_decode(p["mixer"], h, cache, cfg.ssm)
+        else:
+            out = ssm_lib.mamba_mixer(p["mixer"], h, cfg.ssm,
+                                      chunk=ctx.ssd_chunk,
+                                      use_pallas=ctx.use_pallas,
+                                      unroll=ctx.unroll)
+            new_cache = cache  # prefill state handled via chunked final state
+            if ctx.mode == "prefill":
+                # recompute final state cheaply through the chunked path
+                new_cache = _mamba_prefill_state(p["mixer"], h, cfg.ssm,
+                                                 ctx.ssd_chunk)
+        return x + out, aux, new_cache
+
+    if kind == "cross":
+        h = layers.rms_norm(x, p["ln1"], cfg.norm_eps)
+        hd = cfg.resolved_head_dim
+        if ctx.mode == "decode":
+            b = x.shape[0]
+            q = attention._proj(h, p["xattn"]["wq"]).reshape(
+                b, 1, cfg.n_heads, hd)
+            out = attention.decode_attention(
+                q, cache["k"], cache["v"],
+                jnp.asarray(cache["k"].shape[1] - 1, jnp.int32))
+            out = out.reshape(b, 1, cfg.n_heads * hd)
+            out = jnp.einsum("...f,fd->...d", out, p["xattn"]["wo"])
+            new_cache = cache
+        else:
+            out = attention.cross_attention(
+                p["xattn"], h, ctx.img, cfg.n_heads, cfg.n_kv_heads, hd)
+            new_cache = None
+            if ctx.mode == "prefill":
+                b, t, _ = ctx.img.shape
+                k = attention._proj(ctx.img, p["xattn"]["wk"]).reshape(
+                    b, t, cfg.n_kv_heads, hd)
+                v = attention._proj(ctx.img, p["xattn"]["wv"]).reshape(
+                    b, t, cfg.n_kv_heads, hd)
+                new_cache = {"k": k, "v": v}
+        x = x + jnp.tanh(p["gate_attn"]).astype(x.dtype) * out
+        h = layers.rms_norm(x, p["ln2"], cfg.norm_eps)
+        m = layers.swiglu(h, p["mlp"]["gate"], p["mlp"]["up"], p["mlp"]["down"])
+        x = x + jnp.tanh(p["gate_mlp"]).astype(x.dtype) * m
+        return x, aux, new_cache
+
+    # attention + (mlp | moe)
+    h = layers.rms_norm(x, p["ln1"], cfg.norm_eps)
+    out, new_cache = _self_attn(p["attn"], h, kind, ctx, cache)
+    x = x + out
+    h = layers.rms_norm(x, p["ln2"], cfg.norm_eps)
+    if kind == "moe":
+        y, aux = moe_lib.moe_ffn(p["moe"], h, cfg.moe,
+                                 expert_spec=ctx.moe_expert_spec)
+    else:
+        y = layers.swiglu(h, p["mlp"]["gate"], p["mlp"]["up"], p["mlp"]["down"])
+    return x + y, aux, new_cache
+
+
+def _mamba_prefill_state(mixer, h, scfg, chunk):
+    """Final (conv, ssm) state after consuming h [B,S,d] — for prefill."""
+    bsz, s, d_model = h.shape
+    di = scfg.d_inner(d_model)
+    nh = scfg.n_heads(d_model)
+    n = scfg.d_state
+    proj = jnp.einsum("bsd,df->bsf", h, mixer["in_proj"])
+    _, xbc_raw, dt = ssm_lib._split_proj(proj, di, n, nh)
+    xbc = ssm_lib._causal_conv(xbc_raw, mixer["conv_w"])
+    xi = xbc[..., :di].reshape(bsz, s, nh, scfg.head_dim)
+    b = xbc[..., di:di + n]
+    c = xbc[..., di + n:]
+    dtv = jax.nn.softplus(dt.astype(jnp.float32) + mixer["dt_bias"])
+    a = -jnp.exp(mixer["a_log"])
+    _, hfin = ssm_lib.ssd_chunked(xi, dtv, a, b, c, mixer["d_skip"],
+                                  chunk=min(chunk, s))
+    kconv = mixer["conv_w"].shape[0]
+    conv_state = xbc_raw[:, s - (kconv - 1):, :]
+    return {"conv": conv_state, "ssm": hfin}
+
+
+# ---------------------------------------------------------------------------
+# full model passes
+# ---------------------------------------------------------------------------
+
+def _embed(params, tokens, cfg):
+    return jnp.take(params["embed"], tokens, axis=0)
+
+
+def _logits(params, x, cfg: ModelConfig):
+    h = layers.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("...d,dv->...v", h, head)
+    return layers.softcap(logits.astype(jnp.float32), cfg.logit_softcap)
+
+
+def _shared_attn_block(p, x, ctx: RunCtx, cache):
+    """zamba2: ONE param set, applied at every period boundary inside the
+    scan (period = (mamba,)*shared_attn_every), with a per-use-site KV
+    cache (stacked over periods like the backbone caches)."""
+    kind = "local" if ctx.cfg.window else "dense"
+    h = layers.rms_norm(x, p["ln1"], ctx.cfg.norm_eps)
+    out, new_cache = _self_attn(p["attn"], h, kind, ctx, cache)
+    x = x + out
+    h = layers.rms_norm(x, p["ln2"], ctx.cfg.norm_eps)
+    x = x + layers.swiglu(h, p["mlp"]["gate"], p["mlp"]["up"],
+                          p["mlp"]["down"])
+    return x, new_cache
+
+
+def forward(params, tokens, cfg: ModelConfig, *, mode: str,
+            img=None, cache=None, pos=None, chunk: int = 1024,
+            ssd_chunk: int = 128, cache_len: int = 0,
+            use_pallas: bool = False,
+            skip_masked_chunks: bool = False, remat: str = "none",
+            unroll: bool = False, remat_attention: bool = False,
+            cache_constraint=None, decode_lowp: bool = False,
+            act_spec=None, repeat_kv: bool = False, head_spec=None,
+            moe_expert_spec=None):
+    """Shared driver. Returns (logits, aux_loss, new_cache).
+
+    train:   tokens [B,S]   -> logits [B,S,Vp], aux, None
+    prefill: tokens [B,S]   -> logits [B,Vp] (last pos), aux, cache
+    decode:  tokens [B,1]   -> logits [B,Vp], aux, cache
+    """
+    ctx = RunCtx(cfg=cfg, mode=mode, pos=pos, img=img, chunk=chunk,
+                 ssd_chunk=ssd_chunk, cache_len=cache_len,
+                 use_pallas=use_pallas,
+                 skip_masked_chunks=skip_masked_chunks, remat=remat,
+                 unroll=unroll, remat_attention=remat_attention,
+                 cache_constraint=cache_constraint, decode_lowp=decode_lowp,
+                 act_spec=act_spec if mode != "decode" else None,
+                 repeat_kv=repeat_kv, head_spec=head_spec,
+                 moe_expert_spec=moe_expert_spec)
+    x = _embed(params, tokens, cfg)
+    if act_spec is not None and mode != "decode":
+        x = jax.lax.with_sharding_constraint(x, act_spec)
+    aux_total = jnp.zeros((), jnp.float32)
+    with_cache = mode in ("prefill", "decode")
+
+    shared_p = params.get("shared_attn")
+
+    def _constrain(x):
+        if ctx.act_spec is not None:
+            x = jax.lax.with_sharding_constraint(x, ctx.act_spec)
+        return x
+
+    def period_body(x, block_params, block_caches, shared_cache):
+        x = _constrain(x)
+        aux_p = jnp.zeros((), jnp.float32)
+        new_caches = []
+        for j, kind in enumerate(cfg.period):
+            c = block_caches[j] if block_caches is not None else None
+            x, aux, nc = apply_block(kind, block_params[j], x, ctx, c)
+            aux_p = aux_p + aux
+            new_caches.append(nc)
+        new_shared = None
+        if shared_p is not None:
+            x, new_shared = _shared_attn_block(shared_p, x, ctx, shared_cache)
+        return x, aux_p, tuple(new_caches), new_shared
+
+    if remat == "full":
+        period_body = jax.checkpoint(period_body)
+
+    def scan_fn(carry, xs):
+        x, aux_acc = carry
+        if mode == "decode":
+            bp, bc, sc = xs
+        else:
+            (bp,), bc, sc = xs, None, None
+        x, aux_p, ncs, nsc = period_body(x, bp, bc, sc)
+        out = (ncs, nsc) if with_cache else None
+        return (x, aux_acc + aux_p), out
+
+    if mode == "decode":
+        shared_c = cache.get("shared_attn") if shared_p is not None else None
+        xs = (params["blocks"], cache["blocks"], shared_c)
+    else:
+        xs = (params["blocks"],)
+    (x, aux_total), scan_out = jax.lax.scan(scan_fn, (x, aux_total), xs,
+                                            unroll=unroll)
+
+    new_cache: dict[str, Any] = {}
+    if with_cache:
+        new_cache["blocks"] = scan_out[0]
+        if shared_p is not None:
+            new_cache["shared_attn"] = scan_out[1]
+
+    tail_caches = []
+    for i, tp in enumerate(params["tail"]):
+        c = cache["tail"][i] if mode == "decode" else None
+        x, aux, nc = apply_block(cfg.period[0], tp, x, ctx, c)
+        aux_total = aux_total + aux
+        tail_caches.append(nc)
+    if with_cache:
+        new_cache["tail"] = tuple(tail_caches)
+
+    if mode == "train":
+        return _logits(params, x, cfg), aux_total, None
+    if mode == "prefill":
+        return _logits(params, x[:, -1], cfg), aux_total, new_cache
+    return _logits(params, x[:, 0], cfg), aux_total, new_cache
+
+
+def train_loss(params, batch, cfg: ModelConfig, **kw):
+    """batch: {tokens [B,S], labels [B,S], (image_embeds)} -> scalar loss."""
+    logits, aux, _ = forward(params, batch["tokens"], cfg, mode="train",
+                             img=batch.get("image_embeds"), **kw)
+    ce = layers.cross_entropy(logits, batch["labels"], cfg.vocab_size)
+    return ce + aux
+
+
+def prefill(params, tokens, cfg: ModelConfig, *, img=None, **kw):
+    logits, _, cache = forward(params, tokens, cfg, mode="prefill", img=img, **kw)
+    return logits, cache
+
+
+def decode_step(params, token, pos, cache, cfg: ModelConfig, **kw):
+    """token [B,1] int32, pos scalar int32, cache from init_cache/prefill."""
+    logits, _, new_cache = forward(params, token, cfg, mode="decode",
+                                   cache=cache, pos=pos, **kw)
+    return logits, new_cache

@@ -1,0 +1,2 @@
+from . import checkpoint, trainer
+from .trainer import DecentralizedTrainer, TrainState, lr_schedule, run_training

@@ -1,0 +1,60 @@
+"""Pytree checkpointing to .npz (offline-friendly, no orbax dependency).
+
+Leaves are flattened with '/'-joined key paths; the tree structure is
+reconstructed on restore from the same paths, so save/restore round-trips
+arbitrary nested dict/tuple/list pytrees (the only containers we use).
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+from typing import Any
+
+import jax
+import numpy as np
+
+PyTree = Any
+
+_SEP = "|"
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(f"k:{p.key}")
+        elif hasattr(p, "idx"):
+            parts.append(f"i:{p.idx}")
+        else:
+            parts.append(f"x:{p}")
+    return _SEP.join(parts)
+
+
+def save_checkpoint(path: str, tree: PyTree, *, step: int = 0,
+                    extra: dict | None = None) -> None:
+    flat = {}
+    for kp, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        flat[_path_str(kp)] = np.asarray(leaf)
+    meta = {"step": step, "extra": extra or {}}
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    np.savez(path, __meta__=json.dumps(meta), **flat)
+
+
+def restore_checkpoint(path: str, like: PyTree) -> tuple[PyTree, dict]:
+    """Restore into the structure of `like` (shapes must match)."""
+    data = np.load(path if path.endswith(".npz") else path + ".npz",
+                   allow_pickle=False)
+    meta = json.loads(str(data["__meta__"]))
+    paths_leaves, treedef = jax.tree_util.tree_flatten_with_path(like)
+    leaves = []
+    for kp, leaf in paths_leaves:
+        key = _path_str(kp)
+        if key not in data:
+            raise KeyError(f"checkpoint missing leaf {key}")
+        arr = data[key]
+        if hasattr(leaf, "shape") and tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(f"shape mismatch at {key}: "
+                             f"{arr.shape} vs {leaf.shape}")
+        leaves.append(arr)
+    return jax.tree_util.tree_unflatten(treedef, leaves), meta

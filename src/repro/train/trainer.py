@@ -1,0 +1,161 @@
+"""Decentralized training engine.
+
+Node-stacked layout everywhere: params/opt-state leaves are [n_nodes, ...].
+One engine serves three execution modes:
+
+  * CPU / single process — node axis vmapped (tests, benchmarks, examples);
+  * mesh 'data' axis      — node axis sharded over the in-pod data axis;
+  * mesh 'pod' axis       — hierarchical pods-as-clients (DESIGN.md §2).
+
+The jitted step:   grads = vmap(grad(loss))(params, batches)
+                   params, opt_state = opt.step(params, grads, w=W_t)
+
+Model state (e.g. BN running stats) is vmapped but NEVER gossiped — the
+paper's local-statistics BN protocol.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import gossip
+from repro.core.optim import DecentralizedOptimizer
+from repro.core.topology import Topology
+
+PyTree = Any
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class TrainState:
+    params: PyTree          # [n, ...]
+    opt_state: PyTree
+    model_state: PyTree     # [n, ...] (BN stats etc.), not gossiped
+    t: jnp.ndarray          # step counter
+
+
+def lr_schedule(base_lr: float, *, total_steps: int, warmup: int = 0,
+                decay_at: tuple[float, ...] = (), decay: float = 0.1,
+                warmup_from: float = 0.1):
+    """Paper recipe: linear warmup from `warmup_from` then stage-wise decay
+    at the given fractions of total steps."""
+    decay_steps = tuple(int(f * total_steps) for f in decay_at)
+
+    def fn(t):
+        t = jnp.asarray(t, jnp.float32)
+        lr = jnp.asarray(base_lr, jnp.float32)
+        if warmup:
+            frac = jnp.clip(t / warmup, 0.0, 1.0)
+            start = min(warmup_from, base_lr)
+            lr = start + (base_lr - start) * frac
+        for ds in decay_steps:
+            lr = jnp.where(t >= ds, lr * decay, lr)
+        return lr
+
+    return fn
+
+
+@dataclasses.dataclass
+class DecentralizedTrainer:
+    """loss_fn(params_i, model_state_i, batch_i, rng_i) ->
+    (loss, (new_model_state, metrics_dict))."""
+
+    loss_fn: Callable
+    optimizer: DecentralizedOptimizer
+    topology: Topology
+    lr_fn: Callable[[Any], Any] = None  # defaults to optimizer.lr constant
+
+    def __post_init__(self):
+        if self.lr_fn is None:
+            lr = self.optimizer.lr
+            self.lr_fn = lambda t: jnp.asarray(lr, jnp.float32)
+        self._mixing = jnp.asarray(self.topology.mixing, jnp.float32)
+        self._step_jit = jax.jit(self._step_impl)
+
+    # -- init ---------------------------------------------------------------
+    def init(self, key, init_fn) -> TrainState:
+        """init_fn(key) -> (params, model_state); every node starts from the
+        SAME x^0 (the paper's setup)."""
+        params, mstate = init_fn(key)
+        n = self.topology.n
+        stack = lambda tree: jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (n,) + x.shape).copy() if hasattr(
+                x, "shape") else x, tree)
+        params_n = stack(params)
+        mstate_n = stack(mstate)
+        return TrainState(params=params_n,
+                          opt_state=self.optimizer.init(params_n),
+                          model_state=mstate_n,
+                          t=jnp.zeros((), jnp.int32))
+
+    # -- one jitted decentralized step ---------------------------------------
+    def step(self, state: TrainState, batch: PyTree, rng):
+        return self._step_jit(state, batch, rng)
+
+    def _step_impl(self, state: TrainState, batch: PyTree, rng) -> tuple[TrainState, dict]:
+        n = self.topology.n
+        rngs = jax.random.split(rng, n)
+
+        def node_loss(p, ms, b, r):
+            return self.loss_fn(p, ms, b, r)
+
+        grad_fn = jax.value_and_grad(node_loss, has_aux=True)
+        (loss, (new_ms, metrics)), grads = jax.vmap(grad_fn)(
+            state.params, state.model_state, batch, rngs)
+
+        w = self._mixing[state.t % self._mixing.shape[0]]
+        lr = self.lr_fn(state.t)
+        new_params, new_opt = self.optimizer.step(
+            state.params, grads, state.opt_state, w=w, lr=lr, t=state.t)
+
+        out_metrics = {
+            "loss": jnp.mean(loss),
+            "lr": lr,
+            "consensus": gossip.consensus_distance(new_params),
+            "grad_norm": jnp.sqrt(sum(
+                jnp.sum(g.astype(jnp.float32) ** 2)
+                for g in jax.tree.leaves(grads)) / n),
+        }
+        for k, v in metrics.items():
+            out_metrics[k] = jnp.mean(v)
+        return TrainState(new_params, new_opt, new_ms, state.t + 1), out_metrics
+
+    # -- evaluation -----------------------------------------------------------
+    def evaluate(self, state: TrainState, eval_fn, batches) -> dict:
+        """Paper protocol: evaluate EACH node's local model on the FULL eval
+        set, then average the per-node metrics.  eval_fn(params_i, mstate_i,
+        batch) -> dict of sums + 'count'."""
+        n = self.topology.n
+        totals: dict[str, np.ndarray] = {}
+        for batch in batches:
+            res = jax.vmap(lambda p, ms: eval_fn(p, ms, batch))(
+                state.params, state.model_state)
+            for k, v in res.items():
+                totals[k] = totals.get(k, 0) + np.asarray(v)
+        count = totals.pop("count")
+        return {k: float(np.mean(v / count)) for k, v in totals.items()}
+
+
+def run_training(trainer: DecentralizedTrainer, state: TrainState,
+                 batch_iter, steps: int, *, rng=None, log_every: int = 0,
+                 log_fn=print) -> tuple[TrainState, list[dict]]:
+    rng = jax.random.PRNGKey(0) if rng is None else rng
+    history = []
+    for i, batch in zip(range(steps), batch_iter):
+        rng, sub = jax.random.split(rng)
+        batch = jax.tree.map(jnp.asarray, batch)
+        state, metrics = trainer.step(state, batch, sub)
+        if log_every and (i % log_every == 0 or i == steps - 1):
+            m = {k: float(v) for k, v in metrics.items()}
+            history.append({"step": i, **m})
+            log_fn(f"step {i:5d}  " + "  ".join(
+                f"{k}={v:.4f}" for k, v in m.items()))
+        elif i == steps - 1:
+            history.append({"step": i, **{k: float(v)
+                                          for k, v in metrics.items()}})
+    return state, history

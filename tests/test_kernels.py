@@ -1,0 +1,122 @@
+"""Per-kernel validation: Pallas (interpret=True) vs the pure-jnp oracles in
+kernels/ref.py, swept over shapes and dtypes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+KEY = jax.random.PRNGKey(7)
+
+
+def rnd(shape, dtype=jnp.float32, k=0):
+    return jax.random.normal(jax.random.fold_in(KEY, k), shape).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# qg_update
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("shape", [(17,), (1000, 7), (3, 5, 11), (130000,)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("nesterov", [False, True])
+def test_qg_local_step(shape, dtype, nesterov):
+    x, m, g = rnd(shape, dtype, 1), rnd(shape, dtype, 2), rnd(shape, dtype, 3)
+    out = ops.qg_local_step(x, m, g, eta=0.1, beta=0.9, nesterov=nesterov)
+    exp = ref.qg_local_step_ref(x, m, g, eta=0.1, beta=0.9, nesterov=nesterov)
+    tol = 1e-6 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(exp, np.float32), atol=tol)
+
+
+@pytest.mark.parametrize("shape", [(64,), (513, 3)])
+@pytest.mark.parametrize("mu", [0.0, 0.5, 0.9])
+def test_qg_buffer_update(shape, mu):
+    xo, xn, m = rnd(shape, k=4), rnd(shape, k=5), rnd(shape, k=6)
+    out = ops.qg_buffer_update(xo, xn, m, eta=0.05, mu=mu)
+    exp = ref.qg_buffer_update_ref(xo, xn, m, eta=0.05, mu=mu)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp), atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# flash_attention
+# ---------------------------------------------------------------------------
+
+ATTN_CASES = [
+    # (B, S, T, H, KH, D, kwargs)
+    (1, 128, 128, 4, 4, 32, {}),                       # MHA causal
+    (2, 256, 256, 8, 2, 64, {}),                       # GQA
+    (1, 200, 200, 4, 2, 32, {}),                       # ragged (padding)
+    (1, 256, 256, 4, 4, 32, {"window": 64}),           # sliding window
+    (1, 256, 256, 4, 4, 32, {"softcap": 30.0}),        # gemma2 softcap
+    (1, 128, 192, 4, 4, 32, {"causal": False}),        # cross-attn shape
+]
+
+
+@pytest.mark.parametrize("case", ATTN_CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention(case, dtype):
+    b, s, t, h, kh, d, kw = case
+    q = rnd((b, s, h, d), dtype, 10)
+    k = rnd((b, t, kh, d), dtype, 11)
+    v = rnd((b, t, kh, d), dtype, 12)
+    out = ops.flash_attention(q, k, v, block_q=64, block_k=128, **kw)
+    exp = ref.flash_attention_ref(q, k, v, **kw)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(exp, np.float32), atol=tol)
+
+
+def test_flash_matches_model_chunked_path():
+    from repro.models import attention as A
+    q, k, v = rnd((2, 256, 8, 64), k=20), rnd((2, 256, 4, 64), k=21), \
+        rnd((2, 256, 4, 64), k=22)
+    a = ops.flash_attention(q, k, v, causal=True, window=64)
+    b = A.chunked_attention(q, k, v, causal=True, window=64, chunk=128)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=3e-5)
+
+
+# ---------------------------------------------------------------------------
+# ssd_scan
+# ---------------------------------------------------------------------------
+
+SSD_CASES = [
+    (1, 128, 2, 32, 16, 64),    # B, S, H, P, N, chunk
+    (2, 256, 3, 64, 32, 64),
+    (1, 256, 1, 16, 128, 128),
+    (2, 512, 4, 32, 64, 256),
+]
+
+
+@pytest.mark.parametrize("case", SSD_CASES)
+def test_ssd_scan(case):
+    b, s, h, p, n, chunk = case
+    x = rnd((b, s, h, p), k=30) * 0.5
+    dt = jax.nn.softplus(rnd((b, s, h), k=31))
+    a = -jnp.exp(rnd((h,), k=32) * 0.3)
+    bb = rnd((b, s, n), k=33) * 0.3
+    cc = rnd((b, s, n), k=34) * 0.3
+    d_skip = jnp.ones((h,))
+    y, fin = ops.ssd_scan(x, dt, a, bb, cc, d_skip, chunk=chunk)
+    y_ref, fin_ref = ref.ssd_scan_ref(x, dt, a, bb, cc)
+    y_ref = y_ref + x * d_skip[None, None, :, None]
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               atol=5e-4, rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(fin), np.asarray(fin_ref),
+                               atol=5e-4, rtol=1e-3)
+
+
+def test_ssd_chunk_invariance():
+    """Different chunk sizes must give identical results (algorithm
+    correctness of the inter-chunk recurrence)."""
+    b, s, h, p, n = 1, 256, 2, 32, 16
+    x = rnd((b, s, h, p), k=40) * 0.5
+    dt = jax.nn.softplus(rnd((b, s, h), k=41))
+    a = -jnp.exp(rnd((h,), k=42) * 0.3)
+    bb, cc = rnd((b, s, n), k=43) * 0.3, rnd((b, s, n), k=44) * 0.3
+    d = jnp.zeros((h,))
+    y64, _ = ops.ssd_scan(x, dt, a, bb, cc, d, chunk=64)
+    y256, _ = ops.ssd_scan(x, dt, a, bb, cc, d, chunk=256)
+    np.testing.assert_allclose(np.asarray(y64), np.asarray(y256),
+                               atol=1e-4, rtol=1e-4)

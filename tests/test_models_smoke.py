@@ -1,0 +1,143 @@
+"""Per-architecture smoke tests (assignment requirement): reduced variant of
+each family — one forward/train step on CPU, asserting shapes + no NaNs —
+plus decode-vs-train cache consistency."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, get_config
+from repro.models import transformer as tf
+
+KEY = jax.random.PRNGKey(3)
+B, S = 2, 64
+
+
+def make_batch(cfg, s=S):
+    tokens = jax.random.randint(KEY, (B, s), 0, cfg.vocab_size)
+    batch = {"tokens": tokens, "labels": tokens}
+    img = None
+    if cfg.n_image_tokens:
+        img = jax.random.normal(KEY, (B, cfg.n_image_tokens, cfg.d_model))
+        batch["image_embeds"] = img
+    return batch, img
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_train_step_reduced(arch):
+    cfg = get_config(arch, reduced=True)
+    params = tf.init_lm(KEY, cfg)
+    batch, _ = make_batch(cfg)
+
+    loss, grads = jax.value_and_grad(
+        lambda p: tf.train_loss(p, batch, cfg))(params)
+    assert loss.shape == ()
+    assert bool(jnp.isfinite(loss))
+    gleaves = jax.tree.leaves(grads)
+    assert all(bool(jnp.all(jnp.isfinite(g))) for g in gleaves)
+    assert any(float(jnp.max(jnp.abs(g))) > 0 for g in gleaves)
+
+    # sgd step decreases loss on the same batch (sanity of gradients)
+    params2 = jax.tree.map(lambda p, g: p - 0.05 * g, params, grads)
+    loss2 = tf.train_loss(params2, batch, cfg)
+    assert float(loss2) < float(loss)
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_forward_shapes_reduced(arch):
+    cfg = get_config(arch, reduced=True)
+    params = tf.init_lm(KEY, cfg)
+    batch, img = make_batch(cfg)
+    logits, aux, _ = tf.forward(params, batch["tokens"], cfg, mode="train",
+                                img=img)
+    assert logits.shape == (B, S, cfg.vocab_padded)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+    assert bool(jnp.isfinite(aux))
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_decode_consistent_with_train(arch):
+    cfg = get_config(arch, reduced=True)
+    params = tf.init_lm(KEY, cfg)
+    s = 96
+    batch, img = make_batch(cfg, s)
+    tokens = batch["tokens"]
+    full, _, _ = tf.forward(params, tokens, cfg, mode="train", img=img)
+    _, cache = tf.prefill(params, tokens[:, :s - 1], cfg, img=img,
+                          cache_len=s)
+    dl, _ = tf.decode_step(params, tokens[:, s - 1:s],
+                           jnp.asarray(s - 1, jnp.int32), cache, cfg)
+    err = float(jnp.max(jnp.abs(dl - full[:, -1])))
+    # MoE capacity-dropping differs between batched train and 1-token decode
+    tol = 0.5 if cfg.moe is not None else 1e-4
+    assert err < tol, err
+
+
+@pytest.mark.parametrize("arch", ["gemma2-27b", "zamba2-7b"])
+def test_sliding_window_changes_output(arch):
+    """window must actually constrain attention for local layers."""
+    import dataclasses
+    cfg = get_config(arch, reduced=True)
+    params = tf.init_lm(KEY, cfg)
+    batch, img = make_batch(cfg, 96)
+    a, _, _ = tf.forward(params, batch["tokens"], cfg, mode="train", img=img)
+    cfg_wide = dataclasses.replace(cfg, window=4096)
+    b_, _, _ = tf.forward(params, batch["tokens"], cfg_wide, mode="train",
+                          img=img)
+    assert float(jnp.max(jnp.abs(a - b_))) > 1e-6
+
+
+def test_vocab_padding_masked():
+    cfg = get_config("mamba2-130m", reduced=True)
+    assert cfg.vocab_padded % 256 == 0
+    params = tf.init_lm(KEY, cfg)
+    batch, _ = make_batch(cfg)
+    loss = tf.train_loss(params, batch, cfg)
+    # padded rows never win: argmax of logits on valid labels only matters;
+    # loss must stay below uniform over the PADDED vocab + slack if masking
+    # works (it equals roughly uniform over the true vocab at init)
+    assert float(loss) < np.log(cfg.vocab_padded) + 1.0
+
+
+def test_unroll_equivalent():
+    cfg = get_config("gemma2-27b", reduced=True)
+    params = tf.init_lm(KEY, cfg)
+    batch, _ = make_batch(cfg)
+    a = tf.train_loss(params, batch, cfg, unroll=False)
+    b = tf.train_loss(params, batch, cfg, unroll=True)
+    np.testing.assert_allclose(float(a), float(b), rtol=1e-5)
+
+
+def test_remat_equivalent():
+    cfg = get_config("tinyllama-1.1b", reduced=True)
+    params = tf.init_lm(KEY, cfg)
+    batch, _ = make_batch(cfg)
+    a = jax.grad(lambda p: tf.train_loss(p, batch, cfg, remat="none"))(params)
+    b = jax.grad(lambda p: tf.train_loss(p, batch, cfg, remat="full"))(params)
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y), atol=1e-5)
+
+
+def test_full_configs_param_counts():
+    """Analytic parameter counts are in the right ballpark of the names."""
+    expected = {
+        "gemma2-27b": (24e9, 32e9),
+        "command-r-35b": (32e9, 40e9),
+        "mamba2-130m": (0.1e9, 0.2e9),
+        "llama-3.2-vision-11b": (8e9, 12e9),
+        "granite-moe-3b-a800m": (2.5e9, 4.5e9),
+        "qwen2-72b": (65e9, 80e9),
+        "tinyllama-1.1b": (0.9e9, 1.3e9),
+        "musicgen-medium": (1.2e9, 2.2e9),
+        "zamba2-7b": (6e9, 9e9),
+        "arctic-480b": (400e9, 520e9),
+    }
+    for arch, (lo, hi) in expected.items():
+        n = get_config(arch).n_params()
+        assert lo <= n <= hi, (arch, n)
+
+
+def test_moe_active_params_smaller():
+    for arch in ("granite-moe-3b-a800m", "arctic-480b"):
+        cfg = get_config(arch)
+        assert cfg.n_active_params() < 0.5 * cfg.n_params()

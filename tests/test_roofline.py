@@ -1,0 +1,88 @@
+"""Roofline machinery: HLO collective parsing + extrapolation math, and an
+end-to-end validation that the analytic MODEL_FLOPS matches XLA's
+cost_analysis on a trip-count-1 (fully unrolled) compiled program."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch import roofline as R
+
+HLO = """
+ENTRY main {
+  %p = bf16[16,288]{1,0} parameter(0)
+  %ag = bf16[256,288]{1,0} all-gather(%p), replica_groups=[16,16]<=[256], dimensions={0}
+  %ar = f32[128,64]{1,0} all-reduce(%x), replica_groups={{0,1,2,3}}, to_apply=%add
+  %rs = f32[8,64]{1,0} reduce-scatter(%y), replica_groups=[32,8]<=[256], dimensions={0}
+  %cp = bf16[4,4]{1,0} collective-permute(%z), source_target_pairs={{0,1}}
+  %done = f32[128,64]{1,0} all-reduce-done(%ar)
+}
+"""
+
+
+def test_parse_collectives():
+    res = R.parse_collectives(HLO)
+    c = res["counts"]
+    assert c["all-gather"] == 1 and c["all-reduce"] == 1
+    assert c["reduce-scatter"] == 1 and c["collective-permute"] == 1
+    ag = 256 * 288 * 2 * 15 / 16
+    ar = 2 * 128 * 64 * 4 * 3 / 4
+    rs = 8 * 64 * 4 * 7
+    cp = 4 * 4 * 2
+    assert res["per_kind_bytes"]["all-gather"] == pytest.approx(ag)
+    assert res["per_kind_bytes"]["all-reduce"] == pytest.approx(ar)
+    assert res["per_kind_bytes"]["reduce-scatter"] == pytest.approx(rs)
+    assert res["per_kind_bytes"]["collective-permute"] == pytest.approx(cp)
+
+
+def test_extrapolation_linear():
+    p1 = R.ProbeCost(10.0, 100.0, 5.0, {"per_kind_bytes": {
+        k: 1.0 for k in ("all-gather", "all-reduce", "reduce-scatter",
+                         "all-to-all", "collective-permute")},
+        "counts": {}, "total_link_bytes": 5.0})
+    p2 = R.ProbeCost(16.0, 130.0, 8.0, {"per_kind_bytes": {
+        k: 2.0 for k in ("all-gather", "all-reduce", "reduce-scatter",
+                         "all-to-all", "collective-permute")},
+        "counts": {}, "total_link_bytes": 8.0})
+    out = R.extrapolate(p1, p2, n_periods=11)
+    assert out["flops"] == pytest.approx(10 + 10 * 6)
+    assert out["bytes_accessed"] == pytest.approx(100 + 10 * 30)
+    assert out["collective_bytes"] == pytest.approx(5 + 10 * 3)
+
+
+def test_roofline_terms_bottleneck():
+    t = R.roofline_terms({"flops": R.PEAK_FLOPS * 2.0,
+                          "bytes_accessed": R.HBM_BW * 0.5,
+                          "collective_bytes": R.ICI_BW * 0.1})
+    assert t["bottleneck"] == "compute"
+    assert t["step_s_lower_bound"] == pytest.approx(2.0)
+
+
+def test_analytic_flops_match_cost_analysis_trip1():
+    """On a reduced, fully-unrolled config XLA's counted flops must be within
+    2x of the analytic 6*N*D (fwd+bwd, fp32, incl. attention extras)."""
+    from repro.configs import get_config
+    from repro.models import transformer as tf
+
+    cfg = get_config("tinyllama-1.1b", reduced=True)
+    key = jax.random.PRNGKey(0)
+    params = tf.init_lm(key, cfg)
+    b, s = 4, 128
+    batch = {"tokens": jnp.zeros((b, s), jnp.int32),
+             "labels": jnp.zeros((b, s), jnp.int32)}
+
+    fn = jax.jit(lambda p, bb: jax.value_and_grad(
+        lambda q: tf.train_loss(q, bb, cfg, unroll=True, chunk=s))(p))
+    compiled = fn.lower(params, batch).compile()
+    flops = compiled.cost_analysis()["flops"]
+    analytic = 6 * cfg.n_params() * b * s
+    assert 0.5 < flops / analytic < 3.0, (flops, analytic)
+
+
+def test_model_flops_kinds():
+    from repro.configs import INPUT_SHAPES, get_config
+    cfg = get_config("tinyllama-1.1b")
+    tr = R.model_flops(cfg, INPUT_SHAPES["train_4k"], n_chips=256)
+    de = R.model_flops(cfg, INPUT_SHAPES["decode_32k"], n_chips=256)
+    assert tr["model_flops_total"] > de["model_flops_total"]
+    assert de["model_flops_total"] == 2 * cfg.n_active_params() * 128

@@ -1,0 +1,66 @@
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import topology as T
+
+
+ALL = [
+    T.ring(16), T.ring(2), T.ring(3), T.torus(4, 4), T.star(8),
+    T.complete(16), T.social_network(), T.one_peer_exponential(16),
+]
+
+
+@pytest.mark.parametrize("topo", ALL, ids=lambda t: t.name)
+def test_doubly_stochastic(topo):
+    topo.validate()
+    for k in range(topo.mixing.shape[0]):
+        assert T.is_doubly_stochastic(topo.mixing[k])
+
+
+@given(n=st.integers(min_value=2, max_value=64))
+@settings(max_examples=20, deadline=None)
+def test_ring_any_size_doubly_stochastic(n):
+    topo = T.ring(n)
+    topo.validate()
+    w = topo.w()
+    # mean preservation: 1/n 1^T W = 1/n 1^T
+    assert np.allclose(w.T @ np.ones(n), np.ones(n))
+
+
+@given(rows=st.integers(2, 5), cols=st.integers(2, 5))
+@settings(max_examples=15, deadline=None)
+def test_torus_metropolis(rows, cols):
+    topo = T.torus(rows, cols)
+    topo.validate()
+    assert 0.0 < T.spectral_gap(topo.w()) <= 1.0
+
+
+def test_spectral_gap_ordering():
+    # denser graphs mix faster: complete > torus > ring at n=16
+    ring = T.spectral_gap(T.ring(16).w())
+    torus = T.spectral_gap(T.torus(4, 4).w())
+    comp = T.spectral_gap(T.complete(16).w())
+    assert comp > torus > ring > 0
+
+
+def test_social_is_32_nodes():
+    topo = T.social_network()
+    assert topo.n == 32  # 18 women + 14 events (paper's Social Network)
+
+
+def test_exp_graph_time_varying():
+    topo = T.one_peer_exponential(16)
+    assert topo.time_varying and topo.mixing.shape[0] == 4
+    # composing all phases averages fully (exponential graph property)
+    prod = np.eye(16)
+    for k in range(4):
+        prod = topo.mixing[k] @ prod
+    assert np.allclose(prod, np.full((16, 16), 1 / 16), atol=1e-12)
+
+
+def test_get_topology_registry():
+    assert T.get_topology("ring", 16).n == 16
+    assert T.get_topology("social", 32).n == 32
+    with pytest.raises(ValueError):
+        T.get_topology("nope", 4)
