@@ -13,6 +13,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import comm as comm_mod
 from repro.core import optim, topology
 from repro.data import ClientDataset, dirichlet_partition, make_classification
 from repro.train import DecentralizedTrainer, lr_schedule, run_training
@@ -35,7 +36,8 @@ def run_decentralized(
     method: str, *, alpha: float, topo_name: str = "ring", n_nodes: int = 16,
     steps: int = 150, lr: float = 0.1, seed: int = 0, batch: int = 16,
     n_data: int = 4096, noise: float = 2.5, n_classes: int = 20,
-    opt_kwargs: dict | None = None,
+    opt_kwargs: dict | None = None, comm: str | None = None,
+    comm_gamma: float | None = None, comm_ef: bool = False,
 ) -> dict:
     """Train one method; return final metrics + wall time.
 
@@ -66,7 +68,9 @@ def run_decentralized(
     trainer = DecentralizedTrainer(
         loss_fn, opt, topo,
         lr_fn=lr_schedule(lr, total_steps=steps, warmup=max(1, steps // 20),
-                          decay_at=(0.5, 0.75)))
+                          decay_at=(0.5, 0.75)),
+        comm=comm_mod.make_comm(comm, gamma=comm_gamma,
+                                error_feedback=comm_ef))
     state = trainer.init(jax.random.PRNGKey(seed),
                          lambda k: _mlp_init(k, x.shape[1], classes=n_classes))
 
@@ -82,7 +86,7 @@ def run_decentralized(
         return jnp.mean(jnp.argmax(logits, -1) == jnp.asarray(y_test))
 
     accs = jax.vmap(node_acc)(state.params)
-    return {
+    out = {
         "acc": float(jnp.mean(accs)),
         "acc_std_over_nodes": float(jnp.std(accs)),
         "loss": hist[-1]["loss"],
@@ -90,7 +94,23 @@ def run_decentralized(
         "us_per_step": wall / steps * 1e6,
         "steps": steps,
     }
+    if "comm_bits_per_node" in hist[-1]:
+        out["comm_bits_per_node"] = hist[-1]["comm_bits_per_node"]
+        out["comm_ratio"] = hist[-1]["comm_ratio"]
+    return out
+
+
+ROWS: list[dict] = []  # every csv_row also lands here for --json export
 
 
 def csv_row(name: str, us: float, derived: str) -> None:
     print(f"{name},{us:.1f},{derived}")
+    row = {"name": name, "us_per_call": round(us, 1)}
+    for part in derived.split(","):
+        k, _, v = part.partition("=")
+        if _:
+            try:
+                row[k] = float(v)
+            except ValueError:
+                row[k] = v
+    ROWS.append(row)

@@ -10,9 +10,13 @@ runs; ``--only <name>`` selects a single table.
   table6    decentralized Adam variants                        [Table 6]
   fig3      average-consensus speedup                          [Fig. 3]
   fig6      topology scales (ring n in {8,16,32})              [Fig. 6/T7]
+  comm      compressed gossip (CHOCO/EF) vs dense: bytes-on-wire + us/step
   serving   batched prefill+decode throughput (reduced archs)
   kernels   Pallas kernel microbench vs jnp reference
   roofline  aggregate the dry-run artifacts into the §Roofline table
+
+``--json <path>`` additionally writes every row to a machine-readable JSON
+list (``BENCH_*.json`` convention) for trajectory tracking.
 """
 from __future__ import annotations
 
@@ -22,7 +26,7 @@ import json
 import os
 import time
 
-from .common import csv_row, run_decentralized
+from .common import ROWS, csv_row, run_decentralized
 
 
 def table1(quick=False):
@@ -101,6 +105,34 @@ def fig6(quick=False):
                         r["us_per_step"], f"acc={r['acc']:.4f}")
 
 
+def comm(quick=False):
+    """Compressed-gossip table: QG-DSGDm-N under CHOCO / EF compression vs
+    the dense all-gather baseline.  bytes_per_round is per node per step;
+    ratio is dense/compressed bytes-on-wire."""
+    steps = 120 if quick else 300
+    base = run_decentralized("qg_dsgdm_n", alpha=0.1, steps=steps)
+    # dense wire cost: every node ships its full fp32 model once per round
+    csv_row("comm/qg_dsgdm_n/dense", base["us_per_step"],
+            f"acc={base['acc']:.4f},loss={base['loss']:.4f},ratio=1.0")
+    cases = [
+        ("topk:0.05", None, False),   # 10x, the headline operating point
+        ("topk:0.01", None, False),   # ~50x, aggressive
+        ("qsgd:4", None, False),      # 6.4x quantization
+        ("signnorm", None, False),    # ~32x 1-bit
+        ("randk:0.05", None, False),  # 10x unbiased
+        ("signnorm", None, True),     # EF14 value exchange (DeepSqueeze)
+    ]
+    for spec, gamma, ef in cases:
+        r = run_decentralized("qg_dsgdm_n", alpha=0.1, steps=steps,
+                              comm=spec, comm_gamma=gamma, comm_ef=ef)
+        tag = spec.replace(":", "") + ("_ef" if ef else "")
+        csv_row(
+            f"comm/qg_dsgdm_n/{tag}", r["us_per_step"],
+            f"acc={r['acc']:.4f},loss={r['loss']:.4f},"
+            f"ratio={r['comm_ratio']:.1f},"
+            f"bytes_per_round={r['comm_bits_per_node'] / 8:.0f}")
+
+
 def serving(quick=False):
     """Batched-decode throughput on a reduced arch (CPU; the decode_32k
     dry-run bounds the TPU-side numbers)."""
@@ -153,6 +185,21 @@ def kernels(quick=False):
     csv_row("kernels/qg_local_step_pallas_interp", us_k,
             f"jnp_ref_us={us_r:.1f}")
 
+    xc = jax.random.normal(jax.random.fold_in(key, 20), (16, 8192))
+    thr = jnp.quantile(jnp.abs(xc), 0.95, axis=1)
+    us_k = bench(ops.threshold_mask, xc, thr)
+    us_r = bench(jax.jit(lambda *a: ref.threshold_mask_ref(*a)), xc, thr)
+    csv_row("kernels/threshold_mask_pallas_interp", us_k,
+            f"jnp_ref_us={us_r:.1f}")
+
+    scale = jnp.max(jnp.abs(xc), axis=1)
+    u = jax.random.uniform(jax.random.fold_in(key, 21), xc.shape)
+    us_k = bench(ops.quantize_dequantize, xc, scale, u, levels=15)
+    us_r = bench(jax.jit(lambda *a: ref.quantize_dequantize_ref(
+        *a, levels=15)), xc, scale, u)
+    csv_row("kernels/quantize_dequantize_pallas_interp", us_k,
+            f"jnp_ref_us={us_r:.1f}")
+
     b, s, h, kh, d = 1, 512, 8, 4, 64
     q = jax.random.normal(key, (b, s, h, d))
     k = jax.random.normal(jax.random.fold_in(key, 3), (b, s, kh, d))
@@ -200,8 +247,8 @@ def roofline(quick=False):
 
 TABLES = {
     "table1": table1, "table2": table2, "table4": table4, "table5": table5,
-    "table6": table6, "fig3": fig3, "fig6": fig6, "serving": serving,
-    "kernels": kernels, "roofline": roofline,
+    "table6": table6, "fig3": fig3, "fig6": fig6, "comm": comm,
+    "serving": serving, "kernels": kernels, "roofline": roofline,
 }
 
 
@@ -209,11 +256,17 @@ def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="")
     ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--json", default="", metavar="PATH",
+                    help="also write all rows to PATH as a JSON list")
     args = ap.parse_args(argv)
     names = [args.only] if args.only else list(TABLES)
     print("name,us_per_call,derived")
     for n in names:
         TABLES[n](quick=args.quick)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(ROWS, f, indent=1)
+        print(f"# wrote {len(ROWS)} rows to {args.json}")
 
 
 if __name__ == "__main__":

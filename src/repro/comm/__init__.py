@@ -1,0 +1,20 @@
+"""Compressed-communication subsystem (DESIGN.md §4).
+
+Compression for the gossip exchange: compressors (top-k / random-k /
+sign+norm / QSGD), error-feedback residual buffers, and the CHOCO-gossip
+schedule that plugs into the optimizer zoo's ``mix_fn`` hook so any
+decentralized optimizer runs at a fraction of full-gossip bandwidth.
+"""
+from . import choco, compressors, error_feedback
+from .choco import CompressedGossip, count_mix_sites, make_comm
+from .compressors import (Compressor, Identity, QSGD, RandomK, SignNorm,
+                          TopK, make_compressor, tree_wire_bits)
+from .error_feedback import ef21_update, ef_compress, init_residual
+
+__all__ = [
+    "choco", "compressors", "error_feedback",
+    "CompressedGossip", "count_mix_sites", "make_comm",
+    "Compressor", "Identity", "QSGD", "RandomK", "SignNorm", "TopK",
+    "make_compressor", "tree_wire_bits",
+    "ef21_update", "ef_compress", "init_residual",
+]

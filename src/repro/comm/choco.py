@@ -1,0 +1,208 @@
+"""CHOCO-style compressed gossip (Koloskova'19) behind the ``mix_fn`` hook.
+
+Every optimizer in the zoo mixes exclusively through ``mix_fn(w, tree)``
+(core/optim.py), so compression that lives behind that signature upgrades the
+whole zoo — QG-DSGDm(-N) included — without per-algorithm changes.  The only
+thing the hook cannot carry is state, and compressed gossip is stateful: each
+node keeps public replica estimates ``x̂`` (what everyone believes everyone's
+model is) that advance by compressed innovations.
+
+One CHOCO round at a *mix call site* (DESIGN.md §4):
+
+    q      = C(x - x̂ [+ e])          # compressed innovation (EF optional)
+    x̂'     = x̂ + q                   # all replicas advance identically
+    x_out  = x + gamma * (W - I) x̂'  # gossip on the public replicas
+
+``x̂`` is an EF21 estimate (error_feedback.ef21_update); with
+``error_feedback=True`` an EF14 residual ``e`` is folded into the innovation
+before compression instead of being dropped by a biased C.
+
+Stateful-through-a-stateless-hook: an optimizer may call ``mix_fn`` any fixed
+number of times per step (DSGDm-sync and gradient tracking call it twice).
+``capture_mix_targets`` discovers the call sites once at init — a single
+jitted zero-gradient step whose mix hook records each site's tree, which is
+both the site count and the correct per-site warm start — and the trainer
+threads a list of per-site states through its jitted step: the closure
+installed as ``mix_fn`` pops site i's state on the i-th call and deposits
+the new state for the trainer to return (pure within one trace).
+``count_mix_sites`` is the shape-only (eval_shape, no FLOPs) variant when
+just the count is wanted.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import gossip
+
+from . import error_feedback as ef
+from .compressors import Compressor, Identity, make_compressor, tree_wire_bits
+
+PyTree = Any
+
+__all__ = ["CompressedGossip", "capture_mix_targets", "count_mix_sites",
+           "make_comm"]
+
+
+def count_mix_sites(optimizer, params: PyTree, w, *, lr: float = 0.1) -> int:
+    """Number of times ``optimizer.step`` invokes its mix hook (traced
+    abstractly — no FLOPs)."""
+    counter = [0]
+
+    def counting_mix(w_, tree):
+        counter[0] += 1
+        return tree
+
+    opt = dataclasses.replace(optimizer, mix_fn=counting_mix)
+    grads = jax.tree.map(jnp.zeros_like, params)
+    opt_state = opt.init(params)
+    jax.eval_shape(
+        lambda p, g, s: opt.step(p, g, s, w=jnp.asarray(w, jnp.float32),
+                                 lr=lr, t=0),
+        params, grads, opt_state)
+    return counter[0]
+
+
+def capture_mix_targets(optimizer, params: PyTree, w, *,
+                        lr: float = 0.1) -> list[PyTree]:
+    """The tree each mix call site receives on a zero-gradient first step —
+    the correct t=0 warm start per site.  Params-mixing sites see x^0;
+    buffer-mixing sites (gradient tracker, synced momentum) see their zero
+    init, NOT x^0.  Identity mixing is exact here: every node starts from
+    the same broadcast x^0, so W contracts params (and zero buffers) to
+    themselves on the real first step too."""
+    def run(p, g, s):
+        targets: list[PyTree] = []
+
+        def capturing_mix(w_, tree):
+            targets.append(tree)
+            return tree
+
+        opt = dataclasses.replace(optimizer, mix_fn=capturing_mix)
+        opt.step(p, g, s, w=jnp.asarray(w, jnp.float32), lr=lr, t=0)
+        return targets
+
+    grads = jax.tree.map(jnp.zeros_like, params)
+    return jax.jit(run)(params, grads, optimizer.init(params))
+
+
+@dataclasses.dataclass(frozen=True)
+class CompressedGossip:
+    """Compressed-gossip schedule: compressor + consensus step size gamma.
+
+    ``gamma=None`` resolves to the contraction-aware heuristic
+    ``min(1, max(delta, sqrt(delta)/2))`` — close to 1 for mild compression,
+    shrinking with the contraction factor for aggressive sparsification
+    (CHOCO's stability requirement; the exact theoretical gamma* is far more
+    conservative than practice needs).
+    """
+
+    compressor: Compressor = dataclasses.field(default_factory=Identity)
+    gamma: float | None = None
+    error_feedback: bool = False
+    warm_start: bool = True
+
+    # -- state ---------------------------------------------------------------
+    def init_site(self, tree: PyTree) -> dict:
+        """Fresh site state.
+
+        CHOCO mode: replica estimates x̂.  ``warm_start`` seeds them with the
+        actual initial value instead of CHOCO's x̂_0 = 0: every node starts
+        from the same broadcast x^0 (the paper's setup), so x̂_0 = x^0 is
+        known to all for free and removes the giant first innovation a coarse
+        compressor would otherwise have to ship.
+
+        EF mode: only the EF14 residual — no replicas (half the state).
+        """
+        if self.error_feedback:
+            return {"residual": ef.init_residual(tree)}
+        if self.warm_start:
+            return {"x_hat": jax.tree.map(jnp.array, tree)}
+        return {"x_hat": jax.tree.map(jnp.zeros_like, tree)}
+
+    def init_state(self, optimizer, params: PyTree, w) -> list[dict]:
+        """One site state per mix call the optimizer makes per step, each
+        warm-started with the tree *that site* actually mixes at t=0 (a
+        momentum/tracker site starts at zeros, not x^0)."""
+        targets = capture_mix_targets(optimizer, params, w)
+        return [self.init_site(t) for t in targets]
+
+    # -- constants -----------------------------------------------------------
+    def resolved_gamma(self, tree: PyTree) -> float:
+        if self.gamma is not None:
+            return float(self.gamma)
+        leaves = jax.tree.leaves(tree)
+        ds = [max(int(l.size // l.shape[0]), 1) for l in leaves]
+        if not ds:
+            return 1.0
+        return float(min(self.compressor.default_gamma(d) for d in ds))
+
+    def wire_bits_per_site(self, tree: PyTree) -> float:
+        return tree_wire_bits(self.compressor, tree)
+
+    # -- one compressed gossip round ------------------------------------------
+    def mix_site(self, w, tree: PyTree, site: dict, *, key,
+                 gamma: float) -> tuple[PyTree, dict]:
+        """One compressed gossip round at this call site.  Pure.
+
+        CHOCO mode (default): EF21 replica tracking — the x̂ lag *is* the
+        error memory, so no separate residual may be stacked on top (doing
+        both double-counts the unsent mass and diverges).
+
+        EF mode: DeepSqueeze-style error-compensated value exchange — each
+        node ships q = C(x + e), keeps e' = x + e - q, and gossips directly
+        on the compressed values:  x <- x + gamma * (W - I) q.  Telescoping
+        means dropped mass is only delayed, never lost.
+        """
+        if self.error_feedback:
+            q, new_residual = ef.ef_compress(
+                self.compressor, key, tree, site["residual"])
+            new_site = {"residual": new_residual}
+            anchor = q
+        else:
+            new_x_hat, _ = ef.ef21_update(self.compressor, key, tree,
+                                          site["x_hat"])
+            new_site = {"x_hat": new_x_hat}
+            anchor = new_x_hat
+        mixed = gossip.mix_dense(w, anchor)
+        out = jax.tree.map(
+            lambda x, mh, h: x + gamma * (mh - h), tree, mixed, anchor)
+        return out, new_site
+
+    # -- trainer hook ----------------------------------------------------------
+    def make_mix_fn(self, sites_in: list[dict], sites_out: list[dict],
+                    key, gamma: float):
+        """Closure implementing the ``mix_fn`` signature.  The i-th call
+        consumes ``sites_in[i]`` and writes ``sites_out[i]``; the caller
+        returns ``sites_out`` from its traced step."""
+        counter = [0]
+
+        def comm_mix(w, tree):
+            i = counter[0]
+            counter[0] += 1
+            if i >= len(sites_in):
+                raise RuntimeError(
+                    f"optimizer made {i + 1} mix calls but comm state has "
+                    f"{len(sites_in)} sites — re-init the trainer state")
+            out, new_site = self.mix_site(
+                w, tree, sites_in[i], key=jax.random.fold_in(key, i),
+                gamma=gamma)
+            sites_out[i] = new_site
+            return out
+
+        return comm_mix
+
+
+def make_comm(spec: str, *, gamma: float | None = None,
+              error_feedback: bool = False,
+              backend: str = "jnp") -> CompressedGossip | None:
+    """'dense'/''/None -> None (no comm wrapping); otherwise a
+    CompressedGossip from a compressor spec string like 'topk:0.01'."""
+    if not spec or spec.lower() in ("dense", "none"):
+        return None
+    return CompressedGossip(
+        compressor=make_compressor(spec, backend=backend), gamma=gamma,
+        error_feedback=error_feedback)

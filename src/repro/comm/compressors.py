@@ -1,0 +1,319 @@
+"""Gossip-message compressors over node-stacked pytrees.
+
+Every compressor maps a node-stacked leaf ``x[n_nodes, ...]`` to the dense
+*decompressed* value each neighbour would reconstruct after receiving the
+compressed wire message (the simulation analogue of encode->send->decode).
+Compression is applied per node and per leaf on the flattened feature axis,
+so a leaf ``[n, ...]`` is treated as ``n`` independent messages of
+``d = prod(shape[1:])`` elements.
+
+Two families, with the constants CHOCO/EF theory needs exposed as methods:
+
+* **contractive** (top-k, sign+norm): ``E||C(x) - x||^2 <= (1-delta)||x||^2``
+  with ``delta = self.delta(d) in (0, 1]``.
+* **unbiased** (random-k, QSGD): ``E[C(x)] = x`` and
+  ``E||C(x) - x||^2 <= omega ||x||^2`` with ``omega = self.omega(d)``.
+  ``C/(1+omega)`` is then contractive with ``delta = 1/(1+omega)`` —
+  that is what ``contractive_compress`` returns, and what CHOCO consumes.
+
+``wire_bits(d)`` is the wire cost (bits) of one compressed d-element message;
+the dense baseline is ``32 * d``.  The `comm` benchmark table divides the two.
+
+Hot paths (threshold+mask+residual, quantize/dequantize) can be routed
+through the fused Pallas kernels in ``repro.kernels.compress`` with
+``backend='pallas'``; the default 'jnp' path is the reference semantics
+(`kernels/ref.py`) and is what the parity tests pin the kernels against.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+__all__ = [
+    "Compressor", "Identity", "TopK", "RandomK", "SignNorm", "QSGD",
+    "make_compressor", "tree_wire_bits",
+]
+
+_TINY = 1e-12
+
+
+def _as_2d(x: jax.Array) -> jax.Array:
+    """[n, ...] -> [n, d] (node-stacked message matrix)."""
+    return x.reshape(x.shape[0], -1)
+
+
+@dataclasses.dataclass(frozen=True)
+class Compressor:
+    """Base compressor.  Subclasses implement ``compress_2d``; the pytree
+    plumbing, residuals and contraction damping live here."""
+
+    backend: str = "jnp"  # 'jnp' | 'pallas'
+    name: str = "identity"
+    unbiased: bool = False
+
+    # -- per-message (2D) implementation -----------------------------------
+    def compress_2d(self, key, x2d: jax.Array) -> jax.Array:
+        raise NotImplementedError
+
+    def compress_2d_with_residual(self, key, x2d: jax.Array):
+        """(C(x), x - C(x)); kernel-backed compressors override this so the
+        fused Pallas residual output is consumed instead of recomputed."""
+        q = self.compress_2d(key, x2d)
+        return q, x2d.astype(q.dtype) - q
+
+    # -- constants ----------------------------------------------------------
+    def delta(self, d: int) -> float:
+        """Contraction factor of ``contractive_compress`` on d-element
+        messages: E||C(x)-x||^2 <= (1-delta)||x||^2."""
+        if self.unbiased:
+            return 1.0 / (1.0 + self.omega(d))
+        raise NotImplementedError
+
+    def omega(self, d: int) -> float:
+        """Relative variance bound for unbiased compressors."""
+        raise NotImplementedError(f"{self.name} is biased; use delta()")
+
+    def wire_bits(self, d: int) -> float:
+        """Bits on the wire for one compressed d-element message."""
+        raise NotImplementedError
+
+    def default_gamma(self, d: int) -> float:
+        """Practical CHOCO consensus step size for this compressor (tuned on
+        the heterogeneous harness; the theoretical gamma* is far smaller than
+        anything practice needs — see EXPERIMENTS/comm sweep)."""
+        return min(1.0, self.delta(d))
+
+    # -- pytree API ----------------------------------------------------------
+    def compress(self, key, tree: PyTree) -> PyTree:
+        """Dense simulation of one encode->decode round, leaf by leaf."""
+        leaves, treedef = jax.tree.flatten(tree)
+        keys = jax.random.split(key, max(len(leaves), 1))
+        out = [
+            self.compress_2d(k, _as_2d(leaf)).reshape(leaf.shape).astype(leaf.dtype)
+            for k, leaf in zip(keys, leaves)
+        ]
+        return jax.tree.unflatten(treedef, out)
+
+    def compress_with_residual(self, key, tree: PyTree) -> tuple[PyTree, PyTree]:
+        """(C(tree), tree - C(tree)) in one pass — the EF14 hot path."""
+        leaves, treedef = jax.tree.flatten(tree)
+        keys = jax.random.split(key, max(len(leaves), 1))
+        qs, rs = [], []
+        for k, leaf in zip(keys, leaves):
+            q2d, r2d = self.compress_2d_with_residual(k, _as_2d(leaf))
+            qs.append(q2d.reshape(leaf.shape).astype(leaf.dtype))
+            rs.append(r2d.reshape(leaf.shape).astype(leaf.dtype))
+        return jax.tree.unflatten(treedef, qs), jax.tree.unflatten(treedef, rs)
+
+    def contractive_compress(self, key, tree: PyTree) -> PyTree:
+        """The operator CHOCO consumes: C itself when biased-contractive,
+        C/(1+omega) when unbiased (standard damping; Koloskova'19 Rem. 3)."""
+        q = self.compress(key, tree)
+        if not self.unbiased:
+            return q
+        leaves = jax.tree.leaves(tree)
+        if not leaves:
+            return q
+        # per-leaf damping so each message is individually contractive
+        def damp(ql, xl):
+            d = int(ql.size // ql.shape[0]) if ql.ndim else 1
+            return ql / (1.0 + self.omega(max(d, 1)))
+        return jax.tree.map(damp, q, tree)
+
+
+@dataclasses.dataclass(frozen=True)
+class Identity(Compressor):
+    """Dense baseline — full-precision messages, no compression."""
+
+    name: str = "dense"
+    unbiased: bool = True
+
+    def compress_2d(self, key, x2d):
+        return x2d
+
+    def omega(self, d):
+        return 0.0
+
+    def delta(self, d):
+        return 1.0
+
+    def wire_bits(self, d):
+        return 32.0 * d
+
+
+@dataclasses.dataclass(frozen=True)
+class TopK(Compressor):
+    """Keep the ceil(frac*d) largest-magnitude entries per message.
+
+    Deterministic and biased; contraction delta = k/d >= frac.  Wire format:
+    k (value, index) pairs -> k * (32 + 32) bits.
+    """
+
+    frac: float = 0.01
+    name: str = "topk"
+    unbiased: bool = False
+
+    def _k(self, d: int) -> int:
+        return max(1, int(math.ceil(self.frac * d)))
+
+    def _threshold(self, x2d: jax.Array) -> jax.Array:
+        """Magnitude of the k-th largest entry per row, shape [n]."""
+        k = self._k(x2d.shape[1])
+        mags = jnp.abs(x2d.astype(jnp.float32))
+        topv = jax.lax.top_k(mags, k)[0]  # [n, k], sorted desc
+        return topv[:, -1]
+
+    def compress_2d(self, key, x2d):
+        return self.compress_2d_with_residual(key, x2d)[0]
+
+    def compress_2d_with_residual(self, key, x2d):
+        thr = self._threshold(x2d)
+        if self.backend == "pallas":
+            from repro.kernels import ops
+            return ops.threshold_mask(x2d, thr)
+        from repro.kernels import ref
+        return ref.threshold_mask_ref(x2d, thr)
+
+    def delta(self, d):
+        return self._k(d) / d
+
+    def default_gamma(self, d):
+        # a gaussian message's top k/d magnitudes carry far more than k/d of
+        # its energy, so a multiple of the worst-case delta is still stable;
+        # piecewise fit of the stability sweep on the heterogeneous harness
+        f = self.delta(d)
+        return min(1.0, max(2.0 * f, 4.0 * f - 0.02))
+
+    def wire_bits(self, d):
+        return self._k(d) * (32.0 + 32.0)
+
+
+@dataclasses.dataclass(frozen=True)
+class RandomK(Compressor):
+    """Bernoulli(frac) sparsification rescaled by 1/frac — unbiased, with
+    omega = (1-frac)/frac.  Wire format ~ frac*d (value, index) pairs."""
+
+    frac: float = 0.05
+    name: str = "randk"
+    unbiased: bool = True
+
+    def compress_2d(self, key, x2d):
+        keep = jax.random.bernoulli(key, self.frac, x2d.shape)
+        return jnp.where(keep, x2d / self.frac, 0.0)
+
+    def omega(self, d):
+        return (1.0 - self.frac) / self.frac
+
+    def default_gamma(self, d):
+        # the damped operator's innovations are tiny (x frac) while the
+        # sampling noise is not — half the contraction factor keeps it stable
+        return min(1.0, 0.5 * self.delta(d))
+
+    def wire_bits(self, d):
+        return self.frac * d * (32.0 + 32.0)
+
+
+@dataclasses.dataclass(frozen=True)
+class SignNorm(Compressor):
+    """Scaled sign: C(x) = (||x||_1 / d) * sign(x)  (1 bit/element + norm).
+
+    Biased; exact error ||C(x)-x||^2 = ||x||^2 - ||x||_1^2/d, so the
+    realized contraction is ||x||_1^2 / (d ||x||^2) — delta() returns the
+    worst-case-over-dense-vectors 1/d bound.
+    """
+
+    name: str = "signnorm"
+    unbiased: bool = False
+
+    def compress_2d(self, key, x2d):
+        xf = x2d.astype(jnp.float32)
+        scale = jnp.mean(jnp.abs(xf), axis=1, keepdims=True)
+        return jnp.sign(xf) * scale
+
+    def delta(self, d):
+        return 1.0 / d
+
+    def default_gamma(self, d):
+        # realized contraction on dense messages is ||x||_1^2/(d||x||^2),
+        # ~2/pi for gaussian entries — nowhere near the 1/d worst case
+        return 0.3
+
+    def wire_bits(self, d):
+        return 1.0 * d + 32.0
+
+
+@dataclasses.dataclass(frozen=True)
+class QSGD(Compressor):
+    """QSGD-style stochastic quantization (Alistarh'17, max-norm variant).
+
+    s = 2^bits - 1 positive levels; q = sign(x) * scale * xi / s with
+    xi = floor(|x|/scale * s + u), u ~ U[0,1) — stochastic rounding, so
+    E[q] = x.  omega <= min(d/s^2, sqrt(d)/s).  Wire format: (bits+1) per
+    element + one fp32 scale.
+    """
+
+    bits: int = 4
+    name: str = "qsgd"
+    unbiased: bool = True
+
+    @property
+    def levels(self) -> int:
+        return 2 ** self.bits - 1
+
+    def compress_2d(self, key, x2d):
+        return self.compress_2d_with_residual(key, x2d)[0]
+
+    def compress_2d_with_residual(self, key, x2d):
+        xf = x2d.astype(jnp.float32)
+        scale = jnp.max(jnp.abs(xf), axis=1)  # [n]
+        u = jax.random.uniform(key, x2d.shape, jnp.float32)
+        if self.backend == "pallas":
+            from repro.kernels import ops
+            return ops.quantize_dequantize(xf, scale, u, levels=self.levels)
+        from repro.kernels import ref
+        return ref.quantize_dequantize_ref(xf, scale, u, levels=self.levels)
+
+    def omega(self, d):
+        s = self.levels
+        return min(d / s ** 2, math.sqrt(d) / s)
+
+    def wire_bits(self, d):
+        return (self.bits + 1.0) * d + 32.0
+
+
+# ---------------------------------------------------------------------------
+# factory + accounting
+# ---------------------------------------------------------------------------
+
+def make_compressor(spec: str, *, backend: str = "jnp") -> Compressor:
+    """Parse 'dense' | 'topk:<frac>' | 'randk:<frac>' | 'signnorm' |
+    'qsgd:<bits>' into a compressor instance."""
+    kind, _, arg = spec.partition(":")
+    kind = kind.strip().lower()
+    if kind in ("dense", "identity", "none"):
+        return Identity(backend=backend)
+    if kind == "topk":
+        return TopK(frac=float(arg or 0.01), backend=backend)
+    if kind == "randk":
+        return RandomK(frac=float(arg or 0.05), backend=backend)
+    if kind == "signnorm":
+        return SignNorm(backend=backend)
+    if kind == "qsgd":
+        return QSGD(bits=int(arg or 4), backend=backend)
+    raise ValueError(f"unknown compressor spec {spec!r}")
+
+
+def tree_wire_bits(compressor: Compressor, tree: PyTree) -> float:
+    """Bits one node puts on the wire to transmit the whole (per-node slice
+    of the) node-stacked ``tree`` once."""
+    total = 0.0
+    for leaf in jax.tree.leaves(tree):
+        d = int(leaf.size // leaf.shape[0]) if leaf.ndim > 0 else 1
+        total += compressor.wire_bits(max(d, 1))
+    return total

@@ -1,0 +1,53 @@
+"""Error-feedback residual buffers for compressed communication.
+
+Two standard flavours, both pure functions over node-stacked pytrees so the
+buffers slot straight into optimizer / trainer state:
+
+* **EF14** (Seide'14 / Stich'18): keep the compression residual and fold it
+  back into the next message.  ``q_t = C(v_t + e_t)``,
+  ``e_{t+1} = v_t + e_t - q_t``.  Telescoping gives
+  ``sum_t q_t + e_T = sum_t v_t`` exactly — no information is ever dropped,
+  only delayed (the property the tests assert).
+
+* **EF21** (Richtarik'21): maintain an estimate ``h`` of a moving target and
+  ship only compressed innovations: ``q_t = C(x_t - h_t)``,
+  ``h_{t+1} = h_t + q_t``.  With a delta-contractive C, ``||x - h||``
+  decays geometrically for a fixed target.  CHOCO's replica variables
+  ``x̂`` are exactly EF21 estimates of the neighbours' models.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .compressors import Compressor
+
+PyTree = Any
+
+__all__ = ["init_residual", "ef_compress", "ef21_update"]
+
+
+def init_residual(tree: PyTree) -> PyTree:
+    """Zero residual buffer shaped like the node-stacked message tree."""
+    return jax.tree.map(jnp.zeros_like, tree)
+
+
+def ef_compress(compressor: Compressor, key, value: PyTree,
+                residual: PyTree) -> tuple[PyTree, PyTree]:
+    """One EF14 round: compress (value + residual), return (q, new_residual).
+    Uses the fused compress+residual path so kernel-backed compressors emit
+    both in a single stream over the tensor."""
+    corrected = jax.tree.map(jnp.add, value, residual)
+    return compressor.compress_with_residual(key, corrected)
+
+
+def ef21_update(compressor: Compressor, key, target: PyTree,
+                estimate: PyTree) -> tuple[PyTree, PyTree]:
+    """One EF21 round: ship q = C_contractive(target - estimate) and advance
+    the estimate.  Returns (new_estimate, q)."""
+    diff = jax.tree.map(jnp.subtract, target, estimate)
+    q = compressor.contractive_compress(key, diff)
+    new_estimate = jax.tree.map(jnp.add, estimate, q)
+    return new_estimate, q

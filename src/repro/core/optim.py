@@ -8,8 +8,11 @@ All optimizers act on *node-stacked* pytrees: each leaf has shape
 where ``grads`` are per-node stochastic gradients evaluated at ``params`` and
 ``W_t`` is the doubly-stochastic mixing matrix for this round (time-varying
 topologies pass a different one each step).  Mixing defaults to the dense
-paper-faithful einsum (`gossip.mix_dense`); a custom ``mix_fn`` (e.g. the
-ring-ppermute schedule) can be injected — algorithms only ever mix through it.
+paper-faithful einsum (`gossip.mix_dense`); a custom ``mix_fn`` (the
+ring-ppermute schedule, or the compressed CHOCO/EF schedules in
+``repro.comm``) can be injected — algorithms only ever mix through it, which
+is what lets compressed communication upgrade the whole zoo at once
+(DESIGN.md §4).
 
 Implemented (paper reference in brackets):
 
@@ -223,7 +226,7 @@ class QHM(DecentralizedOptimizer):
         x <- x - eta ((1 - mu/beta_hat) m + (mu/beta_hat) g)
 
     Used as the paper-faithful optimizer when n_nodes == 1 (e.g. the two
-    architectures whose per-node copies exceed HBM; DESIGN.md §4)."""
+    architectures whose per-node copies exceed HBM; DESIGN.md §5)."""
 
     beta: float = 0.9
     mu: float | None = None

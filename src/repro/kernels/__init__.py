@@ -1,11 +1,13 @@
 """Pallas TPU kernels (validated in interpret mode on CPU):
 
   qg_update        fused quasi-global momentum update (the paper's hot loop)
+  compress         fused gossip compression (threshold+mask+residual, QSGD)
   flash_attention  causal GQA flash attention (window / softcap)
   ssd_scan         Mamba-2 SSD chunked scan
 
 Each kernel ships a pure-jnp oracle in ref.py and a jit'd wrapper in ops.py.
 """
-from . import flash_attention, ops, qg_update, ref, ssd_scan
+from . import compress, flash_attention, ops, qg_update, ref, ssd_scan
 
-__all__ = ["flash_attention", "ops", "qg_update", "ref", "ssd_scan"]
+__all__ = ["compress", "flash_attention", "ops", "qg_update", "ref",
+           "ssd_scan"]

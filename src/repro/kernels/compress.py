@@ -1,0 +1,95 @@
+"""Fused compression kernels for the comm subsystem — Pallas TPU.
+
+Compressed gossip (comm/choco.py) runs every step over every parameter, so
+like the QG update it is an HBM-bandwidth-bound streaming pass.  Unfused,
+mask-apply / quantize and the residual each re-read the tensor; these kernels
+stream each [node, feature] message tile through VMEM exactly once and emit
+both the compressed value and the residual in the same pass:
+
+  * ``threshold_mask``       q = x * [|x| >= thr_row],  r = x - q
+    (the top-k hot path: the per-row k-th-magnitude threshold is a tiny
+    [rows] reduction done outside; the O(d) mask+residual is the fused part)
+  * ``quantize_dequantize``  QSGD stochastic quantize->dequantize + residual,
+    q = sign(x) * scale * min(floor(|x|/scale*L + u), L) / L
+
+Grid layout follows qg_update.py: (rows, feature-tiles) over VMEM blocks of
+the flattened per-node message; per-row scalars (threshold / scale) ride in
+[rows, 1] blocks.  Oracles: ``ref.threshold_mask_ref`` /
+``ref.quantize_dequantize_ref``; parity is pinned in tests/test_comm.py,
+including non-tile-multiple shapes.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE = 16 * 1024  # fp32 lanes per block: 64 KiB/operand, 5 operands < 1 MiB
+
+_TINY = 1e-12
+
+
+def _threshold_mask_kernel(x_ref, thr_ref, q_ref, r_ref):
+    x = x_ref[...]
+    thr = thr_ref[0, 0]
+    q = jnp.where(jnp.abs(x) >= thr, x, 0.0)
+    q_ref[...] = q
+    r_ref[...] = x - q
+
+
+def _qdq_kernel(x_ref, s_ref, u_ref, q_ref, r_ref, *, levels):
+    x = x_ref[...]
+    s = jnp.maximum(s_ref[0, 0], _TINY)
+    y = jnp.abs(x) * (levels / s)
+    xi = jnp.minimum(jnp.floor(y + u_ref[...]), levels)
+    q = jnp.sign(x) * xi * (s / levels)
+    q_ref[...] = q
+    r_ref[...] = x - q
+
+
+def _rowwise_call(kernel, x2d, row_scalars, extras, *, interpret):
+    """Launch over (rows, feature-tiles); ``row_scalars`` are [rows] values
+    broadcast per row, ``extras`` are [rows, f] element-wise operands."""
+    rows, f = x2d.shape
+    tile = min(TILE, max(128, f))
+    pad = (-f) % tile
+    full = [x2d.astype(jnp.float32)] + [e.astype(jnp.float32) for e in extras]
+    if pad:
+        full = [jnp.pad(a, ((0, 0), (0, pad))) for a in full]
+    scal = [s.reshape(rows, 1).astype(jnp.float32) for s in row_scalars]
+
+    grid = (rows, full[0].shape[1] // tile)
+    full_spec = pl.BlockSpec((1, tile), lambda i, j: (i, j))
+    scal_spec = pl.BlockSpec((1, 1), lambda i, j: (i, 0))
+    out_shape = jax.ShapeDtypeStruct(full[0].shape, jnp.float32)
+    # operand order: x, row-scalars, element-wise extras
+    q, r = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[full_spec] + [scal_spec] * len(scal)
+                 + [full_spec] * len(extras),
+        out_specs=(full_spec, full_spec),
+        out_shape=(out_shape, out_shape),
+        interpret=interpret,
+    )(full[0], *scal, *full[1:])
+    return q[:, :f], r[:, :f]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def threshold_mask(x2d, thr, *, interpret: bool = True):
+    """Fused magnitude-threshold sparsification.  x2d [rows, f]; thr [rows]
+    (k-th largest |x| per row).  Returns (kept, residual), fp32."""
+    return _rowwise_call(_threshold_mask_kernel, x2d, [thr], [],
+                         interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("levels", "interpret"))
+def quantize_dequantize(x2d, scale, u, *, levels: int,
+                        interpret: bool = True):
+    """Fused QSGD stochastic quantize->dequantize.  x2d [rows, f];
+    scale [rows] (max |x| per row); u [rows, f] uniform in [0, 1).
+    Returns (dequantized, residual), fp32."""
+    kernel = functools.partial(_qdq_kernel, levels=levels)
+    return _rowwise_call(kernel, x2d, [scale], [u], interpret=interpret)

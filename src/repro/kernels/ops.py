@@ -11,6 +11,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from . import compress as _cmp
 from . import flash_attention as _fa
 from . import qg_update as _qg
 from . import ssd_scan as _ssd
@@ -29,6 +30,18 @@ def qg_local_step(x, m_hat, g, *, eta, beta, nesterov=False, interpret=None):
 def qg_buffer_update(x_old, x_new, m_hat, *, eta, mu, interpret=None):
     return _qg.qg_buffer_update(
         x_old, x_new, m_hat, eta=eta, mu=mu,
+        interpret=_default_interpret() if interpret is None else interpret)
+
+
+def threshold_mask(x2d, thr, *, interpret=None):
+    return _cmp.threshold_mask(
+        x2d, thr,
+        interpret=_default_interpret() if interpret is None else interpret)
+
+
+def quantize_dequantize(x2d, scale, u, *, levels, interpret=None):
+    return _cmp.quantize_dequantize(
+        x2d, scale, u, levels=levels,
         interpret=_default_interpret() if interpret is None else interpret)
 
 

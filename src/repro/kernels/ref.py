@@ -30,6 +30,30 @@ def qg_buffer_update_ref(x_old, x_new, m_hat, *, eta: float,
 
 
 # ---------------------------------------------------------------------------
+# compress — fused gossip-compression hot paths (comm subsystem)
+# ---------------------------------------------------------------------------
+
+def threshold_mask_ref(x2d, thr):
+    """Magnitude-threshold sparsification with residual.  x2d [rows, f];
+    thr [rows].  Returns (kept, residual) in fp32."""
+    x = x2d.astype(jnp.float32)
+    q = jnp.where(jnp.abs(x) >= thr.astype(jnp.float32)[:, None], x, 0.0)
+    return q, x - q
+
+
+def quantize_dequantize_ref(x2d, scale, u, *, levels: int):
+    """QSGD stochastic quantize->dequantize with residual.  x2d [rows, f];
+    scale [rows] (max |x| per row); u [rows, f] uniform in [0, 1);
+    q = sign(x) * scale * min(floor(|x|/scale*L + u), L) / L."""
+    x = x2d.astype(jnp.float32)
+    s = jnp.maximum(scale.astype(jnp.float32), 1e-12)[:, None]
+    y = jnp.abs(x) * (levels / s)
+    xi = jnp.minimum(jnp.floor(y + u.astype(jnp.float32)), levels)
+    q = jnp.sign(x) * xi * (s / levels)
+    return q, x - q
+
+
+# ---------------------------------------------------------------------------
 # flash_attention — causal GQA attention (optional window / softcap)
 # ---------------------------------------------------------------------------
 

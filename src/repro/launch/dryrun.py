@@ -159,7 +159,7 @@ def run_combo(arch: str, shape_name: str, mesh_name: str, *,
     shape = INPUT_SHAPES[shape_name]
 
     if shape.name == "long_500k" and not cfg.supports_long_context:
-        return None  # documented skip (DESIGN.md §4)
+        return None  # documented skip (DESIGN.md §5)
 
     suffix = "" if gossip_schedule == "dense" else f"__{gossip_schedule}"
     if variant:

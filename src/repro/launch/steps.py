@@ -5,7 +5,7 @@ Three step kinds, matching the input shapes:
   train_step   decentralized QG-DSGDm-N step: per-node grads (vmap over the
                node axis) -> local QG half-step -> gossip -> buffer update.
                n_nodes=1 degrades to QHM (paper §4.2) for the two archs whose
-               per-node copies exceed HBM (DESIGN.md §4).
+               per-node copies exceed HBM (DESIGN.md §5).
   prefill_step tokens [B,S] -> (last logits, KV caches)
   decode_step  one token + caches (seq_len capacity) -> (logits, caches)
 
@@ -62,7 +62,7 @@ class StepConfig:
 
 
 def choose_n_nodes(cfg: ModelConfig, mesh) -> int:
-    """Decentralization arity for a mesh (DESIGN.md §4 feasibility table)."""
+    """Decentralization arity for a mesh (DESIGN.md §5 feasibility table)."""
     axes = dict(mesh.shape)
     if "pod" in axes:
         return axes["pod"]  # hierarchical pods-as-clients

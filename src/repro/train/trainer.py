@@ -23,6 +23,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.comm.choco import CompressedGossip
 from repro.core import gossip
 from repro.core.optim import DecentralizedOptimizer
 from repro.core.topology import Topology
@@ -37,6 +38,7 @@ class TrainState:
     opt_state: PyTree
     model_state: PyTree     # [n, ...] (BN stats etc.), not gossiped
     t: jnp.ndarray          # step counter
+    comm_state: PyTree = None  # CHOCO replica/residual sites (DESIGN.md §4)
 
 
 def lr_schedule(base_lr: float, *, total_steps: int, warmup: int = 0,
@@ -69,13 +71,23 @@ class DecentralizedTrainer:
     optimizer: DecentralizedOptimizer
     topology: Topology
     lr_fn: Callable[[Any], Any] = None  # defaults to optimizer.lr constant
+    comm: Optional[CompressedGossip] = None  # compressed gossip (DESIGN.md §4)
 
     def __post_init__(self):
         if self.lr_fn is None:
             lr = self.optimizer.lr
             self.lr_fn = lambda t: jnp.asarray(lr, jnp.float32)
         self._mixing = jnp.asarray(self.topology.mixing, jnp.float32)
+        self._comm_gamma = None   # resolved on first sight of params
+        self._comm_bits = None    # wire bits per site per node per step
         self._step_jit = jax.jit(self._step_impl)
+
+    def _comm_setup(self, params):
+        if self.comm is not None and self._comm_gamma is None:
+            self._comm_gamma = self.comm.resolved_gamma(params)
+            self._comm_bits = self.comm.wire_bits_per_site(params)
+            self._dense_bits = sum(
+                32.0 * l.size / l.shape[0] for l in jax.tree.leaves(params))
 
     # -- init ---------------------------------------------------------------
     def init(self, key, init_fn) -> TrainState:
@@ -88,13 +100,19 @@ class DecentralizedTrainer:
                 x, "shape") else x, tree)
         params_n = stack(params)
         mstate_n = stack(mstate)
+        comm_state = None
+        if self.comm is not None:
+            comm_state = self.comm.init_state(
+                self.optimizer, params_n, self._mixing[0])
         return TrainState(params=params_n,
                           opt_state=self.optimizer.init(params_n),
                           model_state=mstate_n,
-                          t=jnp.zeros((), jnp.int32))
+                          t=jnp.zeros((), jnp.int32),
+                          comm_state=comm_state)
 
     # -- one jitted decentralized step ---------------------------------------
     def step(self, state: TrainState, batch: PyTree, rng):
+        self._comm_setup(state.params)
         return self._step_jit(state, batch, rng)
 
     def _step_impl(self, state: TrainState, batch: PyTree, rng) -> tuple[TrainState, dict]:
@@ -110,7 +128,20 @@ class DecentralizedTrainer:
 
         w = self._mixing[state.t % self._mixing.shape[0]]
         lr = self.lr_fn(state.t)
-        new_params, new_opt = self.optimizer.step(
+
+        opt = self.optimizer
+        new_comm = state.comm_state
+        if self.comm is not None and state.comm_state is not None:
+            # compressed gossip: swap the mix hook for a CHOCO round against
+            # this step's replica states (one site per mix call; DESIGN.md §4)
+            sites_in = list(state.comm_state)
+            sites_out = list(sites_in)
+            comm_key = jax.random.fold_in(rng, 0x0C0)
+            opt = dataclasses.replace(opt, mix_fn=self.comm.make_mix_fn(
+                sites_in, sites_out, comm_key, self._comm_gamma))
+            new_comm = sites_out
+
+        new_params, new_opt = opt.step(
             state.params, grads, state.opt_state, w=w, lr=lr, t=state.t)
 
         out_metrics = {
@@ -121,9 +152,16 @@ class DecentralizedTrainer:
                 jnp.sum(g.astype(jnp.float32) ** 2)
                 for g in jax.tree.leaves(grads)) / n),
         }
+        if self.comm is not None and state.comm_state is not None:
+            n_sites = len(state.comm_state)
+            out_metrics["comm_bits_per_node"] = jnp.asarray(
+                self._comm_bits * n_sites, jnp.float32)
+            out_metrics["comm_ratio"] = jnp.asarray(
+                self._dense_bits / max(self._comm_bits, 1e-9), jnp.float32)
         for k, v in metrics.items():
             out_metrics[k] = jnp.mean(v)
-        return TrainState(new_params, new_opt, new_ms, state.t + 1), out_metrics
+        return TrainState(new_params, new_opt, new_ms, state.t + 1,
+                          new_comm), out_metrics
 
     # -- evaluation -----------------------------------------------------------
     def evaluate(self, state: TrainState, eval_fn, batches) -> dict:

@@ -1,0 +1,80 @@
+"""Tier-1 test bootstrap.
+
+``hypothesis`` is an *optional* test dependency (declared in pyproject's
+``test`` extra).  Several modules hard-import it; when it is absent this
+installs a minimal deterministic stand-in so the suite still collects and
+runs everywhere: ``@given`` expands into a bounded sweep of representative
+values from each strategy (endpoints + midpoint) instead of randomized
+property search.  With real hypothesis installed this file does nothing.
+"""
+from __future__ import annotations
+
+import itertools
+import sys
+import types
+
+
+def _install_hypothesis_stub() -> None:
+    mod = types.ModuleType("hypothesis")
+    strategies = types.ModuleType("hypothesis.strategies")
+
+    class _Strategy:
+        def __init__(self, values):
+            self.values = list(values)
+
+    def sampled_from(seq):
+        return _Strategy(seq)
+
+    def integers(min_value=0, max_value=100):
+        lo, hi = int(min_value), int(max_value)
+        return _Strategy(sorted({lo, (lo + hi) // 2, hi}))
+
+    def floats(min_value=0.0, max_value=1.0, **_):
+        return _Strategy(sorted({float(min_value), (min_value + max_value) / 2.0,
+                                 float(max_value)}))
+
+    def booleans():
+        return _Strategy([False, True])
+
+    def given(*sargs, **skwargs):
+        if sargs:
+            raise TypeError("hypothesis stub supports keyword strategies only")
+
+        def deco(fn):
+            names = list(skwargs)
+            combos = list(itertools.islice(
+                itertools.product(*(skwargs[n].values for n in names)), 16))
+
+            # NOTE: no functools.wraps — copying __wrapped__ would make
+            # pytest inspect the original signature and treat the strategy
+            # parameters as fixtures
+            def wrapper():
+                for combo in combos:
+                    fn(**dict(zip(names, combo)))
+
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            wrapper.hypothesis_stub = True
+            return wrapper
+
+        return deco
+
+    def settings(**_kwargs):
+        return lambda fn: fn
+
+    strategies.sampled_from = sampled_from
+    strategies.integers = integers
+    strategies.floats = floats
+    strategies.booleans = booleans
+    mod.given = given
+    mod.settings = settings
+    mod.strategies = strategies
+    mod.__stub__ = True
+    sys.modules["hypothesis"] = mod
+    sys.modules["hypothesis.strategies"] = strategies
+
+
+try:
+    import hypothesis  # noqa: F401
+except ImportError:  # pragma: no cover - depends on environment
+    _install_hypothesis_stub()

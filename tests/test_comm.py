@@ -1,0 +1,348 @@
+"""Compressed-communication subsystem: compressor contracts (unbiasedness /
+contraction), error-feedback telescoping, CHOCO gossip behaviour, trainer
+integration through the mix_fn hook, and Pallas-kernel parity."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.comm import (CompressedGossip, QSGD, RandomK, SignNorm, TopK,
+                        count_mix_sites, ef_compress, init_residual,
+                        make_comm, make_compressor, tree_wire_bits)
+from repro.core import gossip, optim, topology
+from repro.kernels import compress as pallas_compress
+from repro.kernels import ref
+
+KEY = jax.random.PRNGKey(42)
+
+
+def rnd(shape, k=0):
+    return jax.random.normal(jax.random.fold_in(KEY, k), shape)
+
+
+# ---------------------------------------------------------------------------
+# compressor contracts
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("comp", [RandomK(frac=0.25), QSGD(bits=4)],
+                         ids=["randk", "qsgd4"])
+def test_unbiased_in_expectation(comp):
+    """E[C(x)] = x, estimated over many independent keys."""
+    x = {"w": rnd((2, 31, 7), k=1)}
+    n_trials = 400
+    acc = jax.tree.map(jnp.zeros_like, x)
+    for i in range(n_trials):
+        q = comp.compress(jax.random.fold_in(KEY, 100 + i), x)
+        acc = jax.tree.map(jnp.add, acc, q)
+    mean = jax.tree.map(lambda a: a / n_trials, acc)
+    # standard error of the mean ~ sqrt(omega/n_trials) * |x|
+    d = 31 * 7
+    se = float(np.sqrt(comp.omega(d) / n_trials))
+    err = float(jnp.sqrt(sum(jnp.sum((a - b) ** 2)
+                             for a, b in zip(jax.tree.leaves(mean),
+                                             jax.tree.leaves(x)))))
+    ref_norm = float(jnp.sqrt(sum(jnp.sum(l ** 2)
+                                  for l in jax.tree.leaves(x))))
+    assert err < 6.0 * se * ref_norm + 1e-3
+
+
+@pytest.mark.parametrize("frac", [0.01, 0.1, 0.5])
+def test_topk_contraction(frac):
+    """||C(x) - x||^2 <= (1 - delta) ||x||^2 with delta = k/d, per message."""
+    comp = TopK(frac=frac)
+    x = rnd((4, 997), k=2)
+    q = comp.compress_2d(None, x)
+    err = jnp.sum((q - x) ** 2, axis=1)
+    nrm = jnp.sum(x ** 2, axis=1)
+    delta = comp.delta(997)
+    assert bool(jnp.all(err <= (1.0 - delta) * nrm + 1e-6))
+    # exactly k entries survive (float ties are measure-zero)
+    k = comp._k(997)
+    nnz = jnp.sum(q != 0, axis=1)
+    assert bool(jnp.all(nnz == k))
+
+
+def test_signnorm_contraction_and_scale():
+    comp = SignNorm()
+    x = rnd((3, 513), k=3)
+    q = comp.compress_2d(None, x)
+    # error strictly contracts on dense gaussian messages
+    err = jnp.sum((q - x) ** 2, axis=1)
+    nrm = jnp.sum(x ** 2, axis=1)
+    assert bool(jnp.all(err < nrm))
+    # transmitted magnitude is the per-row l1/d scale
+    scale = jnp.mean(jnp.abs(x), axis=1, keepdims=True)
+    np.testing.assert_allclose(np.abs(np.asarray(q)),
+                               np.broadcast_to(np.asarray(scale), q.shape),
+                               rtol=1e-5)
+
+
+def test_qsgd_levels_quantized():
+    """Dequantized values land exactly on the scale*i/levels grid."""
+    comp = QSGD(bits=2)  # 3 levels
+    x = rnd((2, 257), k=4)
+    q = comp.compress_2d(jax.random.fold_in(KEY, 5), x)
+    scale = jnp.max(jnp.abs(x), axis=1, keepdims=True)
+    grid = jnp.abs(q) / (scale / comp.levels)
+    np.testing.assert_allclose(np.asarray(grid), np.round(np.asarray(grid)),
+                               atol=1e-4)
+
+
+def test_wire_bits_ordering():
+    """Compression ratios: topk:0.01 ~ 50x, signnorm ~ 32x, qsgd4 ~ 6.4x."""
+    tree = {"w": jnp.zeros((4, 100, 100)), "b": jnp.zeros((4, 100))}
+    dense = tree_wire_bits(make_compressor("dense"), tree)
+    assert dense == 32.0 * (100 * 100 + 100)
+    for spec, lo, hi in [("topk:0.01", 40, 55), ("signnorm", 25, 35),
+                         ("qsgd:4", 6, 7), ("randk:0.05", 9, 11)]:
+        ratio = dense / tree_wire_bits(make_compressor(spec), tree)
+        assert lo < ratio < hi, (spec, ratio)
+
+
+# ---------------------------------------------------------------------------
+# error feedback
+# ---------------------------------------------------------------------------
+
+def test_ef_residual_telescopes():
+    """sum_t q_t + e_T = sum_t v_t exactly — EF never loses mass."""
+    comp = TopK(frac=0.1)
+    vals = [{"w": rnd((2, 101), k=10 + t)} for t in range(8)]
+    e = init_residual(vals[0])
+    sent = jax.tree.map(jnp.zeros_like, vals[0])
+    for t, v in enumerate(vals):
+        q, e = ef_compress(comp, jax.random.fold_in(KEY, 50 + t), v, e)
+        sent = jax.tree.map(jnp.add, sent, q)
+    total = jax.tree.map(lambda *xs: sum(xs), *vals)
+    recon = jax.tree.map(jnp.add, sent, e)
+    np.testing.assert_allclose(np.asarray(recon["w"]),
+                               np.asarray(total["w"]), atol=1e-4)
+
+
+def test_ef21_estimate_tracks_fixed_target():
+    """||x - x_hat|| decays geometrically for a contractive compressor."""
+    from repro.comm import ef21_update
+    comp = TopK(frac=0.2)
+    target = {"w": rnd((3, 200), k=20)}
+    est = jax.tree.map(jnp.zeros_like, target)
+    errs = []
+    for t in range(12):
+        est, _ = ef21_update(comp, jax.random.fold_in(KEY, 60 + t),
+                             target, est)
+        errs.append(float(jnp.linalg.norm(est["w"] - target["w"])))
+    assert errs[-1] < 0.05 * errs[0]
+    assert all(b <= a + 1e-6 for a, b in zip(errs, errs[1:]))
+
+
+# ---------------------------------------------------------------------------
+# CHOCO gossip
+# ---------------------------------------------------------------------------
+
+def test_count_mix_sites_across_zoo():
+    p = {"w": jnp.zeros((4, 8, 3)), "b": jnp.zeros((4, 3))}
+    w = topology.ring(4).w()
+    expected = {"dsgd": 1, "qg_dsgdm_n": 1, "dadam": 1, "gt": 2,
+                "dsgdm_sync": 2, "qhm": 0}
+    for name, n_sites in expected.items():
+        opt = optim.make_optimizer(name, lr=0.1)
+        assert count_mix_sites(opt, p, w) == n_sites, name
+
+
+def test_warm_start_is_per_site_target():
+    """gt's first mix site carries the (zero-initialized) gradient tracker:
+    its replicas must warm-start at zero, not at x^0 — warm-starting a
+    buffer site with params would force a full-model-norm innovation
+    through the compressor for hundreds of steps."""
+    from repro.comm.choco import capture_mix_targets
+    p = {"w": jnp.ones((4, 6, 2)), "b": jnp.ones((4, 2))}
+    w = topology.ring(4).w()
+    opt = optim.make_optimizer("gt", lr=0.1)
+    targets = capture_mix_targets(opt, p, w)
+    assert len(targets) == 2
+    assert float(jnp.abs(targets[0]["w"]).max()) == 0.0   # tracker y site
+    np.testing.assert_allclose(np.asarray(targets[1]["w"]),
+                               np.asarray(p["w"]))        # params site
+    comm = CompressedGossip(compressor=TopK(frac=0.1))
+    sites = comm.init_state(opt, p, w)
+    assert float(jnp.abs(sites[0]["x_hat"]["w"]).max()) == 0.0
+    np.testing.assert_allclose(np.asarray(sites[1]["x_hat"]["w"]),
+                               np.asarray(p["w"]))
+
+
+@pytest.mark.parametrize("ef", [False, True], ids=["choco", "ef14"])
+def test_compressed_gossip_reaches_consensus(ef):
+    """Repeated compressed mixing of static disagreeing nodes converges
+    toward consensus without moving the mean."""
+    comm = CompressedGossip(compressor=TopK(frac=0.3), error_feedback=ef,
+                            warm_start=False)
+    topo = topology.ring(8)
+    w = jnp.asarray(topo.w(), jnp.float32)
+    x = {"w": rnd((8, 64), k=30)}
+    site = comm.init_site(x)
+    # EF14 value exchange converges to a residual-noise neighbourhood that
+    # shrinks with gamma; CHOCO tracks exactly, so its default gamma is fine
+    gamma = 0.3 if ef else comm.resolved_gamma(x)
+    mean0 = jnp.mean(x["w"], axis=0)
+    d0 = float(gossip.consensus_distance(x))
+    for t in range(150):
+        x, site = comm.mix_site(w, x, site, key=jax.random.fold_in(KEY, t),
+                                gamma=gamma)
+    dT = float(gossip.consensus_distance(x))
+    assert dT < 0.15 * d0
+    np.testing.assert_allclose(np.asarray(jnp.mean(x["w"], axis=0)),
+                               np.asarray(mean0), atol=1e-4)
+
+
+def test_choco_dense_compressor_matches_mix_dense_at_gamma_one():
+    """With the identity compressor, warm replicas and gamma=1, one CHOCO
+    round IS the paper's dense gossip."""
+    comm = CompressedGossip(compressor=make_compressor("dense"), gamma=1.0)
+    topo = topology.ring(6)
+    w = jnp.asarray(topo.w(), jnp.float32)
+    x = {"w": rnd((6, 33), k=40)}
+    site = comm.init_site(x)
+    out, _ = comm.mix_site(w, x, site, key=KEY, gamma=1.0)
+    expect = gossip.mix_dense(w, x)
+    np.testing.assert_allclose(np.asarray(out["w"]),
+                               np.asarray(expect["w"]), atol=1e-5)
+
+
+def test_make_comm_specs():
+    assert make_comm(None) is None
+    assert make_comm("") is None
+    assert make_comm("dense") is None
+    c = make_comm("topk:0.02", gamma=0.1, error_feedback=True)
+    assert isinstance(c.compressor, TopK) and c.compressor.frac == 0.02
+    assert c.gamma == 0.1 and c.error_feedback
+    with pytest.raises(ValueError):
+        make_comm("bogus:1")
+
+
+# ---------------------------------------------------------------------------
+# trainer integration (the acceptance path)
+# ---------------------------------------------------------------------------
+
+def _toy_task(n_nodes=8, alpha=0.1):
+    from repro.data import (ClientDataset, dirichlet_partition,
+                            make_classification)
+    x, y = make_classification(n=512, hw=8, seed=0)
+    x = x.reshape(len(x), -1)
+    parts = dirichlet_partition(y, n_nodes, alpha, seed=0)
+    ds = ClientDataset((x, y), parts, batch=16, seed=0)
+
+    def init_fn(key):
+        k1, k2 = jax.random.split(key)
+        return ({"w1": jax.random.normal(k1, (x.shape[1], 32)) * 0.05,
+                 "b1": jnp.zeros(32),
+                 "w2": jax.random.normal(k2, (32, 10)) * 0.1,
+                 "b2": jnp.zeros(10)}, {})
+
+    def loss_fn(p, ms, batch, rng):
+        xb, yb = batch
+        h = jax.nn.relu(xb @ p["w1"] + p["b1"])
+        logits = h @ p["w2"] + p["b2"]
+        yb = yb.astype(jnp.int32)
+        ce = jnp.mean(jax.nn.logsumexp(logits, -1) -
+                      jnp.take_along_axis(logits, yb[:, None], -1)[:, 0])
+        return ce, ({}, {})
+
+    return ds, init_fn, loss_fn
+
+
+def test_trainer_with_compressed_gossip_trains():
+    from repro.train import DecentralizedTrainer, run_training
+    ds, init_fn, loss_fn = _toy_task()
+    tr = DecentralizedTrainer(
+        loss_fn, optim.make_optimizer("qg_dsgdm_n", lr=0.05),
+        topology.ring(8), comm=make_comm("topk:0.05", gamma=0.2))
+    st = tr.init(jax.random.PRNGKey(0), init_fn)
+    assert st.comm_state is not None and len(st.comm_state) == 1
+    st, hist = run_training(tr, st, iter(lambda: ds.next_batch(), None), 80,
+                            log_every=40, log_fn=lambda *_: None)
+    assert hist[-1]["loss"] < 1.0
+    assert hist[-1]["comm_ratio"] > 9.9
+    # replica state advanced away from its warm start
+    x_hat = st.comm_state[0]["x_hat"]["w1"]
+    assert float(jnp.linalg.norm(x_hat)) > 0
+
+
+def test_trainer_compressed_within_tolerance_of_dense():
+    """Acceptance: QG-DSGDm with >=10x compression stays close to the dense
+    baseline on the heterogeneous task."""
+    from repro.train import DecentralizedTrainer, run_training
+    ds, init_fn, loss_fn = _toy_task()
+
+    def run(comm):
+        ds_, init_fn_, loss_fn_ = _toy_task()
+        tr = DecentralizedTrainer(
+            loss_fn_, optim.make_optimizer("qg_dsgdm", lr=0.05),
+            topology.ring(8), comm=comm)
+        st = tr.init(jax.random.PRNGKey(0), init_fn_)
+        st, hist = run_training(tr, st, iter(lambda: ds_.next_batch(), None),
+                                120, log_every=60, log_fn=lambda *_: None)
+        return hist[-1]["loss"]
+
+    dense = run(None)
+    comp = run(make_comm("topk:0.05", gamma=0.2))
+    assert comp <= dense + 0.05 * max(dense, 1.0)
+
+
+def test_gt_two_sites_compressed():
+    """Gradient tracking makes two mix calls per step — both get their own
+    replica state and the run stays finite."""
+    from repro.train import DecentralizedTrainer, run_training
+    ds, init_fn, loss_fn = _toy_task(n_nodes=4)
+    tr = DecentralizedTrainer(
+        loss_fn, optim.make_optimizer("gt", lr=0.05),
+        topology.ring(4), comm=make_comm("qsgd:6"))
+    st = tr.init(jax.random.PRNGKey(0), init_fn)
+    assert len(st.comm_state) == 2
+    st, hist = run_training(tr, st, iter(lambda: ds.next_batch(), None), 20,
+                            log_every=10, log_fn=lambda *_: None)
+    assert np.isfinite(hist[-1]["loss"])
+
+
+# ---------------------------------------------------------------------------
+# Pallas kernel parity (irregular, non-tile-multiple shapes included)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("shape", [(1, 64), (3, 517), (5, 2048), (2, 130001)])
+def test_threshold_mask_parity(shape):
+    x = rnd(shape, k=70)
+    thr = jnp.quantile(jnp.abs(x), 0.9, axis=1)
+    qk, rk = pallas_compress.threshold_mask(x, thr)
+    qr, rr = ref.threshold_mask_ref(x, thr)
+    np.testing.assert_allclose(np.asarray(qk), np.asarray(qr), atol=1e-6)
+    np.testing.assert_allclose(np.asarray(rk), np.asarray(rr), atol=1e-6)
+    # fused residual really is the complement
+    np.testing.assert_allclose(np.asarray(qk + rk), np.asarray(x), atol=1e-6)
+
+
+@pytest.mark.parametrize("shape", [(1, 100), (4, 333), (2, 40960)])
+@pytest.mark.parametrize("levels", [3, 15])
+def test_quantize_dequantize_parity(shape, levels):
+    x = rnd(shape, k=80)
+    scale = jnp.max(jnp.abs(x), axis=1)
+    u = jax.random.uniform(jax.random.fold_in(KEY, 81), shape)
+    qk, rk = pallas_compress.quantize_dequantize(x, scale, u, levels=levels)
+    qr, rr = ref.quantize_dequantize_ref(x, scale, u, levels=levels)
+    np.testing.assert_allclose(np.asarray(qk), np.asarray(qr), atol=1e-6)
+    np.testing.assert_allclose(np.asarray(rk), np.asarray(rr), atol=1e-6)
+
+
+def test_pallas_backend_matches_jnp_backend_topk():
+    x = {"w": rnd((3, 700), k=90)}
+    a = TopK(frac=0.05, backend="jnp").compress(KEY, x)
+    b = TopK(frac=0.05, backend="pallas").compress(KEY, x)
+    np.testing.assert_allclose(np.asarray(a["w"]), np.asarray(b["w"]),
+                               atol=1e-6)
+
+
+def test_pallas_backend_matches_jnp_backend_qsgd():
+    x = {"w": rnd((2, 513), k=91)}
+    key = jax.random.fold_in(KEY, 92)
+    a = QSGD(bits=4, backend="jnp").compress(key, x)
+    b = QSGD(bits=4, backend="pallas").compress(key, x)
+    np.testing.assert_allclose(np.asarray(a["w"]), np.asarray(b["w"]),
+                               atol=1e-6)
