@@ -16,7 +16,8 @@ import numpy as np
 from repro import comm as comm_mod
 from repro.core import optim, topology
 from repro.data import ClientDataset, dirichlet_partition, make_classification
-from repro.train import DecentralizedTrainer, lr_schedule, run_training
+from repro.train import (DecentralizedTrainer, lr_schedule, run_training,
+                         run_training_scanned)
 
 
 def _mlp_init(key, d_in, width=64, classes=20):
@@ -32,6 +33,24 @@ def _mlp_apply(p, xb):
     return h @ p["w2"] + p["b2"]
 
 
+def _ce_loss_fn(p, ms, batch_i, rng):
+    """Per-node cross-entropy in the trainer's loss_fn signature."""
+    xb, yb = batch_i
+    logits = _mlp_apply(p, xb)
+    yb = yb.astype(jnp.int32)
+    ce = jnp.mean(jax.nn.logsumexp(logits, -1) -
+                  jnp.take_along_axis(logits, yb[:, None], -1)[:, 0])
+    return ce, ({}, {})
+
+
+def _task_data(*, n_data, seed, noise=2.5, n_classes=20):
+    """The calibrated benchmark task (noise/class difficulty tuned so the
+    paper's method ordering emerges; see run_decentralized), flattened."""
+    x, y = make_classification(n=n_data, hw=8, seed=seed, noise=noise,
+                               n_classes=n_classes)
+    return x.reshape(len(x), -1).astype(np.float32), y
+
+
 def run_decentralized(
     method: str, *, alpha: float, topo_name: str = "ring", n_nodes: int = 16,
     steps: int = 150, lr: float = 0.1, seed: int = 0, batch: int = 16,
@@ -44,9 +63,8 @@ def run_decentralized(
     Task difficulty (noise=2.5, 20 classes) is calibrated so the paper's
     method ordering emerges: at alpha=0.1 on ring-16, DSGD << DSGDm-N <
     QG-DSGDm-N (see EXPERIMENTS.md)."""
-    x, y = make_classification(n=n_data, hw=8, seed=seed, noise=noise,
-                               n_classes=n_classes)
-    x = x.reshape(len(x), -1).astype(np.float32)
+    x, y = _task_data(n_data=n_data, seed=seed, noise=noise,
+                      n_classes=n_classes)
     x_train, y_train = x[: n_data // 2], y[: n_data // 2]
     x_test, y_test = x[n_data // 2:], y[n_data // 2:]
 
@@ -55,18 +73,10 @@ def run_decentralized(
     parts = dirichlet_partition(y_train, n_nodes, alpha, seed=seed)
     ds = ClientDataset((x_train, y_train), parts, batch=batch, seed=seed)
 
-    def loss_fn(p, ms, batch_i, rng):
-        xb, yb = batch_i
-        logits = _mlp_apply(p, xb)
-        yb = yb.astype(jnp.int32)
-        ce = jnp.mean(jax.nn.logsumexp(logits, -1) -
-                      jnp.take_along_axis(logits, yb[:, None], -1)[:, 0])
-        return ce, ({}, {})
-
     opt = optim.make_optimizer(method, lr=lr, weight_decay=1e-4,
                                **(opt_kwargs or {}))
     trainer = DecentralizedTrainer(
-        loss_fn, opt, topo,
+        _ce_loss_fn, opt, topo,
         lr_fn=lr_schedule(lr, total_steps=steps, warmup=max(1, steps // 20),
                           decay_at=(0.5, 0.75)),
         comm=comm_mod.make_comm(comm, gamma=comm_gamma,
@@ -98,6 +108,57 @@ def run_decentralized(
         out["comm_bits_per_node"] = hist[-1]["comm_bits_per_node"]
         out["comm_ratio"] = hist[-1]["comm_ratio"]
     return out
+
+
+def bench_loop(method: str = "qg_dsgdm_n", *, alpha: float = 0.1,
+               n_nodes: int = 16, steps: int = 128, chunks=(8, 32),
+               lr: float = 0.1, seed: int = 0, batch: int = 16) -> list[dict]:
+    """Python-loop vs scan-fused training-loop dispatch benchmark.
+
+    Same task/model as ``run_decentralized``; each variant warms up (one
+    full run compiles every trace, including the tail chunk) and then times
+    a fresh `steps`-step run.  The trajectory is step-identical across
+    variants (run_training_scanned's contract), so the only difference is
+    per-step Python/jit dispatch overhead vs one dispatch per chunk.
+    """
+    x, y = _task_data(n_data=2048, seed=seed)
+    topo = topology.get_topology("ring", n_nodes)
+    parts = dirichlet_partition(y, topo.n, alpha, seed=seed)
+
+    trainer = DecentralizedTrainer(
+        _ce_loss_fn, optim.make_optimizer(method, lr=lr, weight_decay=1e-4),
+        topo)
+
+    def fresh():
+        ds = ClientDataset((x, y), parts, batch=batch, seed=seed)
+        state = trainer.init(jax.random.PRNGKey(seed),
+                             lambda k: _mlp_init(k, x.shape[1], classes=20))
+        return state, iter(lambda: ds.next_batch(), None)
+
+    variants = [("python", run_training, {})]
+    variants += [(f"scan{c}", run_training_scanned, {"chunk": c})
+                 for c in chunks]
+    rows = []
+    base_sps = None
+    for tag, runner, kw in variants:
+        # warm-up on the SAME trainer: compiles every trace (incl. the tail
+        # chunk) so the timed run below measures dispatch, not compilation
+        state, batches = fresh()
+        runner(trainer, state, batches, steps, log_every=0,
+               log_fn=lambda *_: None, **kw)
+        state, batches = fresh()
+        t0 = time.time()
+        state, hist = runner(trainer, state, batches, steps, log_every=0,
+                             log_fn=lambda *_: None, **kw)
+        jax.block_until_ready(state.params)
+        wall = time.time() - t0
+        sps = steps / wall
+        if base_sps is None:
+            base_sps = sps
+        rows.append({"tag": tag, "us_per_step": wall / steps * 1e6,
+                     "steps_per_s": sps, "speedup": sps / base_sps,
+                     "loss": hist[-1]["loss"]})
+    return rows
 
 
 ROWS: list[dict] = []  # every csv_row also lands here for --json export

@@ -11,6 +11,7 @@ runs; ``--only <name>`` selects a single table.
   fig3      average-consensus speedup                          [Fig. 3]
   fig6      topology scales (ring n in {8,16,32})              [Fig. 6/T7]
   comm      compressed gossip (CHOCO/EF) vs dense: bytes-on-wire + us/step
+  loop      python-loop vs lax.scan-fused training steps/sec
   serving   batched prefill+decode throughput (reduced archs)
   kernels   Pallas kernel microbench vs jnp reference
   roofline  aggregate the dry-run artifacts into the §Roofline table
@@ -26,7 +27,7 @@ import json
 import os
 import time
 
-from .common import ROWS, csv_row, run_decentralized
+from .common import ROWS, bench_loop, csv_row, run_decentralized
 
 
 def table1(quick=False):
@@ -131,6 +132,23 @@ def comm(quick=False):
             f"acc={r['acc']:.4f},loss={r['loss']:.4f},"
             f"ratio={r['comm_ratio']:.1f},"
             f"bytes_per_round={r['comm_bits_per_node'] / 8:.0f}")
+
+
+def loop(quick=False):
+    """Training-loop dispatch: python per-step loop vs ``lax.scan``-fused
+    chunks (run_training_scanned).  Same math, same rng stream — the delta
+    is pure dispatch overhead on the CPU/bench path."""
+    steps = 96 if quick else 256
+    for method, n_nodes, batch, lr in (("qg_dsgdm_n", 4, 8, 0.02),
+                                       ("dsgdm_n", 16, 16, 0.1),
+                                       ("qg_dsgdm_n", 16, 16, 0.1)):
+        rows = bench_loop(method, n_nodes=n_nodes, batch=batch, steps=steps,
+                          lr=lr, chunks=(8, 32))
+        for r in rows:
+            csv_row(f"loop/{method}/ring{n_nodes}/{r['tag']}",
+                    r["us_per_step"],
+                    f"steps_per_s={r['steps_per_s']:.1f},"
+                    f"speedup={r['speedup']:.2f},loss={r['loss']:.4f}")
 
 
 def serving(quick=False):
@@ -248,7 +266,8 @@ def roofline(quick=False):
 TABLES = {
     "table1": table1, "table2": table2, "table4": table4, "table5": table5,
     "table6": table6, "fig3": fig3, "fig6": fig6, "comm": comm,
-    "serving": serving, "kernels": kernels, "roofline": roofline,
+    "loop": loop, "serving": serving, "kernels": kernels,
+    "roofline": roofline,
 }
 
 

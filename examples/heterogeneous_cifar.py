@@ -11,6 +11,11 @@ bytes on the wire; each kept top-k entry ships a 64-bit value+index pair):
     PYTHONPATH=src python examples/heterogeneous_cifar.py \
         --steps 60 --compress topk:0.01
 
+Both methods are chain-built from shared transform stages (DESIGN.md §6) —
+``gossip_mix`` is the only stage touching the network, which is why the
+compressed schedule composes with every registry entry, including the new
+tracking-family ones (``mt_dsgdm``, ``gut``).
+
 (ResNet-20 on CPU is slow; defaults are sized for a few minutes.)
 """
 import argparse

@@ -3,6 +3,12 @@
 16 simulated clients on a ring, heterogeneous data (Dirichlet alpha=0.1),
 QG-DSGDm-N vs DSGDm-N — the paper's headline comparison, on CPU in ~1 min.
 
+Every optimizer name resolves to a chain of transform stages
+(``core/transforms.py``; e.g. ``qg_dsgdm_n`` = weight_decay | seeded
+heavyball | gossip_mix | qg_buffer), and the chain step is pure, so the
+training loop below scan-fuses 25 steps per device dispatch with
+``run_training_scanned`` — step-identical to the per-step ``run_training``.
+
     PYTHONPATH=src python examples/quickstart.py
 """
 import jax
@@ -11,7 +17,7 @@ import numpy as np
 
 from repro.core import optim, topology
 from repro.data import ClientDataset, dirichlet_partition, make_classification
-from repro.train import DecentralizedTrainer, run_training
+from repro.train import DecentralizedTrainer, run_training_scanned
 
 # 1. heterogeneous client data (the paper's Dirichlet protocol, Fig. 1)
 x, y = make_classification(n=4096, hw=8, n_classes=20, noise=2.5, seed=0)
@@ -41,9 +47,9 @@ for name in ("dsgdm_n", "qg_dsgdm_n"):
         loss_fn, optim.make_optimizer(name, lr=0.1, weight_decay=1e-4),
         topology.ring(16))
     state = trainer.init(jax.random.PRNGKey(0), init_fn)
-    state, hist = run_training(
+    state, hist = run_training_scanned(
         trainer, state, iter(lambda: ds.next_batch(), None), steps=150,
-        log_every=50)
+        chunk=25, log_every=50)
 
     # paper eval: every node's model on the full held-out set, averaged
     def acc(p):

@@ -4,6 +4,11 @@
     minima; local momentum oscillates, QG momentum stabilizes.
 (b) Rosenbrock trajectory (Fig. 4): single-worker QG-SGDm (== QHM) vs SGDm.
 
+The numpy 'qg' update below is the two-stage pattern the production zoo
+expresses as ``heavyball(seed_from=qg_buffer) | gossip_mix | qg_buffer``
+(core/transforms.py): seed momentum from the buffer before averaging,
+refresh the buffer from the model difference after.
+
     PYTHONPATH=src python examples/toy_2d.py
 """
 import numpy as np

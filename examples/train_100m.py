@@ -1,9 +1,13 @@
 """End-to-end driver: decentralized training of a ~100M-parameter llama-style
 transformer for a few hundred steps on synthetic non-i.i.d. LM data.
 
-8 nodes on a ring, QG-DSGDm-N, node-stacked params (the exact layout the
-TPU launch shards over the mesh).  On this CPU container a full run takes a
-while — use --steps to size it.
+8 nodes on a ring, QG-DSGDm-N (chain-built: DESIGN.md §6), node-stacked
+params (the exact layout the TPU launch shards over the mesh).  The loop is
+scan-fused: ``--chunk`` steps per device dispatch via
+``run_training_scanned`` (``--chunk 1`` falls back to per-step dispatch;
+at 100M params the step is compute-bound, so the fusion win is modest here
+— see the `loop` benchmark for the dispatch-bound regime).  On this CPU
+container a full run takes a while — use --steps to size it.
 
     PYTHONPATH=src python examples/train_100m.py --steps 200
 """
@@ -18,7 +22,8 @@ from repro.configs import get_config
 from repro.core import optim, topology
 from repro.data import ClientDataset, dirichlet_partition, make_lm_domains
 from repro.models import transformer as tf
-from repro.train import DecentralizedTrainer, lr_schedule, run_training
+from repro.train import (DecentralizedTrainer, lr_schedule,
+                         run_training_scanned)
 
 
 def model_100m():
@@ -38,6 +43,8 @@ def main():
     ap.add_argument("--seq-len", type=int, default=128)
     ap.add_argument("--alpha", type=float, default=0.1)
     ap.add_argument("--lr", type=float, default=0.02)
+    ap.add_argument("--chunk", type=int, default=10,
+                    help="steps fused per lax.scan dispatch")
     args = ap.parse_args()
 
     cfg = model_100m()
@@ -67,9 +74,9 @@ def main():
                          lambda k: (tf.init_lm(k, cfg), {}))
 
     t0 = time.time()
-    state, hist = run_training(
+    state, hist = run_training_scanned(
         trainer, state, iter(lambda: ds.next_batch(), None), args.steps,
-        log_every=max(1, args.steps // 10))
+        chunk=max(1, args.chunk), log_every=max(1, args.steps // 10))
     dt = time.time() - t0
     tok_per_step = args.nodes * args.batch * args.seq_len
     print(f"\n{args.steps} steps in {dt:.0f}s "

@@ -1,8 +1,12 @@
 """CHOCO-style compressed gossip (Koloskova'19) behind the ``mix_fn`` hook.
 
-Every optimizer in the zoo mixes exclusively through ``mix_fn(w, tree)``
-(core/optim.py), so compression that lives behind that signature upgrades the
-whole zoo — QG-DSGDm(-N) included — without per-algorithm changes.  The only
+Every optimizer in the zoo mixes exclusively through ``mix_fn(w, tree)`` —
+since the transform-algebra redesign the only callers are the ``gossip_mix``,
+``grad_track`` and ``buffer_sync`` stages of ``core/transforms.py``, so the
+number and order of mix call sites per step is explicit in each chain — and
+compression that lives behind that signature upgrades the whole zoo,
+QG-DSGDm(-N) and the tracking-family entries included, without
+per-algorithm changes.  The only
 thing the hook cannot carry is state, and compressed gossip is stateful: each
 node keeps public replica estimates ``x̂`` (what everyone believes everyone's
 model is) that advance by compressed innovations.

@@ -63,15 +63,18 @@ def neighbor_sum_ppermute(
     x: jax.Array,
     *,
     axis_name: str,
+    n: int,
     self_weight: float,
     side_weight: float,
 ) -> jax.Array:
     """Ring mixing of a *sharded* (per-node local) array inside shard_map.
 
     ``x`` here is the local shard (no node axis); neighbours are reached with
-    two collective-permutes around the ring defined by ``axis_name``.
+    two collective-permutes around the ring defined by ``axis_name``.  ``n``
+    is the static ring size (``mesh.shape[axis_name]``; ``jax.lax.axis_size``
+    does not exist on every supported jax version, and the permutation lists
+    need a concrete size anyway).
     """
-    n = jax.lax.axis_size(axis_name)
     if n == 1:
         return x
     fwd = [(i, (i + 1) % n) for i in range(n)]
@@ -98,11 +101,12 @@ def mix_ring_shardmap(
     (``auto``), so leaves may simultaneously be sharded over 'model'/'data'.
     """
     side = (1.0 - self_weight) / 2.0
+    n = dict(mesh.shape)[axis_name]
 
     def local_fn(local_tree):
         return jax.tree.map(
             lambda x: neighbor_sum_ppermute(
-                x, axis_name=axis_name, self_weight=self_weight,
+                x, axis_name=axis_name, n=n, self_weight=self_weight,
                 side_weight=side),
             local_tree,
         )
@@ -111,10 +115,24 @@ def mix_ring_shardmap(
         lambda x: P(axis_name, *([None] * (x.ndim - 1))), tree
     )
     # manual only over the node axis; 'model'/'data' stay compiler-managed
-    return jax.shard_map(
+    return _shard_map(
         local_fn, mesh=mesh, in_specs=(specs,), out_specs=specs,
-        axis_names=frozenset({axis_name}),
+        manual_axes=frozenset({axis_name}),
     )(tree)
+
+
+def _shard_map(f, *, mesh, in_specs, out_specs, manual_axes):
+    """shard_map across the jax API drift: ``jax.shard_map(axis_names=...)``
+    (new) vs ``jax.experimental.shard_map.shard_map(auto=...)`` (<= 0.4.x,
+    where ``auto`` names the COMPLEMENT — the axes left compiler-managed)."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs,
+                             axis_names=frozenset(manual_axes))
+    from jax.experimental.shard_map import shard_map as _sm
+    auto = frozenset(mesh.axis_names) - frozenset(manual_axes)
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=False, auto=auto)
 
 
 def node_mean(tree: PyTree) -> PyTree:

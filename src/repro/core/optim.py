@@ -1,17 +1,20 @@
 """Decentralized optimizer zoo (the paper's core + every baseline it compares).
 
-All optimizers act on *node-stacked* pytrees: each leaf has shape
-``[n_nodes, ...]`` (see DESIGN.md §3).  A step is
+Every algorithm here is a ``chain()`` of shared transform stages from
+``core/transforms.py`` (DESIGN.md §6) — the per-algorithm classes below are
+thin compatibility shims that pick the stages and keep the historical
+constructor kwargs.  All optimizers act on *node-stacked* pytrees: each leaf
+has shape ``[n_nodes, ...]`` (see DESIGN.md §3).  A step is
 
     params', state' = opt.step(params, grads, state, w=W_t, lr=eta_t)
 
 where ``grads`` are per-node stochastic gradients evaluated at ``params`` and
 ``W_t`` is the doubly-stochastic mixing matrix for this round (time-varying
-topologies pass a different one each step).  Mixing defaults to the dense
-paper-faithful einsum (`gossip.mix_dense`); a custom ``mix_fn`` (the
-ring-ppermute schedule, or the compressed CHOCO/EF schedules in
-``repro.comm``) can be injected — algorithms only ever mix through it, which
-is what lets compressed communication upgrade the whole zoo at once
+topologies pass a different one each step).  Mixing happens only inside the
+``gossip_mix`` / ``grad_track`` / ``buffer_sync`` stages, always through the
+injectable ``mix_fn`` hook (dense einsum by default; the ring-ppermute
+schedule or the compressed CHOCO/EF schedules in ``repro.comm`` plug in) —
+which is what lets compressed communication upgrade the whole zoo at once
 (DESIGN.md §4).
 
 Implemented (paper reference in brackets):
@@ -32,6 +35,8 @@ Implemented (paper reference in brackets):
   d2_plus       D^2 with lr-decay fix                  [footnote 9]
   gt            DSGD with gradient tracking            [Table 2]
   gt_dsgdm_n    DSGDm-N on tracked gradients           [Table 2]
+  mt_dsgdm      Momentum Tracking (Takezawa et al. 22) [tracking family]
+  gut           Global Update Tracking (Aketi et al.)  [tracking family]
 
 Weight decay is the paper's constant coupled L2 (1e-4), added to the raw
 gradient before any momentum logic, matching the reference PyTorch recipe.
@@ -42,9 +47,9 @@ import dataclasses
 from typing import Any, Callable
 
 import jax
-import jax.numpy as jnp
 
 from . import gossip
+from . import transforms as T
 
 PyTree = Any
 MixFn = Callable[[jax.Array, PyTree], PyTree]
@@ -53,60 +58,19 @@ __all__ = ["DecentralizedOptimizer", "make_optimizer", "OPTIMIZERS"]
 
 
 # ---------------------------------------------------------------------------
-# pytree helpers
-# ---------------------------------------------------------------------------
-
-def _tmap(f, *trees):
-    return jax.tree.map(f, *trees)
-
-
-def _zeros_like(tree):
-    return _tmap(jnp.zeros_like, tree)
-
-
-def _add(a, b):
-    return _tmap(jnp.add, a, b)
-
-
-def _sub(a, b):
-    return _tmap(jnp.subtract, a, b)
-
-
-def _scale(s, a):
-    return _tmap(lambda x: s * x, a)
-
-
-def _axpy(s, a, b):
-    """s*a + b"""
-    return _tmap(lambda x, y: s * x + y, a, b)
-
-
-def _lerp(mu, a, b):
-    """mu*a + (1-mu)*b"""
-    return _tmap(lambda x, y: mu * x + (1.0 - mu) * y, a, b)
-
-
-def _apply_wd(params, grads, wd):
-    if not wd:
-        return grads
-    return _tmap(lambda g, p: g + wd * p, grads, params)
-
-
-def _global_norm(tree):
-    return jnp.sqrt(sum(jnp.sum(l.astype(jnp.float32) ** 2) for l in jax.tree.leaves(tree)))
-
-
-# ---------------------------------------------------------------------------
-# base class
+# base class: a chain of transform stages behind the historical step signature
 # ---------------------------------------------------------------------------
 
 @dataclasses.dataclass(frozen=True)
 class DecentralizedOptimizer:
-    """Functional decentralized optimizer.
+    """Functional decentralized optimizer — a named stage chain.
 
-    Subclasses implement ``init`` and ``step``.  ``mix_fn(w, tree)`` performs
-    one gossip round; the default contracts the dense mixing matrix over the
-    node axis.
+    Subclasses implement ``_stages()``; ``init`` and ``step`` are the chain
+    driver.  ``mix_fn(w, tree)`` performs one gossip round; the default
+    contracts the dense mixing matrix over the node axis.  The chain is
+    rebuilt per call from the (frozen) fields, so ``dataclasses.replace(opt,
+    mix_fn=...)`` — the CHOCO site-discovery / trainer hook-swap idiom —
+    keeps working unchanged.
     """
 
     lr: float = 0.1
@@ -114,11 +78,18 @@ class DecentralizedOptimizer:
     mix_fn: MixFn = dataclasses.field(default=gossip.mix_dense)
     name: str = "base"
 
-    def init(self, params: PyTree) -> PyTree:
+    def _stages(self) -> tuple[T.Stage, ...]:
         raise NotImplementedError
 
-    def step(self, params, grads, state, *, w, lr=None, t=0):
-        raise NotImplementedError
+    def init(self, params: PyTree) -> PyTree:
+        return T.chain_init(self._stages(), params)
+
+    def step(self, params, grads, state, *, w=None, lr=None, t=0):
+        ctx = T.StepCtx(w=w, lr=self._lr(lr), t=t, mix_fn=self.mix_fn)
+        sv = T.StepVars(grads=grads, update=grads, params=params,
+                        params_pre_mix=params)
+        sv, new_state = T.chain_apply(self._stages(), ctx, sv, state)
+        return sv.params, new_state
 
     def _lr(self, lr):
         return self.lr if lr is None else lr
@@ -132,44 +103,29 @@ class DecentralizedOptimizer:
 class DSGD(DecentralizedOptimizer):
     name: str = "dsgd"
 
-    def init(self, params):
-        return {}
-
-    def step(self, params, grads, state, *, w, lr=None, t=0):
-        eta = self._lr(lr)
-        grads = _apply_wd(params, grads, self.weight_decay)
-        half = _axpy(-eta, grads, params)
-        return self.mix_fn(w, half), state
+    def _stages(self):
+        return T.chain(T.weight_decay(self.weight_decay), T.gossip_mix())
 
 
 @dataclasses.dataclass(frozen=True)
 class DSGDm(DecentralizedOptimizer):
     """Local HeavyBall: m <- beta m + g ; x <- W(x - eta m).  Optionally
     gossips the momentum buffer too (Table 5 'extra communication' rows):
-    ``sync='ring'`` mixes m with the same W, ``sync='complete'`` averages it
-    globally every step."""
+    ``sync='ring'`` mixes m with the same W *after* the params mix site,
+    ``sync='complete'`` averages it globally every step."""
 
     beta: float = 0.9
     nesterov: bool = False
     sync: str | None = None  # None | 'ring' (same W) | 'complete'
     name: str = "dsgdm"
 
-    def init(self, params):
-        return {"m": _zeros_like(params)}
-
-    def step(self, params, grads, state, *, w, lr=None, t=0):
-        eta = self._lr(lr)
-        grads = _apply_wd(params, grads, self.weight_decay)
-        m = _axpy(self.beta, state["m"], grads)  # beta*m + g
-        upd = _axpy(self.beta, m, grads) if self.nesterov else m
-        half = _axpy(-eta, upd, params)
-        new_params = self.mix_fn(w, half)
-        if self.sync == "ring":
-            m = self.mix_fn(w, m)
-        elif self.sync == "complete":
-            n = jax.tree.leaves(params)[0].shape[0]
-            m = self.mix_fn(jnp.full((n, n), 1.0 / n, dtype=jnp.float32), m)
-        return new_params, {"m": m}
+    def _stages(self):
+        stages = [T.weight_decay(self.weight_decay),
+                  T.heavyball(self.beta, nesterov=self.nesterov),
+                  T.gossip_mix()]
+        if self.sync:
+            stages.append(T.buffer_sync("heavyball", mode=self.sync))
+        return T.chain(*stages)
 
 
 # ---------------------------------------------------------------------------
@@ -178,7 +134,9 @@ class DSGDm(DecentralizedOptimizer):
 
 @dataclasses.dataclass(frozen=True)
 class QGDSGDm(DecentralizedOptimizer):
-    """Algorithm 1 (right column) and its Nesterov flavour.
+    """Algorithm 1 (right column) and its Nesterov flavour: a heavyball
+    stage seeded from the quasi-global buffer, which refreshes post-mix from
+    the model difference d = (x_t - x_{t+1}) / eta.
 
     tau > 1 gives the multi-step variant (Alg. 3): the QG buffer is only
     refreshed on steps where (t+1) % tau == 0, otherwise carried over.
@@ -194,39 +152,20 @@ class QGDSGDm(DecentralizedOptimizer):
     def _mu(self):
         return self.beta if self.mu is None else self.mu
 
-    def init(self, params):
-        return {"m_hat": _zeros_like(params)}
-
-    def step(self, params, grads, state, *, w, lr=None, t=0):
-        eta = self._lr(lr)
-        grads = _apply_wd(params, grads, self.weight_decay)
-        m_hat = state["m_hat"]
-        # local buffer seeded from the QG buffer (Alg. 1 line 5)
-        m_local = _axpy(self.beta, m_hat, grads)  # beta*m_hat + g
-        upd = _axpy(self.beta, m_local, grads) if self.nesterov else m_local
-        half = _axpy(-eta, upd, params)
-        new_params = self.mix_fn(w, half)
-        # d = (x_t - x_{t+1}) / eta  (Alg. 1 line 8)
-        d = _scale(1.0 / eta, _sub(params, new_params))
-        new_m_hat = _lerp(self._mu, m_hat, d)
-        if self.tau > 1:
-            refresh = (jnp.asarray(t) + 1) % self.tau == 0
-            new_m_hat = _tmap(
-                lambda new, old: jnp.where(refresh, new, old), new_m_hat, m_hat
-            )
-        return new_params, {"m_hat": new_m_hat}
+    def _stages(self):
+        return T.chain(
+            T.weight_decay(self.weight_decay),
+            T.heavyball(self.beta, nesterov=self.nesterov,
+                        seed_from="qg_buffer"),
+            T.gossip_mix(),
+            T.qg_buffer(self._mu, tau=self.tau))
 
 
 @dataclasses.dataclass(frozen=True)
 class QHM(DecentralizedOptimizer):
     """Quasi-Hyperbolic Momentum — the exact single-worker reduction of
-    QG-DSGDm (App. B.3.1): with beta_hat = mu + (1-mu)*beta,
-
-        m <- beta_hat m + g
-        x <- x - eta ((1 - mu/beta_hat) m + (mu/beta_hat) g)
-
-    Used as the paper-faithful optimizer when n_nodes == 1 (e.g. the two
-    architectures whose per-node copies exceed HBM; DESIGN.md §5)."""
+    QG-DSGDm (App. B.3.1).  Pure local descent: ZERO mix call sites (e.g.
+    the two architectures whose per-node copies exceed HBM; DESIGN.md §5)."""
 
     beta: float = 0.9
     mu: float | None = None
@@ -236,19 +175,11 @@ class QHM(DecentralizedOptimizer):
     def _mu(self):
         return self.beta if self.mu is None else self.mu
 
-    def init(self, params):
-        return {"m": _zeros_like(params)}
-
-    def step(self, params, grads, state, *, w=None, lr=None, t=0):
-        eta = self._lr(lr)
-        grads = _apply_wd(params, grads, self.weight_decay)
-        mu = self._mu
-        beta_hat = mu + (1.0 - mu) * self.beta
-        m = _axpy(beta_hat, state["m"], grads)
-        c1 = 1.0 - mu / beta_hat
-        c2 = mu / beta_hat
-        upd = _tmap(lambda mm, gg: c1 * mm + c2 * gg, m, grads)
-        return _axpy(-eta, upd, params), {"m": m}
+    def _stages(self):
+        return T.chain(
+            T.weight_decay(self.weight_decay),
+            T.qhm_momentum(self.beta, self._mu),
+            T.descent())
 
 
 # ---------------------------------------------------------------------------
@@ -262,18 +193,11 @@ class DAdam(DecentralizedOptimizer):
     eps: float = 1e-8
     name: str = "dadam"
 
-    def init(self, params):
-        return {"m": _zeros_like(params), "v": _zeros_like(params)}
-
-    def step(self, params, grads, state, *, w, lr=None, t=0):
-        eta = self._lr(lr)
-        grads = _apply_wd(params, grads, self.weight_decay)
-        m = _lerp(self.beta1, state["m"], grads)
-        v = _tmap(lambda vv, gg: self.beta2 * vv + (1 - self.beta2) * gg * gg,
-                  state["v"], grads)
-        upd = _tmap(lambda mm, vv: mm / (jnp.sqrt(vv) + self.eps), m, v)
-        half = _axpy(-eta, upd, params)
-        return self.mix_fn(w, half), {"m": m, "v": v}
+    def _stages(self):
+        return T.chain(
+            T.weight_decay(self.weight_decay),
+            T.adam_scale(self.beta1, self.beta2, self.eps),
+            T.gossip_mix())
 
 
 @dataclasses.dataclass(frozen=True)
@@ -286,35 +210,13 @@ class QGDAdam(DecentralizedOptimizer):
     eps: float = 1e-8
     name: str = "qg_dadam"
 
-    def init(self, params):
-        return {"m_hat": _zeros_like(params), "v_hat": _zeros_like(params)}
-
-    def step(self, params, grads, state, *, w, lr=None, t=0):
-        eta = self._lr(lr)
-        grads = _apply_wd(params, grads, self.weight_decay)
-        m = _lerp(self.beta1, state["m_hat"], grads)
-        v = _tmap(lambda vv, gg: self.beta2 * vv + (1 - self.beta2) * gg * gg,
-                  state["v_hat"], grads)
-        upd = _tmap(lambda mm, vv: mm / (jnp.sqrt(vv) + self.eps), m, v)
-        half = _axpy(-eta, upd, params)
-        new_params = self.mix_fn(w, half)
-        d = _sub(params, new_params)  # Alg. 2 line 8 (no 1/eta)
-        # line 9: per-node global L2 normalization of d
-        flat = jax.tree.leaves(d)
-        n_nodes = flat[0].shape[0]
-        sq = sum(jnp.sum(l.reshape(n_nodes, -1).astype(jnp.float32) ** 2, axis=-1)
-                 for l in flat)
-        inv_norm = 1.0 / (jnp.sqrt(sq) + 1e-12)  # [n]
-
-        def _nrm(leaf):
-            bshape = (n_nodes,) + (1,) * (leaf.ndim - 1)
-            return leaf * inv_norm.reshape(bshape).astype(leaf.dtype)
-
-        d_hat = _tmap(_nrm, d)
-        m_hat = _lerp(self.beta1, state["m_hat"], d_hat)
-        v_hat = _tmap(lambda vv, dd: self.beta2 * vv + (1 - self.beta2) * dd * dd,
-                      state["v_hat"], d_hat)
-        return new_params, {"m_hat": m_hat, "v_hat": v_hat}
+    def _stages(self):
+        return T.chain(
+            T.weight_decay(self.weight_decay),
+            T.adam_scale(self.beta1, self.beta2, self.eps,
+                         seed_from="qg_adam"),
+            T.gossip_mix(),
+            T.qg_adam_buffer(self.beta1, self.beta2))
 
 
 # ---------------------------------------------------------------------------
@@ -323,9 +225,10 @@ class QGDAdam(DecentralizedOptimizer):
 
 @dataclasses.dataclass(frozen=True)
 class SlowMo(DecentralizedOptimizer):
-    """Base optimizer = DSGDm(-N); every tau steps, globally average the
-    model (extra All-Reduce — the communication overhead the paper calls out),
-    then apply the slow momentum update on the outer iterates."""
+    """Base optimizer = DSGDm(-N); every tau steps the slow_outer stage
+    globally averages the model (extra All-Reduce — the communication
+    overhead the paper calls out), applies the slow momentum update on the
+    outer iterates, and resets the base momentum buffer."""
 
     beta: float = 0.9        # base momentum
     slow_beta: float = 0.7
@@ -334,41 +237,13 @@ class SlowMo(DecentralizedOptimizer):
     nesterov: bool = True
     name: str = "slowmo"
 
-    def init(self, params):
-        return {
-            "m": _zeros_like(params),                 # base local momentum
-            "slow_m": _zeros_like(params),            # slow (outer) momentum
-            "anchor": _tmap(jnp.array, params),       # x_{i,0}^{(t)}
-        }
-
-    def step(self, params, grads, state, *, w, lr=None, t=0):
-        eta = self._lr(lr)
-        grads = _apply_wd(params, grads, self.weight_decay)
-        m = _axpy(self.beta, state["m"], grads)
-        upd = _axpy(self.beta, m, grads) if self.nesterov else m
-        half = _axpy(-eta, upd, params)
-        new_params = self.mix_fn(w, half)
-
-        do_outer = (jnp.asarray(t) + 1) % self.tau == 0
-        n = jax.tree.leaves(params)[0].shape[0]
-        avg = gossip.node_mean(new_params)
-        avg = _tmap(lambda a: jnp.broadcast_to(a, (n,) + a.shape[1:]), avg)
-        # slow momentum on the averaged iterate
-        slow_m_new = _tmap(
-            lambda sm, x0, xt: self.slow_beta * sm + (x0 - xt) / eta,
-            state["slow_m"], state["anchor"], avg,
-        )
-        outer = _tmap(
-            lambda x0, sm: x0 - self.slow_alpha * eta * sm,
-            state["anchor"], slow_m_new,
-        )
-        sel = lambda a, b: _tmap(lambda x, y: jnp.where(do_outer, x, y), a, b)
-        out_params = sel(outer, new_params)
-        return out_params, {
-            "m": sel(_zeros_like(m), m),  # reset base buffer at outer step
-            "slow_m": sel(slow_m_new, state["slow_m"]),
-            "anchor": sel(outer, state["anchor"]),
-        }
+    def _stages(self):
+        return T.chain(
+            T.weight_decay(self.weight_decay),
+            T.heavyball(self.beta, nesterov=self.nesterov),
+            T.gossip_mix(),
+            T.slow_outer(self.slow_beta, self.slow_alpha, self.tau,
+                         base="heavyball"))
 
 
 # ---------------------------------------------------------------------------
@@ -377,49 +252,25 @@ class SlowMo(DecentralizedOptimizer):
 
 @dataclasses.dataclass(frozen=True)
 class DMSGD(DecentralizedOptimizer):
-    """Re-organized formulation (Alg. 7/8).  Option II buffer:
-        m_hat <- mu (beta m_hat + g) + (1-mu) (x_t - x_{t+1})/eta
-    Option I additionally replays the previous step's quantities."""
+    """Re-organized formulation (Alg. 7/8): heavyball seeded from the DMSGD
+    buffer, which blends the local update with the post-mix model difference
+    (Option II) or additionally replays the previous step (Option I)."""
 
     beta: float = 0.9
     mu: float = 0.5
     option: int = 2
     name: str = "dmsgd"
 
-    def init(self, params):
-        z = _zeros_like(params)
-        if self.option == 1:
-            return {"m_hat": z, "prev_m_hat": z, "prev_g": z,
-                    "prev_x": _tmap(jnp.array, params)}
-        return {"m_hat": z}
-
-    def step(self, params, grads, state, *, w, lr=None, t=0):
-        eta = self._lr(lr)
-        grads = _apply_wd(params, grads, self.weight_decay)
-        m_hat = state["m_hat"]
-        local = _axpy(self.beta, m_hat, grads)  # beta m_hat + g
-        half = _axpy(-eta, local, params)
-        new_params = self.mix_fn(w, half)
-        d = _scale(1.0 / eta, _sub(params, new_params))
-        if self.option == 2:
-            new_m_hat = _lerp(self.mu, local, d)
-            return new_params, {"m_hat": new_m_hat}
-        # Option I (App. B.2 final expansion)
-        inner = _tmap(
-            lambda loc, xp, x, pm, pg: loc + (xp - x) / eta - self.beta * pm - pg,
-            local, state["prev_x"], params, state["prev_m_hat"], state["prev_g"],
-        )
-        new_m_hat = _lerp(self.mu, inner, d)
-        return new_params, {
-            "m_hat": new_m_hat,
-            "prev_m_hat": m_hat,
-            "prev_g": grads,
-            "prev_x": params,
-        }
+    def _stages(self):
+        return T.chain(
+            T.weight_decay(self.weight_decay),
+            T.heavyball(self.beta, seed_from="dmsgd_buffer"),
+            T.gossip_mix(),
+            T.dmsgd_buffer(self.beta, self.mu, option=self.option))
 
 
 # ---------------------------------------------------------------------------
-# D^2 and gradient tracking (Table 2 / App. D.9)
+# D^2 and the tracking family (Table 2 / App. D.9 + beyond-paper entries)
 # ---------------------------------------------------------------------------
 
 @dataclasses.dataclass(frozen=True)
@@ -432,78 +283,64 @@ class D2(DecentralizedOptimizer):
     plus: bool = False
     name: str = "d2"
 
-    def init(self, params):
-        return {
-            "prev_x": _tmap(jnp.array, params),
-            "prev_g": _zeros_like(params),
-            "prev_lr": jnp.asarray(0.0, jnp.float32),
-            "t": jnp.asarray(0, jnp.int32),
-        }
-
-    def step(self, params, grads, state, *, w, lr=None, t=0):
-        eta = self._lr(lr)
-        grads = _apply_wd(params, grads, self.weight_decay)
-        first = state["t"] == 0
-        prev_lr = jnp.where(first, eta, state["prev_lr"])
-        scale = (eta / prev_lr) if self.plus else 1.0
-        # correction = (x^{t-1} - x^t) * scale / eta + (g^t - g^{t-1})
-        corr = _tmap(
-            lambda xp, x, g, gp: jnp.where(
-                first, g, scale * (xp - x) / eta + g - gp
-            ),
-            state["prev_x"], params, grads, state["prev_g"],
-        )
-        half = _axpy(-eta, corr, params)
-        new_params = self.mix_fn(w, half)
-        return new_params, {
-            "prev_x": params,
-            "prev_g": grads,
-            "prev_lr": jnp.asarray(eta, jnp.float32),
-            "t": state["t"] + 1,
-        }
+    def _stages(self):
+        return T.chain(
+            T.weight_decay(self.weight_decay),
+            T.d2_correction(plus=self.plus),
+            T.gossip_mix())
 
 
 @dataclasses.dataclass(frozen=True)
 class GradientTracking(DecentralizedOptimizer):
     """DSGD with gradient tracking:
-        y^{t}   tracks the global average gradient  (extra gossip round!)
+        y^{t}   tracks the global average gradient  (extra gossip round,
+                BEFORE the params mix site)
         x^{t+1} = W(x^t - eta y^t)
         y^{t+1} = W(y^t) + g^{t+1} - g^t
-    ``momentum``/``nesterov`` put a DSGDm-N-style buffer on top of y
-    (the Table 2 'DSGDm-N (w/ GT)' row)."""
+    ``momentum``/``nesterov`` put a DSGDm(-N)-style buffer on top of y.
+    momentum without nesterov is exactly Momentum Tracking (Takezawa et al.,
+    2022); nesterov is the Table 2 'DSGDm-N (w/ GT)' row."""
 
     momentum: float = 0.0
     nesterov: bool = False
     name: str = "gt"
 
-    def init(self, params):
-        return {
-            "y": _zeros_like(params),
-            "prev_g": _zeros_like(params),
-            "m": _zeros_like(params),
-            "t": jnp.asarray(0, jnp.int32),
-        }
-
-    def step(self, params, grads, state, *, w, lr=None, t=0):
-        eta = self._lr(lr)
-        grads = _apply_wd(params, grads, self.weight_decay)
-        first = state["t"] == 0
-        # y^t = W y^{t-1} + g^t - g^{t-1}; at t=0, y = g.
-        y_mixed = self.mix_fn(w, state["y"])
-        y = _tmap(
-            lambda ym, g, gp: jnp.where(first, g, ym + g - gp),
-            y_mixed, grads, state["prev_g"],
-        )
+    def _stages(self):
+        stages = [T.weight_decay(self.weight_decay), T.grad_track()]
         if self.momentum:
-            m = _axpy(self.momentum, state["m"], y)
-            upd = _axpy(self.momentum, m, y) if self.nesterov else m
-        else:
-            m = state["m"]
-            upd = y
-        half = _axpy(-eta, upd, params)
-        new_params = self.mix_fn(w, half)
-        return new_params, {"y": y, "prev_g": grads, "m": m,
-                            "t": state["t"] + 1}
+            stages.append(T.heavyball(self.momentum, nesterov=self.nesterov))
+        stages.append(T.gossip_mix())
+        return T.chain(*stages)
+
+
+@dataclasses.dataclass(frozen=True)
+class GlobalUpdateTracking(DecentralizedOptimizer):
+    """GUT-style update tracking (Aketi et al., 2023): the SAME stages as
+    Momentum Tracking in the opposite order — momentum first, then the
+    tracker runs on the momentum update itself, so nodes gossip-track the
+    global average *update* rather than the gradient:
+
+        u^t = beta u^{t-1}_local + g^t
+        y^t = W y^{t-1} + u^t - u^{t-1}
+        x^{t+1} = W(x^t - eta y^t)
+
+    On a FIXED mixing matrix the two orderings commute (powers of W and of
+    beta are scalars times matrix powers), so gut == mt_dsgdm in exact
+    arithmetic; they genuinely diverge under time-varying topologies — and
+    under compressed gossip, where WHAT is shipped through the tracker's mix
+    site differs (gradients vs momentum updates).
+    """
+
+    beta: float = 0.9
+    nesterov: bool = False
+    name: str = "gut"
+
+    def _stages(self):
+        return T.chain(
+            T.weight_decay(self.weight_decay),
+            T.heavyball(self.beta, nesterov=self.nesterov),
+            T.grad_track(),
+            T.gossip_mix())
 
 
 # ---------------------------------------------------------------------------
@@ -520,6 +357,8 @@ OPTIMIZERS: dict[str, Callable[..., DecentralizedOptimizer]] = {
         nesterov=True, sync="complete", name="dsgdm_n_sync_global", **kw),
     "qg_dsgdm": lambda **kw: QGDSGDm(nesterov=False, name="qg_dsgdm", **kw),
     "qg_dsgdm_n": lambda **kw: QGDSGDm(nesterov=True, name="qg_dsgdm_n", **kw),
+    "qg_dsgdm_tau": lambda **kw: QGDSGDm(
+        nesterov=False, name="qg_dsgdm_tau", **{"tau": 4, **kw}),
     "qhm": QHM,
     "dadam": DAdam,
     "qg_dadam": QGDAdam,
@@ -530,6 +369,9 @@ OPTIMIZERS: dict[str, Callable[..., DecentralizedOptimizer]] = {
     "gt": GradientTracking,
     "gt_dsgdm_n": lambda **kw: GradientTracking(
         momentum=0.9, nesterov=True, name="gt_dsgdm_n", **kw),
+    "mt_dsgdm": lambda **kw: GradientTracking(
+        **{"momentum": 0.9, "nesterov": False, "name": "mt_dsgdm", **kw}),
+    "gut": GlobalUpdateTracking,
 }
 
 

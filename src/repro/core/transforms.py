@@ -1,0 +1,517 @@
+"""Composable optimizer-transform algebra for the decentralized zoo.
+
+Every algorithm in ``core/optim.py`` is a ``chain()`` of named *stages*.  A
+stage is a pure ``(init, apply)`` pair (DESIGN.md §6):
+
+    init(params)                -> stage state pytree (or None if stateless)
+    apply(ctx, sv, states)      -> (sv', states')
+
+over node-stacked pytrees (leaves ``[n_nodes, ...]``, DESIGN.md §3), where
+
+* ``ctx``    is the per-step :class:`StepCtx` — mixing matrix ``w``, learning
+  rate ``lr``, step counter ``t`` and the ``mix_fn`` gossip hook (the same
+  hook the compressed CHOCO/EF schedules in ``repro.comm`` plug into);
+* ``sv``     is the :class:`StepVars` value flowing down the chain — the
+  effective gradient, the current update direction, the current params, and
+  explicit ``params_pre_mix`` / ``params_post_mix`` views so post-mix stages
+  (QG buffer, SlowMo outer loop, DMSGD re-organized buffer) can read the
+  model difference a gossip round produced;
+* ``states`` is the full ``{stage_name: state}`` mapping.  A stage writes its
+  own entry; the mapping evolves *in chain order*, so a stage placed after
+  another sees that stage's state for the current step (SlowMo resetting the
+  base momentum, ``buffer_sync`` gossiping it), while a stage reading a
+  *later* entry sees the previous step's value (QG seeding the local momentum
+  from the quasi-global buffer before the buffer refreshes post-mix).
+
+Stage order is execution order; ``gossip_mix`` is itself a stage, so the
+number AND order of ``mix_fn`` call sites per step is explicit in the chain —
+exactly what ``repro.comm.choco`` site discovery counts (a gradient tracker
+mixes its tracker *before* the params site; synced momentum mixes its buffer
+*after*; QHM never mixes).
+
+The algebra makes the zoo compositional: Momentum Tracking (Takezawa et al.,
+2022) is ``weight_decay | grad_track | heavyball | gossip_mix`` and Global
+Update Tracking (Aketi et al., 2023) is ``weight_decay | heavyball |
+grad_track | gossip_mix`` — the same stages in a different order — with no
+new per-algorithm plumbing.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import gossip
+
+PyTree = Any
+MixFn = Callable[[jax.Array, PyTree], PyTree]
+
+__all__ = [
+    "Stage", "StepCtx", "StepVars", "chain", "chain_init", "chain_apply",
+    "weight_decay", "heavyball", "qhm_momentum", "adam_scale", "gossip_mix",
+    "descent", "qg_buffer", "qg_adam_buffer", "dmsgd_buffer", "grad_track",
+    "d2_correction", "slow_outer", "buffer_sync",
+]
+
+
+# ---------------------------------------------------------------------------
+# pytree helpers (shared with core/optim.py)
+# ---------------------------------------------------------------------------
+
+def _tmap(f, *trees):
+    return jax.tree.map(f, *trees)
+
+
+def _zeros_like(tree):
+    return _tmap(jnp.zeros_like, tree)
+
+
+def _sub(a, b):
+    return _tmap(jnp.subtract, a, b)
+
+
+def _scale(s, a):
+    return _tmap(lambda x: s * x, a)
+
+
+def _axpy(s, a, b):
+    """s*a + b"""
+    return _tmap(lambda x, y: s * x + y, a, b)
+
+
+def _lerp(mu, a, b):
+    """mu*a + (1-mu)*b"""
+    return _tmap(lambda x, y: mu * x + (1.0 - mu) * y, a, b)
+
+
+# ---------------------------------------------------------------------------
+# the algebra
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class StepCtx:
+    """Per-step inputs every stage sees."""
+
+    w: Any                      # mixing matrix for this round (None if local)
+    lr: Any                     # resolved learning rate eta_t
+    t: Any                      # step counter (int or traced scalar)
+    mix_fn: MixFn               # the gossip hook (dense / ring / compressed)
+
+
+@dataclasses.dataclass(frozen=True)
+class StepVars:
+    """The value flowing down a chain.
+
+    ``grads`` is the effective (weight-decayed) gradient — stages that need
+    the raw gradient signal (QG seeding, trackers' increments) read it here
+    even after momentum stages rewrote ``update``.  ``update`` is the current
+    descent direction.  ``params`` is the current model; ``params_pre_mix``
+    and ``params_post_mix`` bracket the gossip round for the tracking-family
+    buffers built from the model difference.
+    """
+
+    grads: PyTree
+    update: PyTree
+    params: PyTree
+    params_pre_mix: PyTree
+    params_post_mix: Optional[PyTree] = None
+
+    def replace(self, **kw) -> "StepVars":
+        return dataclasses.replace(self, **kw)
+
+
+@dataclasses.dataclass(frozen=True)
+class Stage:
+    """A named, pure (init, apply) transform stage."""
+
+    name: str
+    init: Callable[[PyTree], Optional[PyTree]]
+    apply: Callable[[StepCtx, StepVars, dict], tuple[StepVars, dict]]
+
+
+def chain(*stages: Stage) -> tuple[Stage, ...]:
+    """Validate and freeze a stage sequence (names must be unique: the name
+    keys the stage's state and is how cross-stage readers address it)."""
+    names = [s.name for s in stages]
+    if len(set(names)) != len(names):
+        raise ValueError(f"duplicate stage names in chain: {names}")
+    return tuple(stages)
+
+
+def chain_init(stages: tuple[Stage, ...], params: PyTree) -> dict:
+    """State dict for a chain; stateless stages contribute no entry."""
+    out = {}
+    for s in stages:
+        st = s.init(params)
+        if st is not None:
+            out[s.name] = st
+    return out
+
+
+def chain_apply(stages: tuple[Stage, ...], ctx: StepCtx, sv: StepVars,
+                states: dict) -> tuple[StepVars, dict]:
+    states = dict(states)
+    for s in stages:
+        sv, states = s.apply(ctx, sv, states)
+    return sv, states
+
+
+def _stateless(name: str, fn) -> Stage:
+    return Stage(name=name, init=lambda params: None, apply=fn)
+
+
+# ---------------------------------------------------------------------------
+# gradient preprocessing
+# ---------------------------------------------------------------------------
+
+def weight_decay(wd: float, *, name: str = "weight_decay") -> Stage:
+    """Coupled L2 added to the raw gradient before any momentum logic (the
+    paper's constant 1e-4, matching the reference PyTorch recipe)."""
+
+    def apply(ctx, sv, states):
+        if not wd:
+            return sv, states
+        g = _tmap(lambda g_, p: g_ + wd * p, sv.update, sv.params_pre_mix)
+        return sv.replace(update=g, grads=g), states
+
+    return _stateless(name, apply)
+
+
+# ---------------------------------------------------------------------------
+# momentum / scaling stages
+# ---------------------------------------------------------------------------
+
+def heavyball(beta: float, *, nesterov: bool = False,
+              seed_from: str | None = None,
+              name: str = "heavyball") -> Stage:
+    """HeavyBall / Nesterov momentum on the incoming update.
+
+    ``seed_from`` re-seeds the buffer each step from another stage's
+    ``m_hat`` (the quasi-global / DMSGD pattern: Alg. 1 line 5) instead of
+    keeping local state — the stage is then stateless and the named buffer
+    stage, placed after ``gossip_mix``, owns the persistent state.
+    """
+
+    def init(params):
+        return None if seed_from else {"m": _zeros_like(params)}
+
+    def apply(ctx, sv, states):
+        m_prev = (states[seed_from]["m_hat"] if seed_from
+                  else states[name]["m"])
+        m = _axpy(beta, m_prev, sv.update)
+        upd = _axpy(beta, m, sv.update) if nesterov else m
+        sv = sv.replace(update=upd)
+        if seed_from:
+            return sv, states
+        return sv, {**states, name: {"m": m}}
+
+    return Stage(name=name, init=init, apply=apply)
+
+
+def qhm_momentum(beta: float, mu: float, *, name: str = "qhm") -> Stage:
+    """Quasi-Hyperbolic momentum — the exact single-worker reduction of
+    QG-DSGDm (App. B.3.1): with beta_hat = mu + (1-mu)*beta,
+
+        m <- beta_hat m + g ;  upd = (1 - mu/beta_hat) m + (mu/beta_hat) g
+    """
+    beta_hat = mu + (1.0 - mu) * beta
+    c1 = 1.0 - mu / beta_hat
+    c2 = mu / beta_hat
+
+    def init(params):
+        return {"m": _zeros_like(params)}
+
+    def apply(ctx, sv, states):
+        m = _axpy(beta_hat, states[name]["m"], sv.update)
+        upd = _tmap(lambda mm, gg: c1 * mm + c2 * gg, m, sv.update)
+        return sv.replace(update=upd), {**states, name: {"m": m}}
+
+    return Stage(name=name, init=init, apply=apply)
+
+
+def adam_scale(beta1: float, beta2: float, eps: float, *,
+               seed_from: str | None = None, name: str = "adam") -> Stage:
+    """Adam moment update + preconditioned direction (no bias correction —
+    the paper's decentralized Adam baselines, Table 6).  ``seed_from`` reads
+    the moments from a quasi-global buffer stage (Alg. 2) instead of local
+    state, mirroring :func:`heavyball`."""
+
+    def init(params):
+        if seed_from:
+            return None
+        return {"m": _zeros_like(params), "v": _zeros_like(params)}
+
+    def apply(ctx, sv, states):
+        if seed_from:
+            m_prev = states[seed_from]["m_hat"]
+            v_prev = states[seed_from]["v_hat"]
+        else:
+            m_prev = states[name]["m"]
+            v_prev = states[name]["v"]
+        g = sv.update
+        m = _lerp(beta1, m_prev, g)
+        v = _tmap(lambda vv, gg: beta2 * vv + (1 - beta2) * gg * gg,
+                  v_prev, g)
+        upd = _tmap(lambda mm, vv: mm / (jnp.sqrt(vv) + eps), m, v)
+        sv = sv.replace(update=upd)
+        if seed_from:
+            return sv, states
+        return sv, {**states, name: {"m": m, "v": v}}
+
+    return Stage(name=name, init=init, apply=apply)
+
+
+# ---------------------------------------------------------------------------
+# tracking-family stages (the update-rewriting transforms)
+# ---------------------------------------------------------------------------
+
+def grad_track(*, name: str = "grad_track") -> Stage:
+    """Gossip-tracking of the incoming update's global average:
+
+        y^t = W y^{t-1} + u^t - u^{t-1}        (y^0 = u^0)
+
+    Placed right after ``weight_decay`` this is classic gradient tracking
+    (Table 2); placed *after* a momentum stage it tracks the momentum update
+    itself — the Global Update Tracking pattern (Aketi et al., 2023).  Makes
+    one ``mix_fn`` call, before the params mix site.
+    """
+
+    def init(params):
+        return {"y": _zeros_like(params), "prev_u": _zeros_like(params),
+                "t": jnp.asarray(0, jnp.int32)}
+
+    def apply(ctx, sv, states):
+        st = states[name]
+        first = st["t"] == 0
+        u = sv.update
+        y_mixed = ctx.mix_fn(ctx.w, st["y"])
+        y = _tmap(lambda ym, uu, pu: jnp.where(first, uu, ym + uu - pu),
+                  y_mixed, u, st["prev_u"])
+        new = {"y": y, "prev_u": u, "t": st["t"] + 1}
+        return sv.replace(update=y), {**states, name: new}
+
+    return Stage(name=name, init=init, apply=apply)
+
+
+def d2_correction(*, plus: bool = False, name: str = "d2") -> Stage:
+    """D^2 (Tang et al. 2018b) correction of the update:
+
+        u <- (x^{t-1} - x^t) * scale / eta + g^t - g^{t-1}
+
+    (plain g on the first step).  ``plus`` rescales the model-difference
+    term by eta_t / eta_{t-1} — the paper's D^2_+ lr-decay fix (footnote 9).
+    """
+
+    def init(params):
+        return {"prev_x": _tmap(jnp.array, params),
+                "prev_g": _zeros_like(params),
+                "prev_lr": jnp.asarray(0.0, jnp.float32),
+                "t": jnp.asarray(0, jnp.int32)}
+
+    def apply(ctx, sv, states):
+        st = states[name]
+        eta = ctx.lr
+        first = st["t"] == 0
+        prev_lr = jnp.where(first, eta, st["prev_lr"])
+        scale = (eta / prev_lr) if plus else 1.0
+        u = sv.update
+        corr = _tmap(
+            lambda xp, x, g, gp: jnp.where(
+                first, g, scale * (xp - x) / eta + g - gp),
+            st["prev_x"], sv.params_pre_mix, u, st["prev_g"])
+        new = {"prev_x": sv.params_pre_mix, "prev_g": u,
+               "prev_lr": jnp.asarray(eta, jnp.float32), "t": st["t"] + 1}
+        return sv.replace(update=corr), {**states, name: new}
+
+    return Stage(name=name, init=init, apply=apply)
+
+
+# ---------------------------------------------------------------------------
+# the mix point
+# ---------------------------------------------------------------------------
+
+def gossip_mix(*, name: str = "gossip_mix") -> Stage:
+    """THE mix point: take the local half-step x - eta*u, then one gossip
+    round through ``ctx.mix_fn`` (dense einsum by default; the ring-ppermute
+    or compressed CHOCO/EF schedules plug in here without the chain
+    noticing).  Records ``params_post_mix`` for the post-mix buffer stages.
+    """
+
+    def apply(ctx, sv, states):
+        half = _axpy(-ctx.lr, sv.update, sv.params)
+        mixed = ctx.mix_fn(ctx.w, half)
+        return sv.replace(params=mixed, params_post_mix=mixed), states
+
+    return _stateless(name, apply)
+
+
+def descent(*, name: str = "descent") -> Stage:
+    """Local step x - eta*u with NO gossip round — the n_nodes=1 / QHM path
+    (zero mix call sites, so compressed comm correctly attaches nothing)."""
+
+    def apply(ctx, sv, states):
+        new = _axpy(-ctx.lr, sv.update, sv.params)
+        return sv.replace(params=new, params_post_mix=new), states
+
+    return _stateless(name, apply)
+
+
+# ---------------------------------------------------------------------------
+# post-mix buffer stages
+# ---------------------------------------------------------------------------
+
+def qg_buffer(mu: float, *, tau: int = 1, name: str = "qg_buffer") -> Stage:
+    """Quasi-global momentum buffer (Alg. 1 lines 8-9):
+
+        d     = (x_pre - x_post) / eta
+        m_hat <- mu * m_hat + (1 - mu) * d
+
+    ``tau > 1`` is the multi-step variant (Alg. 3): the refresh only lands on
+    steps with (t+1) % tau == 0, otherwise the buffer carries over.  Pair
+    with ``heavyball(seed_from=<this name>)`` before the mix point.
+    """
+
+    def init(params):
+        return {"m_hat": _zeros_like(params)}
+
+    def apply(ctx, sv, states):
+        m_hat = states[name]["m_hat"]
+        d = _scale(1.0 / ctx.lr, _sub(sv.params_pre_mix, sv.params_post_mix))
+        new_m_hat = _lerp(mu, m_hat, d)
+        if tau > 1:
+            refresh = (jnp.asarray(ctx.t) + 1) % tau == 0
+            new_m_hat = _tmap(
+                lambda new, old: jnp.where(refresh, new, old),
+                new_m_hat, m_hat)
+        return sv, {**states, name: {"m_hat": new_m_hat}}
+
+    return Stage(name=name, init=init, apply=apply)
+
+
+def qg_adam_buffer(beta1: float, beta2: float, *,
+                   name: str = "qg_adam") -> Stage:
+    """Quasi-global Adam buffers (Alg. 2 lines 8-10): refresh both moments
+    from the per-node L2-normalized model difference d_hat after the gossip
+    round.  Pair with ``adam_scale(seed_from=<this name>)``."""
+
+    def init(params):
+        return {"m_hat": _zeros_like(params), "v_hat": _zeros_like(params)}
+
+    def apply(ctx, sv, states):
+        st = states[name]
+        d = _sub(sv.params_pre_mix, sv.params_post_mix)
+        flat = jax.tree.leaves(d)
+        n_nodes = flat[0].shape[0]
+        sq = sum(jnp.sum(l.reshape(n_nodes, -1).astype(jnp.float32) ** 2,
+                         axis=-1) for l in flat)
+        inv_norm = 1.0 / (jnp.sqrt(sq) + 1e-12)  # [n]
+
+        def _nrm(leaf):
+            bshape = (n_nodes,) + (1,) * (leaf.ndim - 1)
+            return leaf * inv_norm.reshape(bshape).astype(leaf.dtype)
+
+        d_hat = _tmap(_nrm, d)
+        m_hat = _lerp(beta1, st["m_hat"], d_hat)
+        v_hat = _tmap(lambda vv, dd: beta2 * vv + (1 - beta2) * dd * dd,
+                      st["v_hat"], d_hat)
+        return sv, {**states, name: {"m_hat": m_hat, "v_hat": v_hat}}
+
+    return Stage(name=name, init=init, apply=apply)
+
+
+def dmsgd_buffer(beta: float, mu: float, *, option: int = 2,
+                 name: str = "dmsgd_buffer") -> Stage:
+    """DMSGD re-organized buffer (Balu et al. 2020, Alg. 7/8).  Option II:
+
+        m_hat <- mu * (beta m_hat + g) + (1 - mu) * (x_pre - x_post)/eta
+
+    Option I additionally replays the previous step's quantities (App. B.2).
+    The ``beta m_hat + g`` term is exactly the incoming update from the
+    paired ``heavyball(seed_from=<this name>)`` stage, read off ``sv``.
+    """
+
+    def init(params):
+        z = _zeros_like(params)
+        if option == 1:
+            return {"m_hat": z, "prev_m_hat": z, "prev_g": z,
+                    "prev_x": _tmap(jnp.array, params)}
+        return {"m_hat": z}
+
+    def apply(ctx, sv, states):
+        st = states[name]
+        eta = ctx.lr
+        local = sv.update  # beta * m_hat + g from the seeded heavyball
+        d = _scale(1.0 / eta, _sub(sv.params_pre_mix, sv.params_post_mix))
+        if option == 2:
+            return sv, {**states, name: {"m_hat": _lerp(mu, local, d)}}
+        inner = _tmap(
+            lambda loc, xp, x, pm, pg: loc + (xp - x) / eta
+            - beta * pm - pg,
+            local, st["prev_x"], sv.params_pre_mix, st["prev_m_hat"],
+            st["prev_g"])
+        new = {"m_hat": _lerp(mu, inner, d), "prev_m_hat": st["m_hat"],
+               "prev_g": sv.grads, "prev_x": sv.params_pre_mix}
+        return sv, {**states, name: new}
+
+    return Stage(name=name, init=init, apply=apply)
+
+
+def slow_outer(slow_beta: float, slow_alpha: float, tau: int, *,
+               base: str = "heavyball", name: str = "slow_outer") -> Stage:
+    """SlowMo outer loop (Wang et al. 2020c, Alg. 5): every ``tau`` steps,
+    globally average the model (the extra All-Reduce the paper calls out),
+    apply slow momentum on the outer iterates, and reset the ``base``
+    momentum stage's buffer — a cross-stage write, which is why it must be
+    chained *after* the base momentum stage's update this step."""
+
+    def init(params):
+        return {"slow_m": _zeros_like(params),
+                "anchor": _tmap(jnp.array, params)}
+
+    def apply(ctx, sv, states):
+        st = states[name]
+        eta = ctx.lr
+        do_outer = (jnp.asarray(ctx.t) + 1) % tau == 0
+        n = jax.tree.leaves(sv.params)[0].shape[0]
+        avg = gossip.node_mean(sv.params)
+        avg = _tmap(lambda a: jnp.broadcast_to(a, (n,) + a.shape[1:]), avg)
+        slow_m_new = _tmap(
+            lambda sm, x0, xt: slow_beta * sm + (x0 - xt) / eta,
+            st["slow_m"], st["anchor"], avg)
+        outer = _tmap(lambda x0, sm: x0 - slow_alpha * eta * sm,
+                      st["anchor"], slow_m_new)
+        sel = lambda a, b: _tmap(lambda x, y: jnp.where(do_outer, x, y), a, b)
+        out_params = sel(outer, sv.params)
+        base_m = states[base]["m"]
+        new_states = {
+            **states,
+            base: {**states[base], "m": sel(_zeros_like(base_m), base_m)},
+            name: {"slow_m": sel(slow_m_new, st["slow_m"]),
+                   "anchor": sel(outer, st["anchor"])},
+        }
+        return sv.replace(params=out_params), new_states
+
+    return Stage(name=name, init=init, apply=apply)
+
+
+def buffer_sync(target: str = "heavyball", *, mode: str = "ring",
+                name: str = "buffer_sync") -> Stage:
+    """Gossip another stage's momentum buffer after the params mix (Table 5
+    'extra communication' rows): ``mode='ring'`` mixes with the same W
+    through ``mix_fn`` (a second compressed-comm site), ``mode='complete'``
+    averages it globally every step."""
+
+    def apply(ctx, sv, states):
+        m = states[target]["m"]
+        if mode == "ring":
+            m = ctx.mix_fn(ctx.w, m)
+        elif mode == "complete":
+            n = jax.tree.leaves(m)[0].shape[0]
+            m = ctx.mix_fn(jnp.full((n, n), 1.0 / n, dtype=jnp.float32), m)
+        else:
+            raise ValueError(f"unknown buffer_sync mode {mode!r}")
+        return sv, {**states, target: {**states[target], "m": m}}
+
+    return _stateless(name, apply)

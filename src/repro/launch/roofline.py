@@ -109,6 +109,16 @@ def parse_collectives(hlo_text: str) -> dict:
             "total_link_bytes": total}
 
 
+def cost_analysis_dict(compiled) -> dict:
+    """``Compiled.cost_analysis()`` across the jax API drift: older releases
+    return a single dict, 0.4.x returns a one-element list of per-device
+    dicts, and either may be empty/None."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return ca or {}
+
+
 @dataclasses.dataclass
 class ProbeCost:
     flops: float
@@ -118,7 +128,7 @@ class ProbeCost:
 
     @staticmethod
     def from_compiled(compiled) -> "ProbeCost":
-        ca = compiled.cost_analysis() or {}
+        ca = cost_analysis_dict(compiled)
         coll = parse_collectives(compiled.as_text())
         return ProbeCost(
             flops=float(ca.get("flops", 0.0)),

@@ -24,7 +24,7 @@ import numpy as np
 
 from repro.configs.base import InputShape, ModelConfig
 from repro.core import gossip, topology as topo_lib
-from repro.core.optim import QGDSGDm, QHM
+from repro.core.optim import make_optimizer
 from repro.models import transformer as tf
 
 PyTree = Any
@@ -136,15 +136,16 @@ def decode_specs(sc: StepConfig) -> dict:
 # ---------------------------------------------------------------------------
 
 def make_opt(sc: StepConfig):
-    mix_fn = gossip.mix_dense
+    """Chain-built optimizer from the registry (core/transforms.py): QHM is
+    the n_nodes=1 reduction (zero mix sites); QG-DSGDm-N otherwise.  The
+    ring_ppermute mix_fn is resolved inside the step builder (needs the
+    mesh) via ``dataclasses.replace`` on the returned optimizer."""
     if sc.n_nodes == 1:
-        return QHM(lr=sc.lr, beta=sc.beta, weight_decay=sc.weight_decay,
-                   name="qhm")
-    if sc.gossip_schedule == "ring_ppermute":
-        # resolved inside the step builder (needs the mesh)
-        pass
-    return QGDSGDm(lr=sc.lr, beta=sc.beta, weight_decay=sc.weight_decay,
-                   nesterov=True, name="qg_dsgdm_n", mix_fn=mix_fn)
+        return make_optimizer("qhm", lr=sc.lr, beta=sc.beta,
+                              weight_decay=sc.weight_decay)
+    return make_optimizer("qg_dsgdm_n", lr=sc.lr, beta=sc.beta,
+                          weight_decay=sc.weight_decay,
+                          mix_fn=gossip.mix_dense)
 
 
 def ring_w(n: int) -> np.ndarray:

@@ -1,2 +1,3 @@
 from . import checkpoint, trainer
-from .trainer import DecentralizedTrainer, TrainState, lr_schedule, run_training
+from .trainer import (DecentralizedTrainer, TrainState, lr_schedule,
+                      run_training, run_training_scanned)

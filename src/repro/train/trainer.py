@@ -10,6 +10,11 @@ One engine serves three execution modes:
 The jitted step:   grads = vmap(grad(loss))(params, batches)
                    params, opt_state = opt.step(params, grads, w=W_t)
 
+The optimizer step is a pure transform chain (core/transforms.py), so whole
+training chunks fuse under ``lax.scan``: ``run_training_scanned`` dispatches
+k steps at a time (one device dispatch per chunk instead of per step),
+producing step-identical metrics to ``run_training``.
+
 Model state (e.g. BN running stats) is vmapped but NEVER gossiped — the
 paper's local-statistics BN protocol.
 """
@@ -81,6 +86,7 @@ class DecentralizedTrainer:
         self._comm_gamma = None   # resolved on first sight of params
         self._comm_bits = None    # wire bits per site per node per step
         self._step_jit = jax.jit(self._step_impl)
+        self._chunk_jit = jax.jit(self._chunk_impl)
 
     def _comm_setup(self, params):
         if self.comm is not None and self._comm_gamma is None:
@@ -163,6 +169,28 @@ class DecentralizedTrainer:
         return TrainState(new_params, new_opt, new_ms, state.t + 1,
                           new_comm), out_metrics
 
+    # -- k fused steps under one dispatch (lax.scan over the chunk) -----------
+    def step_chunk(self, state: TrainState, batches: PyTree, rng):
+        """Run ``k`` decentralized steps in ONE jitted dispatch.
+
+        ``batches`` leaves are stacked ``[k, n, ...]``; the per-step rng
+        stream is split inside the scan exactly as ``run_training`` splits it
+        outside, so the trajectory is step-identical to k calls of ``step``.
+        Returns the final state, the advanced rng, and metrics stacked [k].
+        """
+        self._comm_setup(state.params)
+        return self._chunk_jit(state, batches, rng)
+
+    def _chunk_impl(self, state: TrainState, batches: PyTree, rng):
+        def body(carry, batch):
+            st, r = carry
+            r, sub = jax.random.split(r)
+            st, metrics = self._step_impl(st, batch, sub)
+            return (st, r), metrics
+
+        (state, rng), metrics = jax.lax.scan(body, (state, rng), batches)
+        return state, rng, metrics
+
     # -- evaluation -----------------------------------------------------------
     def evaluate(self, state: TrainState, eval_fn, batches) -> dict:
         """Paper protocol: evaluate EACH node's local model on the FULL eval
@@ -179,6 +207,22 @@ class DecentralizedTrainer:
         return {k: float(np.mean(v / count)) for k, v in totals.items()}
 
 
+def _record_step(history, i, steps, log_every, log_fn, get_metrics):
+    """THE logging cadence, shared by both loops (the scanned loop's
+    step-identical-history contract depends on it): print+append on log_every
+    boundaries and the final step, append silently on the final step
+    otherwise.  ``get_metrics() -> {name: float}`` is called lazily so the
+    scanned loop only pulls a chunk's metrics off-device when some step in
+    it is actually recorded."""
+    if log_every and (i % log_every == 0 or i == steps - 1):
+        m = get_metrics()
+        history.append({"step": i, **m})
+        log_fn(f"step {i:5d}  " + "  ".join(
+            f"{k}={v:.4f}" for k, v in m.items()))
+    elif i == steps - 1:
+        history.append({"step": i, **get_metrics()})
+
+
 def run_training(trainer: DecentralizedTrainer, state: TrainState,
                  batch_iter, steps: int, *, rng=None, log_every: int = 0,
                  log_fn=print) -> tuple[TrainState, list[dict]]:
@@ -188,12 +232,54 @@ def run_training(trainer: DecentralizedTrainer, state: TrainState,
         rng, sub = jax.random.split(rng)
         batch = jax.tree.map(jnp.asarray, batch)
         state, metrics = trainer.step(state, batch, sub)
-        if log_every and (i % log_every == 0 or i == steps - 1):
-            m = {k: float(v) for k, v in metrics.items()}
-            history.append({"step": i, **m})
-            log_fn(f"step {i:5d}  " + "  ".join(
-                f"{k}={v:.4f}" for k, v in m.items()))
-        elif i == steps - 1:
-            history.append({"step": i, **{k: float(v)
-                                          for k, v in metrics.items()}})
+        _record_step(history, i, steps, log_every, log_fn,
+                     lambda: {k: float(v) for k, v in metrics.items()})
+    return state, history
+
+
+def run_training_scanned(trainer: DecentralizedTrainer, state: TrainState,
+                         batch_iter, steps: int, *, chunk: int = 16,
+                         rng=None, log_every: int = 0,
+                         log_fn=print) -> tuple[TrainState, list[dict]]:
+    """``run_training`` with ``chunk`` steps fused under one ``lax.scan``
+    dispatch — same rng stream, same math, step-identical metrics, but the
+    per-step Python/jit dispatch overhead is paid once per chunk (the `loop`
+    benchmark table quantifies the speedup on the CPU/bench path).
+
+    A shorter tail (``steps % chunk``) runs as its own scan trace; history
+    entries follow the exact ``run_training`` logging cadence.
+    """
+    rng = jax.random.PRNGKey(0) if rng is None else rng
+    it = iter(batch_iter)
+    history = []
+    done = 0
+    while done < steps:
+        k = min(chunk, steps - done)
+        batches = []
+        for _ in range(k):
+            try:
+                batches.append(next(it))
+            except StopIteration:
+                break
+        if not batches:
+            break
+        k = len(batches)
+        # stack on host, ship once: one transfer per chunk instead of one
+        # device commit per step per leaf
+        stacked = jax.tree.map(
+            lambda *xs: jnp.asarray(np.stack(xs)), *batches)
+        state, rng, metrics = trainer.step_chunk(state, stacked, rng)
+
+        host: dict = {}  # chunk metrics, transferred once and only if needed
+
+        def chunk_metrics(j):
+            if not host:
+                host.update({mk: np.asarray(mv)
+                             for mk, mv in metrics.items()})
+            return {mk: float(mv[j]) for mk, mv in host.items()}
+
+        for j in range(k):
+            _record_step(history, done + j, steps, log_every, log_fn,
+                         lambda j=j: chunk_metrics(j))
+        done += k
     return state, history

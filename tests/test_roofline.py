@@ -74,7 +74,7 @@ def test_analytic_flops_match_cost_analysis_trip1():
     fn = jax.jit(lambda p, bb: jax.value_and_grad(
         lambda q: tf.train_loss(q, bb, cfg, unroll=True, chunk=s))(p))
     compiled = fn.lower(params, batch).compile()
-    flops = compiled.cost_analysis()["flops"]
+    flops = R.cost_analysis_dict(compiled)["flops"]
     analytic = 6 * cfg.n_params() * b * s
     assert 0.5 < flops / analytic < 3.0, (flops, analytic)
 
