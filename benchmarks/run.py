@@ -12,6 +12,9 @@ runs; ``--only <name>`` selects a single table.
   fig6      topology scales (ring n in {8,16,32})              [Fig. 6/T7]
   comm      compressed gossip (CHOCO/EF) vs dense: bytes-on-wire + us/step
   loop      python-loop vs lax.scan-fused training steps/sec
+  topology  compiled sparse ppermute schedule vs dense all-gather:
+            bytes-on-wire + mixes/sec per topology (subprocess w/ forced
+            host devices; DESIGN.md §7)
   serving   batched prefill+decode throughput (reduced archs)
   kernels   Pallas kernel microbench vs jnp reference
   roofline  aggregate the dry-run artifacts into the §Roofline table
@@ -132,6 +135,51 @@ def comm(quick=False):
             f"acc={r['acc']:.4f},loss={r['loss']:.4f},"
             f"ratio={r['comm_ratio']:.1f},"
             f"bytes_per_round={r['comm_bits_per_node'] / 8:.0f}")
+
+
+def topology(quick=False):
+    """Topology-compiler table: for each registry topology, the compiled
+    sparse ppermute schedule (rounds, messages, us/mix) vs the dense
+    all-gather baseline run through the SAME shard_map machinery.  Runs in a
+    subprocess because the forced host-device count must precede jax init.
+    ``bytes_ratio`` is dense/sparse point-to-point model messages per gossip
+    step — the acceptance row is social32 >= 2x."""
+    import subprocess
+    import sys
+
+    combos = [["ring", 8], ["ring", 16], ["ring", 32],
+              ["torus", 8], ["torus", 16], ["torus", 32],
+              ["exp", 8], ["exp", 16], ["exp", 32],
+              ["social", 32], ["star", 16], ["complete", 16]]
+    if quick:
+        combos = [c for c in combos if c[1] <= 16 or c[0] == "social"]
+    spec = {"devices": max(c[1] for c in combos),
+            "dim": 16384 if quick else 65536,
+            "reps": 15 if quick else 20, "combos": combos}
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src" + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    res = subprocess.run(
+        [sys.executable, "-m", "benchmarks.topo_worker", json.dumps(spec)],
+        capture_output=True, text=True, timeout=3600, env=env,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+    lines = [ln for ln in res.stdout.splitlines()
+             if ln.startswith("TOPO_ROWS ")]
+    if not lines:
+        raise RuntimeError(f"topo_worker failed: {res.stderr[-2000:]}")
+    for r in json.loads(lines[0][len("TOPO_ROWS "):]):
+        tag = f"topology/{r['label']}"
+        csv_row(f"{tag}/dense", r["us_dense"],
+                f"mix_per_s={1e6 / r['us_dense']:.1f},"
+                f"msgs={r['msgs_dense']:.0f}")
+        csv_row(
+            f"{tag}/sparse", r["us_sparse"],
+            f"mix_per_s={1e6 / r['us_sparse']:.1f},"
+            f"msgs={r['msgs_sparse']:.0f},"
+            f"bytes_ratio={r['bytes_ratio']:.1f},"
+            f"rounds={r['rounds']},phases={r['phases']},"
+            f"speedup={r['us_dense'] / r['us_sparse']:.2f},"
+            f"fallback={'dense' if r['fallback_dense'] else 'sparse'}")
 
 
 def loop(quick=False):
@@ -266,8 +314,8 @@ def roofline(quick=False):
 TABLES = {
     "table1": table1, "table2": table2, "table4": table4, "table5": table5,
     "table6": table6, "fig3": fig3, "fig6": fig6, "comm": comm,
-    "loop": loop, "serving": serving, "kernels": kernels,
-    "roofline": roofline,
+    "topology": topology, "loop": loop, "serving": serving,
+    "kernels": kernels, "roofline": roofline,
 }
 
 

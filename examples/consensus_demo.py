@@ -6,15 +6,16 @@ gradient-free QG iteration (Eq. 4) — on the paper's topologies.
 import numpy as np
 
 from repro.core import consensus, topology
-from repro.core.topology import spectral_gap
 
 print(f"{'topology':<12} {'rho':>6}  {'target':>7}  {'gossip':>7}  {'QG':>5}")
 for topo in (topology.ring(16), topology.ring(32), topology.ring(48),
-             topology.social_network(), topology.torus(4, 4)):
+             topology.social_network(), topology.torus(4, 4),
+             topology.one_peer_exponential(16)):
     hg = consensus.run_gossip(topo, steps=1000)
     hq = consensus.run_qg_consensus(topo, steps=1000, beta=0.9, mu=0.9)
-    rho = spectral_gap(topo.w() if not topo.time_varying
-                       else topo.mixing.mean(0))
+    # stack-aware 1 - lambda_2(E[W^T W]); valid for the time-varying
+    # exp graph too (the old mean-of-phases hack under-reported it)
+    rho = topo.spectral_gap()
     for target in (1e-1, 1e-2, 1e-3):
         sg = consensus.steps_to_distance(hg, target)
         sq = consensus.steps_to_distance(hq, target)

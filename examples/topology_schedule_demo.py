@@ -1,0 +1,42 @@
+"""Topology compiler demo (DESIGN.md §7): compile every paper topology into
+its sparse ppermute schedule and print the wire-cost table.
+
+The compiler decomposes any doubly-stochastic W — including each phase of
+the time-varying 1-peer exponential graph — into weighted partial-
+permutation rounds, so gossip ships bytes proportional to node degree
+instead of the all-gather's n-1 models per node.  Phases whose schedule
+would cost at least an all-gather (complete graph) fall back to dense.
+
+    PYTHONPATH=src python examples/topology_schedule_demo.py
+"""
+from repro.core import gossip, topology
+
+TOPOS = (topology.ring(16), topology.ring(32), topology.torus(4, 4),
+         topology.star(16), topology.social_network(),
+         topology.one_peer_exponential(16), topology.complete(16))
+
+print(f"{'topology':<10} {'n':>3} {'phases':>6} {'rounds':>6} "
+      f"{'msgs/step':>9} {'all-gather':>10} {'bytes ratio':>11}  schedule")
+for topo in TOPOS:
+    s = gossip.compile_gossip_schedule(topo)
+    kind = "dense-fallback" if s.any_dense else "sparse-ppermute"
+    print(f"{topo.name:<10} {topo.n:>3} {len(s.phases):>6} "
+          f"{s.max_rounds:>6} {s.messages_per_step():>9.0f} "
+          f"{s.dense_messages_per_step():>10.0f} "
+          f"{s.dense_messages_per_step() / max(s.messages_per_step(), 1):>10.1f}x"
+          f"  {kind}")
+
+print("\nexp16 phase 0 decomposition (exact permutation splitting):")
+phase = gossip.compile_gossip_schedule(topology.one_peer_exponential(16)).phases[0]
+(perm, recv_w), = phase.rounds
+print(f"  x_i' = {phase.self_weight[0]:.2f} x_i "
+      f"+ {recv_w[0]:.2f} ppermute(x; i -> i+1)   [{len(perm)} pairs]")
+
+print("\nsocial32 greedy edge-coloring "
+      "(14 rounds == max degree, Konig-optimal):")
+sched = gossip.compile_gossip_schedule(topology.social_network())
+for r, (pairs, _) in enumerate(sched.phases[0].rounds[:3]):
+    print(f"  round {r}: {len(pairs)} edges, e.g. {list(pairs)[:4]} ...")
+print(f"  ... {len(sched.phases[0].rounds)} rounds total, "
+      f"{sched.messages_per_step():.0f} messages vs "
+      f"{sched.dense_messages_per_step():.0f} all-gather")

@@ -149,7 +149,7 @@ class CompressedGossip:
 
     # -- one compressed gossip round ------------------------------------------
     def mix_site(self, w, tree: PyTree, site: dict, *, key,
-                 gamma: float) -> tuple[PyTree, dict]:
+                 gamma: float, mix_impl=None) -> tuple[PyTree, dict]:
         """One compressed gossip round at this call site.  Pure.
 
         CHOCO mode (default): EF21 replica tracking — the x̂ lag *is* the
@@ -160,6 +160,11 @@ class CompressedGossip:
         node ships q = C(x + e), keeps e' = x + e - q, and gossips directly
         on the compressed values:  x <- x + gamma * (W - I) q.  Telescoping
         means dropped mass is only delayed, never lost.
+
+        ``mix_impl(w, tree)`` is the inner gossip contraction on the public
+        anchors — ``gossip.mix_dense`` by default; the trainer injects the
+        compiled sparse-ppermute schedule here when a mesh is present, so
+        compressed gossip rides the same collective schedule as dense.
         """
         if self.error_feedback:
             q, new_residual = ef.ef_compress(
@@ -171,17 +176,18 @@ class CompressedGossip:
                                           site["x_hat"])
             new_site = {"x_hat": new_x_hat}
             anchor = new_x_hat
-        mixed = gossip.mix_dense(w, anchor)
+        mixed = (mix_impl or gossip.mix_dense)(w, anchor)
         out = jax.tree.map(
             lambda x, mh, h: x + gamma * (mh - h), tree, mixed, anchor)
         return out, new_site
 
     # -- trainer hook ----------------------------------------------------------
     def make_mix_fn(self, sites_in: list[dict], sites_out: list[dict],
-                    key, gamma: float):
+                    key, gamma: float, mix_impl=None):
         """Closure implementing the ``mix_fn`` signature.  The i-th call
         consumes ``sites_in[i]`` and writes ``sites_out[i]``; the caller
-        returns ``sites_out`` from its traced step."""
+        returns ``sites_out`` from its traced step.  ``mix_impl`` overrides
+        the inner anchor gossip (see ``mix_site``)."""
         counter = [0]
 
         def comm_mix(w, tree):
@@ -193,7 +199,7 @@ class CompressedGossip:
                     f"{len(sites_in)} sites — re-init the trainer state")
             out, new_site = self.mix_site(
                 w, tree, sites_in[i], key=jax.random.fold_in(key, i),
-                gamma=gamma)
+                gamma=gamma, mix_impl=mix_impl)
             sites_out[i] = new_site
             return out
 

@@ -6,23 +6,32 @@ carries the decentralized node index as its *leading* axis, shape
 sharded over the ``data`` (or ``pod``) mesh axis, so the mixing contraction
 below becomes collectives over that axis.
 
-Two schedules:
+Schedules (DESIGN.md §7):
 
 * ``mix_dense``  — paper-faithful: ``x <- einsum('nm,m...->n...', W, x)``.
   For a sharded node axis XLA lowers this to an all-gather (every node reads
   every other node's model) even when W is sparse.  This is the *baseline*
   collective schedule recorded in EXPERIMENTS.md §Perf.
-* ``mix_ring_shardmap`` — beyond-paper TPU schedule: for a ring W, exchange
-  only the two neighbours with ``jax.lax.ppermute`` inside ``shard_map``;
-  2/(n-1) of the all-gather bytes.  Bit-wise it computes the same weighted
-  sum (tested against ``mix_dense``).
+* ``mix_sparse_shardmap`` — the topology compiler's schedule: ANY
+  doubly-stochastic ``W`` (including each phase of a time-varying stack) is
+  decomposed once at setup time (``compile_gossip_schedule``) into weighted
+  ``jax.lax.ppermute`` rounds — exact permutation splitting for 1-peer
+  graphs, greedy edge-coloring for undirected graphs (social32, torus,
+  star) — so bytes-on-wire scale with node degree, not n.  Phases whose
+  decomposition would exceed the all-gather cost fall back to a dense
+  all-gather round automatically.
+* ``mix_ring_shardmap`` — the original ring-only special case (two
+  ppermutes), kept for the hillclimb/dry-run surface; the compiler produces
+  the identical schedule for ``ring(n)``.
 
-Both act on whole pytrees and are differentiable (gossip happens outside the
+All of them act on whole pytrees, compute the same weighted sum (tested
+against each other), and are differentiable (gossip happens outside the
 gradient in DSGD-family algorithms, but consensus experiments use it inside
 jitted loops).
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 from typing import Any
 
@@ -39,18 +48,31 @@ __all__ = [
     "mix_dense",
     "mix_leaf_dense",
     "mix_ring_shardmap",
+    "mix_sparse_shardmap",
+    "make_sparse_mix_fn",
     "neighbor_sum_ppermute",
+    "GossipSchedule",
+    "PhaseSchedule",
+    "compile_gossip_schedule",
+    "schedule_matrix",
     "consensus_distance",
     "node_mean",
 ]
 
 
 def mix_leaf_dense(w: jax.Array, x: jax.Array) -> jax.Array:
-    """x[n, ...] -> (W @ x) with the contraction on the node axis."""
+    """x[n, ...] -> (W @ x) with the contraction on the node axis.
+
+    The contraction runs in (at least) fp32 whatever the leaf dtype: casting
+    W to bf16 leaves rows summing to 1 +- ~1e-2, a consensus drift that
+    compounds over steps.  In fp32 the row-sum error (~1e-7) rounds away when
+    the result is cast back to the leaf dtype.
+    """
     flat = x.reshape(x.shape[0], -1)
-    out = jnp.einsum("nm,mf->nf", w.astype(flat.dtype), flat,
-                     preferred_element_type=flat.dtype)
-    return out.reshape(x.shape)
+    cdt = jnp.promote_types(flat.dtype, jnp.float32)
+    out = jnp.einsum("nm,mf->nf", w.astype(cdt), flat.astype(cdt),
+                     preferred_element_type=cdt)
+    return out.astype(x.dtype).reshape(x.shape)
 
 
 def mix_dense(w: jax.Array | np.ndarray, tree: PyTree) -> PyTree:
@@ -133,6 +155,245 @@ def _shard_map(f, *, mesh, in_specs, out_specs, manual_axes):
     auto = frozenset(mesh.axis_names) - frozenset(manual_axes)
     return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
                check_rep=False, auto=auto)
+
+
+# ---------------------------------------------------------------------------
+# topology compiler: any doubly-stochastic W -> weighted ppermute rounds
+# ---------------------------------------------------------------------------
+
+Round = tuple[tuple[tuple[int, int], ...], np.ndarray]  # (perm pairs, recv_w)
+
+
+@dataclasses.dataclass(frozen=True)
+class PhaseSchedule:
+    """One mixing phase compiled to collective rounds (DESIGN.md §7).
+
+    ``x_i' = self_weight[i] * x_i + sum_r recv_w_r[i] * ppermute_r(x)_i``
+
+    Each round is a *partial permutation*: a set of directed (src, dst)
+    pairs with distinct senders and distinct receivers, realizable as one
+    ``jax.lax.ppermute`` (non-receivers get zeros, and their ``recv_w`` is
+    zero too).  ``dense=True`` marks the all-gather fallback: the phase costs
+    at least as much as an all-gather, so it runs as one
+    ``lax.all_gather`` + row contraction instead.
+    """
+
+    n: int
+    self_weight: np.ndarray                 # [n] diagonal of W
+    rounds: tuple[Round, ...]
+    dense: bool
+    w: np.ndarray                           # [n, n] the phase matrix
+
+    @property
+    def messages(self) -> int:
+        """Point-to-point model messages this phase puts on the wire."""
+        if self.dense:
+            return self.n * (self.n - 1)
+        return sum(len(perm) for perm, _ in self.rounds)
+
+
+@dataclasses.dataclass(frozen=True)
+class GossipSchedule:
+    """Compiled schedule for a (possibly time-varying) topology; step ``t``
+    runs ``phases[t % len(phases)]``."""
+
+    name: str
+    n: int
+    phases: tuple[PhaseSchedule, ...]
+
+    @property
+    def max_rounds(self) -> int:
+        return max((len(p.rounds) for p in self.phases), default=0)
+
+    @property
+    def any_dense(self) -> bool:
+        return any(p.dense for p in self.phases)
+
+    def messages_per_step(self) -> float:
+        """Average point-to-point model messages per gossip step."""
+        return float(np.mean([p.messages for p in self.phases]))
+
+    def dense_messages_per_step(self) -> float:
+        """What the all-gather baseline ships per step: every node reads
+        every other node's model."""
+        return float(self.n * (self.n - 1))
+
+
+def _compile_phase(w: np.ndarray, *, dense_threshold: float) -> PhaseSchedule:
+    """Greedy edge-coloring of one doubly-stochastic matrix.
+
+    Directed edges (src j -> dst i wherever ``w[i, j] > 0``) are first-fit
+    packed into partial permutations.  Edges are ordered by offset
+    ``(dst - src) mod n`` so circulant structure (rings, tori, the 1-peer
+    exponential phases) packs into whole cyclic shifts — the 1-peer phases
+    compile to exactly one full-permutation round.
+
+    Cost model (DESIGN.md §7): a pipelined all-gather costs ~``n - 1``
+    link-message times and ships ``n (n-1)`` messages; the sparse schedule
+    costs ``R`` rounds and ships one message per edge.  Fall back to dense
+    when the rounds give neither a latency win (``R < n - 1``) nor at least
+    a 2x bytes win at equal latency.
+    """
+    n = w.shape[0]
+    edges = [(j, i) for i in range(n) for j in range(n)
+             if i != j and w[i, j] > 0.0]
+    edges.sort(key=lambda e: ((e[1] - e[0]) % n, e[0]))
+    senders: list[set[int]] = []
+    receivers: list[set[int]] = []
+    rounds_pairs: list[list[tuple[int, int]]] = []
+    for src, dst in edges:
+        for r in range(len(rounds_pairs)):
+            if src not in senders[r] and dst not in receivers[r]:
+                rounds_pairs[r].append((src, dst))
+                senders[r].add(src)
+                receivers[r].add(dst)
+                break
+        else:
+            rounds_pairs.append([(src, dst)])
+            senders.append({src})
+            receivers.append({dst})
+    n_rounds = len(rounds_pairs)
+    n_messages = len(edges)
+    budget = dense_threshold * (n - 1)
+    sparse_wins = n_rounds < budget or (
+        n_rounds <= budget and n_messages * 2 <= n * (n - 1))
+    if n > 1 and not sparse_wins:
+        return PhaseSchedule(n=n, self_weight=np.diag(w).copy(), rounds=(),
+                             dense=True, w=w.copy())
+    rounds = []
+    for pairs in rounds_pairs:
+        recv_w = np.zeros(n)
+        for src, dst in pairs:
+            recv_w[dst] = w[dst, src]
+        rounds.append((tuple(sorted(pairs)), recv_w))
+    phase = PhaseSchedule(n=n, self_weight=np.diag(w).copy(),
+                          rounds=tuple(rounds), dense=False, w=w.copy())
+    np.testing.assert_allclose(schedule_matrix(phase), w, atol=0.0)
+    return phase
+
+
+def schedule_matrix(phase: PhaseSchedule) -> np.ndarray:
+    """Reconstruct the mixing matrix a compiled phase implements (exact —
+    every edge carries its original weight)."""
+    if phase.dense:
+        return phase.w.copy()
+    m = np.diag(phase.self_weight)
+    for pairs, recv_w in phase.rounds:
+        for src, dst in pairs:
+            m[dst, src] += recv_w[dst]
+    return m
+
+
+def compile_gossip_schedule(topo: Topology, *,
+                            dense_threshold: float = 1.0) -> GossipSchedule:
+    """Compile every phase of ``topo.mixing`` into a static ppermute
+    schedule (with per-phase dense fallback).  Pure numpy; runs once at
+    trainer/step-builder setup."""
+    phases = tuple(_compile_phase(topo.mixing[k],
+                                  dense_threshold=dense_threshold)
+                   for k in range(topo.mixing.shape[0]))
+    return GossipSchedule(name=topo.name, n=topo.n, phases=phases)
+
+
+def _apply_phase_local(x: jax.Array, phase: PhaseSchedule, *,
+                       axis_name: str) -> jax.Array:
+    """One compiled phase on a local (per-node) shard inside shard_map.
+    Per-node weights are gathered from [n] constants by ``axis_index``; the
+    weighted sum runs in fp32 like ``mix_leaf_dense``.  Collectives ship the
+    *native* leaf dtype — receivers upcast after receipt (exact for bf16),
+    so low-precision models keep their full bytes-on-wire savings."""
+    i = jax.lax.axis_index(axis_name)
+    cdt = jnp.promote_types(x.dtype, jnp.float32)
+    if phase.dense:
+        g = jax.lax.all_gather(x, axis_name)           # [n, ...local]
+        w_row = jnp.asarray(phase.w, cdt)[i]           # [n]
+        out = jnp.tensordot(w_row, g.astype(cdt), axes=1)
+    else:
+        out = x.astype(cdt) * jnp.asarray(phase.self_weight, cdt)[i]
+        for perm, recv_w in phase.rounds:
+            recv = jax.lax.ppermute(x, axis_name, perm=list(perm))
+            out = out + recv.astype(cdt) * jnp.asarray(recv_w, cdt)[i]
+    return out.astype(x.dtype)
+
+
+def mix_sparse_shardmap(
+    tree: PyTree,
+    *,
+    topology: Topology | None = None,
+    schedule: GossipSchedule | None = None,
+    t: jax.Array | int = 0,
+    mesh: jax.sharding.Mesh,
+    axis_name: str,
+) -> PyTree:
+    """Sparse neighbor-exchange gossip for ANY registry topology.
+
+    Equivalent to ``mix_dense(topology.w(t), tree)`` for leaves with a
+    leading node axis sharded on ``axis_name`` (the mesh axis size must equal
+    ``topology.n``), but exchanges only actual graph edges via the compiled
+    ppermute rounds.  ``t`` may be a traced step counter: time-varying stacks
+    select their phase with ``lax.switch`` inside the shard_map body (every
+    node holds the same replicated ``t``, so all devices take the same
+    branch).  Pass a pre-compiled ``schedule`` to skip recompilation in hot
+    setup paths.
+    """
+    if schedule is None:
+        if topology is None:
+            raise ValueError("need topology= or schedule=")
+        schedule = compile_gossip_schedule(topology)
+    n = schedule.n
+    if dict(mesh.shape).get(axis_name) != n:
+        raise ValueError(
+            f"schedule for n={n} nodes but mesh axis {axis_name!r} has size "
+            f"{dict(mesh.shape).get(axis_name)}")
+    n_phases = len(schedule.phases)
+    # static t (python int) or a single phase: resolve the phase now and
+    # compile no switch; only a traced step counter pays the lax.switch
+    static_phase = None
+    if n_phases == 1:
+        static_phase = schedule.phases[0]
+    elif isinstance(t, int):
+        static_phase = schedule.phases[t % n_phases]
+
+    def local_fn(t_, local_tree):
+        def mix_leaf(x):
+            if static_phase is not None:
+                return _apply_phase_local(x, static_phase,
+                                          axis_name=axis_name)
+            branches = [functools.partial(_apply_phase_local, phase=ph,
+                                          axis_name=axis_name)
+                        for ph in schedule.phases]
+            return jax.lax.switch(t_ % n_phases, branches, x)
+
+        return jax.tree.map(mix_leaf, local_tree)
+
+    specs = jax.tree.map(
+        lambda x: P(axis_name, *([None] * (x.ndim - 1))), tree)
+    return _shard_map(
+        local_fn, mesh=mesh, in_specs=(P(), specs), out_specs=specs,
+        manual_axes=frozenset({axis_name}),
+    )(jnp.asarray(t, jnp.int32), tree)
+
+
+def make_sparse_mix_fn(schedule: GossipSchedule, *, mesh, axis_name: str,
+                       w_ref, t: jax.Array | int = 0):
+    """``mix_fn(w, tree)`` closure over a compiled schedule — THE way to
+    install the sparse schedule behind the zoo-wide hook.
+
+    Dispatch is by identity of the ``w`` operand: sites that mix with the
+    topology matrix pass the exact ``ctx.w`` object (``w_ref`` here) through
+    the hook and get the compiled schedule at phase ``t``; sites that pass
+    any OTHER matrix — ``buffer_sync(mode='complete')`` ships a 1/n global
+    average — get the dense contraction of the matrix they actually asked
+    for, since the schedule only encodes W_t.
+    """
+
+    def mix_fn(w, tree):
+        if w is not w_ref:
+            return mix_dense(w, tree)
+        return mix_sparse_shardmap(tree, schedule=schedule, t=t, mesh=mesh,
+                                   axis_name=axis_name)
+
+    return mix_fn
 
 
 def node_mean(tree: PyTree) -> PyTree:

@@ -58,6 +58,12 @@ class Topology:
     def max_degree(self) -> int:
         return max(len(nb) for nb in self.neighbors)
 
+    def spectral_gap(self) -> float:
+        """``1 - lambda_2(E[W^T W])`` over the whole phase stack — valid for
+        time-varying and directed mixing (Assumption 1.4's form), unlike
+        eigendecomposing a single phase."""
+        return spectral_gap(self.mixing)
+
     def validate(self, atol: float = 1e-10) -> None:
         for k in range(self.mixing.shape[0]):
             if not is_doubly_stochastic(self.mixing[k], atol=atol):
@@ -76,12 +82,20 @@ def is_doubly_stochastic(w: np.ndarray, atol: float = 1e-8) -> bool:
 
 
 def spectral_gap(w: np.ndarray) -> float:
-    """rho = 1 - |lambda_2|^2 for symmetric W; matches Assumption 1.4 in
-    expectation for the time-invariant case."""
-    eig = np.linalg.eigvals(w)
-    eig = np.sort(np.abs(eig))[::-1]
+    """rho = 1 - lambda_2(E[W^T W]) over a phase stack (Assumption 1.4).
+
+    Accepts a single ``[n, n]`` matrix or a ``[T, n, n]`` stack.  E[W^T W] is
+    symmetric PSD whatever the phases are, so this is well-defined for
+    directed and time-varying topologies; for a single symmetric W it reduces
+    to the classic ``1 - |lambda_2(W)|^2``.
+    """
+    w = np.asarray(w, dtype=np.float64)
+    if w.ndim == 2:
+        w = w[None]
+    m = np.mean([wk.T @ wk for wk in w], axis=0)
+    eig = np.sort(np.linalg.eigvalsh(m))[::-1]
     lam2 = eig[1] if len(eig) > 1 else 0.0
-    return float(1.0 - lam2**2)
+    return float(1.0 - min(max(lam2, 0.0), 1.0))
 
 
 def metropolis_weights(adj: np.ndarray) -> np.ndarray:
@@ -200,7 +214,12 @@ def social_network() -> Topology:
 def one_peer_exponential(n: int) -> Topology:
     """1-peer directed exponential graph (Assran et al. 2019): time-varying,
     at phase k each node i sends to (i + 2^k) mod n and averages with weight
-    1/2.  Each phase matrix is doubly stochastic (a permutation average)."""
+    1/2.  Each phase matrix is doubly stochastic (a permutation average).
+
+    ``neighbors`` is the symmetric closure of the union graph: node i both
+    *sends to* (i + 2^k) and *receives from* (i - 2^k), and a ppermute
+    schedule needs the recv edges too, so both directions are recorded.
+    """
     if n & (n - 1):
         raise ValueError("one_peer_exponential requires power-of-two n")
     phases = int(np.log2(n))
@@ -212,7 +231,8 @@ def one_peer_exponential(n: int) -> Topology:
         for i in range(n):
             w[i, i] = 0.5
             w[(i + off) % n, i] = 0.5  # column i: node i's mass goes to i and i+off
-            adj[i, (i + off) % n] = 1
+            adj[i, (i + off) % n] = 1  # send edge
+            adj[(i + off) % n, i] = 1  # recv edge (symmetric closure)
         mats.append(w)
     return Topology(
         f"exp{n}", n, np.stack(mats), _neighbors_from_adj(adj)

@@ -20,19 +20,33 @@ def dirichlet_partition(
     *,
     seed: int = 0,
     min_per_client: int = 2,
+    max_retries: int = 100,
 ) -> list[np.ndarray]:
     """Return a list of disjoint index arrays, one per client.
 
     Follows the standard implementation: for each class, split its sample
-    indices among clients proportionally to a Dir(alpha) draw.
+    indices among clients proportionally to a Dir(alpha) draw.  Draws are
+    rejected until every client holds ``min_per_client`` samples; each retry
+    is reseeded (``default_rng((seed, attempt))``) so a pathological stream
+    cannot repeat, and after ``max_retries`` failures a ``ValueError``
+    reports the best minimum achieved instead of looping forever (the old
+    ``while True`` hung whenever the constraint was unsatisfiable — small
+    dataset, low alpha, many clients).
     """
-    rng = np.random.default_rng(seed)
+    if n_clients * min_per_client > len(labels):
+        raise ValueError(
+            f"min_per_client={min_per_client} unsatisfiable: {n_clients} "
+            f"clients need {n_clients * min_per_client} samples, have "
+            f"{len(labels)}")
     n_classes = int(labels.max()) + 1
-    idx_by_class = [np.nonzero(labels == c)[0] for c in range(n_classes)]
-    for idx in idx_by_class:
-        rng.shuffle(idx)
-
-    while True:
+    best_min = -1
+    for attempt in range(max_retries):
+        # attempt 0 replays the historical default_rng(seed) stream exactly
+        # (partitions baked into benchmarks/tests stay put); retries reseed.
+        rng = np.random.default_rng(seed if attempt == 0 else (seed, attempt))
+        idx_by_class = [np.nonzero(labels == c)[0] for c in range(n_classes)]
+        for idx in idx_by_class:
+            rng.shuffle(idx)
         client_idx: list[list[int]] = [[] for _ in range(n_clients)]
         for c in range(n_classes):
             props = rng.dirichlet(np.full(n_clients, alpha))
@@ -48,11 +62,16 @@ def dirichlet_partition(
             for i, part in enumerate(np.split(idx_by_class[c], cuts)):
                 client_idx[i].extend(part.tolist())
         sizes = [len(ci) for ci in client_idx]
+        best_min = max(best_min, min(sizes))
         if min(sizes) >= min_per_client:
-            break
-    out = [np.array(sorted(ci), dtype=np.int64) for ci in client_idx]
-    assert sum(len(o) for o in out) == len(labels)
-    return out
+            out = [np.array(sorted(ci), dtype=np.int64) for ci in client_idx]
+            assert sum(len(o) for o in out) == len(labels)
+            return out
+    raise ValueError(
+        f"dirichlet_partition: could not give every client "
+        f">= {min_per_client} samples in {max_retries} attempts "
+        f"(best achieved minimum: {best_min}); relax min_per_client, raise "
+        f"alpha, or use fewer clients")
 
 
 def heterogeneity_stats(labels: np.ndarray,

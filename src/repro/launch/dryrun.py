@@ -9,7 +9,8 @@ Usage:
   PYTHONPATH=src python -m repro.launch.dryrun --arch all --shape all \
       --mesh single            # baseline roofline table (16x16)
   PYTHONPATH=src python -m repro.launch.dryrun --mesh multi  # 2x16x16 pass
-  ... --gossip ring_ppermute   # beyond-paper collective schedule (§Perf)
+  ... --gossip sparse_ppermute # compiled collective schedule, any topology
+  ... --gossip ring_ppermute   # legacy ring-only schedule (§Perf)
 
 Per combo this compiles:
   full   — the production program (layer scan): proves lowering/compile,
@@ -252,7 +253,7 @@ def main(argv=None):
     ap.add_argument("--mesh", default="single", choices=["single", "multi",
                                                          "both"])
     ap.add_argument("--gossip", default="dense",
-                    choices=["dense", "ring_ppermute"])
+                    choices=["dense", "ring_ppermute", "sparse_ppermute"])
     ap.add_argument("--out", default="experiments/dryrun")
     ap.add_argument("--force", action="store_true")
     ap.add_argument("--probes-only", action="store_true")

@@ -48,7 +48,8 @@ class StepConfig:
     unroll: bool = False
     remat: str = "full"
     param_dtype: Any = jnp.bfloat16
-    gossip_schedule: str = "dense"   # dense | ring_ppermute (hillclimb)
+    gossip_schedule: str = "dense"   # dense | ring_ppermute | sparse_ppermute
+    topology: str = "ring"           # any core/topology.get_topology name
     skip_masked_chunks: bool = False
     cache_shard_features: bool = True   # decode: shard K/D dims over model
     remat_attention: bool = False       # recompute attn chunks in backward
@@ -148,8 +149,11 @@ def make_opt(sc: StepConfig):
                           mix_fn=gossip.mix_dense)
 
 
-def ring_w(n: int) -> np.ndarray:
-    return topo_lib.ring(n).w(0)
+def step_topology(sc: StepConfig) -> topo_lib.Topology:
+    """The StepConfig's topology (n_nodes=1 degrades to the trivial ring)."""
+    if sc.n_nodes == 1:
+        return topo_lib.ring(1)
+    return topo_lib.get_topology(sc.topology, sc.n_nodes)
 
 
 # ---------------------------------------------------------------------------
@@ -158,7 +162,10 @@ def ring_w(n: int) -> np.ndarray:
 
 def build_train_step(sc: StepConfig, *, mesh=None, node_axis: str | None = None):
     cfg = sc.cfg
-    w_const = jnp.asarray(ring_w(sc.n_nodes), jnp.float32)
+    topo = step_topology(sc)
+    # the builder's step is phase-static (it passes t=0), so time-varying
+    # topologies contribute their first phase here
+    w_const = jnp.asarray(topo.w(0), jnp.float32)
 
     act_spec = None
     head_spec = None
@@ -178,12 +185,25 @@ def build_train_step(sc: StepConfig, *, mesh=None, node_axis: str | None = None)
     if sc.gossip_schedule == "ring_ppermute" and sc.n_nodes > 1:
         if mesh is None or node_axis is None:
             raise ValueError("ring_ppermute needs mesh + node_axis")
+        if sc.topology != "ring":
+            raise ValueError(
+                "ring_ppermute mixes with a ring schedule only; use "
+                f"gossip_schedule='sparse_ppermute' for topology="
+                f"{sc.topology!r}")
 
         def mix(w, tree):
             return gossip.mix_ring_shardmap(tree, mesh=mesh,
                                             axis_name=node_axis)
 
         opt = dataclasses.replace(opt, mix_fn=mix)
+    elif sc.gossip_schedule == "sparse_ppermute" and sc.n_nodes > 1:
+        # topology compiler (DESIGN.md §7): works for every registry
+        # topology, not just the ring
+        if mesh is None or node_axis is None:
+            raise ValueError("sparse_ppermute needs mesh + node_axis")
+        schedule = gossip.compile_gossip_schedule(topo)
+        opt = dataclasses.replace(opt, mix_fn=gossip.make_sparse_mix_fn(
+            schedule, mesh=mesh, axis_name=node_axis, w_ref=w_const))
 
     def loss_fn(p, batch):
         return tf.train_loss(

@@ -70,19 +70,37 @@ def lr_schedule(base_lr: float, *, total_steps: int, warmup: int = 0,
 @dataclasses.dataclass
 class DecentralizedTrainer:
     """loss_fn(params_i, model_state_i, batch_i, rng_i) ->
-    (loss, (new_model_state, metrics_dict))."""
+    (loss, (new_model_state, metrics_dict)).
+
+    When ``mesh`` is given (node axis sharded over ``node_axis``), the
+    topology is compiled once into a sparse ppermute schedule
+    (``gossip.compile_gossip_schedule``) and every mix — including the inner
+    anchor gossip of compressed CHOCO/EF comm — runs through
+    ``gossip.mix_sparse_shardmap`` instead of the dense all-gather
+    contraction (DESIGN.md §7).  The trajectory is identical either way.
+    """
 
     loss_fn: Callable
     optimizer: DecentralizedOptimizer
     topology: Topology
     lr_fn: Callable[[Any], Any] = None  # defaults to optimizer.lr constant
     comm: Optional[CompressedGossip] = None  # compressed gossip (DESIGN.md §4)
+    mesh: Any = None              # jax Mesh: auto-select the sparse schedule
+    node_axis: str = "data"       # mesh axis carrying the node index
 
     def __post_init__(self):
         if self.lr_fn is None:
             lr = self.optimizer.lr
             self.lr_fn = lambda t: jnp.asarray(lr, jnp.float32)
         self._mixing = jnp.asarray(self.topology.mixing, jnp.float32)
+        self._schedule = None
+        if self.mesh is not None:
+            axis = dict(self.mesh.shape).get(self.node_axis)
+            if axis != self.topology.n:
+                raise ValueError(
+                    f"mesh axis {self.node_axis!r} has size {axis}, topology "
+                    f"has n={self.topology.n}")
+            self._schedule = gossip.compile_gossip_schedule(self.topology)
         self._comm_gamma = None   # resolved on first sight of params
         self._comm_bits = None    # wire bits per site per node per step
         self._step_jit = jax.jit(self._step_impl)
@@ -136,6 +154,14 @@ class DecentralizedTrainer:
         lr = self.lr_fn(state.t)
 
         opt = self.optimizer
+        mix_impl = None
+        if self._schedule is not None:
+            # sparse neighbor-exchange schedule, phase-selected by the
+            # traced step counter (w-operand dispatch: see make_sparse_mix_fn)
+            mix_impl = gossip.make_sparse_mix_fn(
+                self._schedule, mesh=self.mesh, axis_name=self.node_axis,
+                w_ref=w, t=state.t)
+            opt = dataclasses.replace(opt, mix_fn=mix_impl)
         new_comm = state.comm_state
         if self.comm is not None and state.comm_state is not None:
             # compressed gossip: swap the mix hook for a CHOCO round against
@@ -144,7 +170,8 @@ class DecentralizedTrainer:
             sites_out = list(sites_in)
             comm_key = jax.random.fold_in(rng, 0x0C0)
             opt = dataclasses.replace(opt, mix_fn=self.comm.make_mix_fn(
-                sites_in, sites_out, comm_key, self._comm_gamma))
+                sites_in, sites_out, comm_key, self._comm_gamma,
+                mix_impl=mix_impl))
             new_comm = sites_out
 
         new_params, new_opt = opt.step(

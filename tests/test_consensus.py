@@ -30,10 +30,9 @@ def test_qg_consensus_theory_constraint_fast_graphs(topo):
     speed.  Both observations are asserted; EXPERIMENTS.md records the
     nuance."""
     import numpy as np
-    from repro.core.topology import spectral_gap
     h_q9 = consensus.run_qg_consensus(topo, steps=800, beta=0.9, mu=0.9)
     assert consensus.steps_to_distance(h_q9, 1e-2) != -1  # converges anyway
-    rho = spectral_gap(topo.w())
+    rho = topo.spectral_gap()
     beta_ok = min(0.9, (rho / 21) / (1 + rho / 21))
     h_qc = consensus.run_qg_consensus(topo, steps=800, beta=beta_ok,
                                       mu=beta_ok)

@@ -20,6 +20,35 @@ def test_partition_disjoint_and_complete(alpha, n, seed):
     assert all(len(p) >= 2 for p in parts)
 
 
+def test_partition_unsatisfiable_min_raises():
+    """Regression: the old ``while True`` looped forever when
+    ``min_per_client`` could not be met.  n_clients > n_samples /
+    min_per_client must raise immediately instead of hanging."""
+    rng = np.random.default_rng(0)
+    labels = rng.integers(0, 3, size=10)
+    with pytest.raises(ValueError, match="unsatisfiable"):
+        dirichlet_partition(labels, n_clients=8, alpha=0.1, min_per_client=2)
+
+
+def test_partition_bounded_retries_report_best_minimum():
+    """Satisfiable-in-principle but practically unreachable draws terminate
+    after ``max_retries`` with the achieved minimum in the message."""
+    rng = np.random.default_rng(1)
+    labels = rng.integers(0, 2, size=20)
+    with pytest.raises(ValueError, match="achieved minimum"):
+        dirichlet_partition(labels, n_clients=10, alpha=0.005,
+                            min_per_client=2, max_retries=3)
+
+
+def test_partition_retry_seed_reproducible():
+    """Same seed -> same partition, including across the retry path."""
+    rng = np.random.default_rng(2)
+    labels = rng.integers(0, 10, size=400)
+    a = dirichlet_partition(labels, 8, 0.1, seed=7)
+    b = dirichlet_partition(labels, 8, 0.1, seed=7)
+    assert all(np.array_equal(x, y) for x, y in zip(a, b))
+
+
 def test_alpha_controls_heterogeneity():
     """Smaller alpha -> more skewed clients (higher mean TV distance)."""
     rng = np.random.default_rng(0)

@@ -47,6 +47,28 @@ def test_complete_mix_is_exact_average():
                                    atol=1e-5)
 
 
+def test_bf16_mix_stays_at_consensus():
+    """Regression: ``mix_leaf_dense`` must contract in fp32.  A constant
+    bf16 tree is already at consensus; 500 repeated mixes must keep it there
+    EXACTLY — casting W to bf16 makes rows sum to 1 +- ~1e-2 and the tree
+    drifts off its constant value within a few mixes."""
+    n = 16
+    w = jnp.asarray(topology.ring(n).w(), jnp.float32)
+    const = {"a": jnp.full((n, 6, 4), 0.3017578125, jnp.bfloat16),
+             "b": jnp.full((n, 3), -1.1328125, jnp.bfloat16)}
+
+    @jax.jit
+    def mix500(t):
+        return jax.lax.fori_loop(
+            0, 500, lambda _, tr: gossip.mix_dense(w, tr), t)
+
+    out = mix500(const)
+    for k in const:
+        assert out[k].dtype == jnp.bfloat16
+        np.testing.assert_array_equal(np.asarray(out[k], np.float32),
+                                      np.asarray(const[k], np.float32))
+
+
 _SHARDMAP_SCRIPT = r"""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"

@@ -44,6 +44,42 @@ def test_spectral_gap_ordering():
     assert comp > torus > ring > 0
 
 
+def test_spectral_gap_symmetric_matches_classic():
+    """For a single symmetric W the E[W^T W] form reduces to the classic
+    1 - lambda_2(W)^2."""
+    for topo in (T.ring(16), T.torus(4, 4), T.star(8)):
+        w = topo.w()
+        eig = np.sort(np.abs(np.linalg.eigvals(w)))[::-1]
+        classic = 1.0 - eig[1] ** 2
+        assert abs(T.spectral_gap(w) - classic) < 1e-10
+        assert abs(topo.spectral_gap() - classic) < 1e-10
+
+
+def test_spectral_gap_time_varying_exp():
+    """Regression: the old implementation eigendecomposed a single
+    non-symmetric phase.  The stack form 1 - lambda_2(E[W^T W]) is positive
+    for the 1-peer exponential graph and well-defined per phase too."""
+    topo = T.one_peer_exponential(16)
+    rho = topo.spectral_gap()
+    assert 0.0 < rho <= 1.0
+    # a single directed phase: W^T W is still what Assumption 1.4 measures
+    rho1 = T.spectral_gap(topo.w(0))
+    assert 0.0 < rho1 <= 1.0
+    # the full stack mixes strictly faster than any single 1-peer phase
+    assert rho > rho1
+
+
+def test_exp_neighbors_symmetric_closed():
+    """Union-graph adjacency must include recv edges (i receives from
+    i - 2^k), not just send edges — a ppermute schedule needs both."""
+    topo = T.one_peer_exponential(16)
+    for i, nbrs in enumerate(topo.neighbors):
+        for j in nbrs:
+            assert i in topo.neighbors[j]
+    # node 0 sends to 1,2,4,8 and receives from 15,14,12,8
+    assert set(topo.neighbors[0]) == {1, 2, 4, 8, 15, 14, 12}
+
+
 def test_social_is_32_nodes():
     topo = T.social_network()
     assert topo.n == 32  # 18 women + 14 events (paper's Social Network)
