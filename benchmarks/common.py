@@ -4,109 +4,66 @@ Scaled-down analogue of the paper's CIFAR-10 protocol: synthetic CIFAR-shaped
 classification (data/synthetic.py), Dirichlet non-i.i.d. partition, ring /
 social topologies, learning-rate warmup + stage-wise decay, evaluation =
 averaged per-node accuracy on the full eval set (paper §5.1).
+
+Every run is a declarative ``ExperimentSpec`` executed through the one
+``repro.api.run`` assembly path — a benchmark row IS a named grid point, so
+any table cell can be reproduced standalone with
+
+    python -m repro.api social32_alpha0.1_qg --set loop.steps=300
 """
 from __future__ import annotations
 
 import time
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
-from repro import comm as comm_mod
-from repro.core import optim, topology
-from repro.data import ClientDataset, dirichlet_partition, make_classification
-from repro.train import (DecentralizedTrainer, lr_schedule, run_training,
-                         run_training_scanned)
+from repro import api
 
 
-def _mlp_init(key, d_in, width=64, classes=20):
-    k1, k2 = jax.random.split(key)
-    return ({"w1": jax.random.normal(k1, (d_in, width)) * (1 / np.sqrt(d_in)),
-             "b1": jnp.zeros(width),
-             "w2": jax.random.normal(k2, (width, classes)) * (1 / np.sqrt(width)),
-             "b2": jnp.zeros(classes)}, {})
-
-
-def _mlp_apply(p, xb):
-    h = jax.nn.relu(xb @ p["w1"] + p["b1"])
-    return h @ p["w2"] + p["b2"]
-
-
-def _ce_loss_fn(p, ms, batch_i, rng):
-    """Per-node cross-entropy in the trainer's loss_fn signature."""
-    xb, yb = batch_i
-    logits = _mlp_apply(p, xb)
-    yb = yb.astype(jnp.int32)
-    ce = jnp.mean(jax.nn.logsumexp(logits, -1) -
-                  jnp.take_along_axis(logits, yb[:, None], -1)[:, 0])
-    return ce, ({}, {})
-
-
-def _task_data(*, n_data, seed, noise=2.5, n_classes=20):
-    """The calibrated benchmark task (noise/class difficulty tuned so the
-    paper's method ordering emerges; see run_decentralized), flattened."""
-    x, y = make_classification(n=n_data, hw=8, seed=seed, noise=noise,
-                               n_classes=n_classes)
-    return x.reshape(len(x), -1).astype(np.float32), y
-
-
-def run_decentralized(
+def bench_spec(
     method: str, *, alpha: float, topo_name: str = "ring", n_nodes: int = 16,
     steps: int = 150, lr: float = 0.1, seed: int = 0, batch: int = 16,
     n_data: int = 4096, noise: float = 2.5, n_classes: int = 20,
     opt_kwargs: dict | None = None, comm: str | None = None,
     comm_gamma: float | None = None, comm_ef: bool = False,
-) -> dict:
-    """Train one method; return final metrics + wall time.
+) -> api.ExperimentSpec:
+    """The calibrated benchmark grid point as a spec.
 
     Task difficulty (noise=2.5, 20 classes) is calibrated so the paper's
     method ordering emerges: at alpha=0.1 on ring-16, DSGD << DSGDm-N <
     QG-DSGDm-N (see EXPERIMENTS.md)."""
-    x, y = _task_data(n_data=n_data, seed=seed, noise=noise,
-                      n_classes=n_classes)
-    x_train, y_train = x[: n_data // 2], y[: n_data // 2]
-    x_test, y_test = x[n_data // 2:], y[n_data // 2:]
-
-    topo = topology.get_topology(topo_name, n_nodes)
-    n_nodes = topo.n
-    parts = dirichlet_partition(y_train, n_nodes, alpha, seed=seed)
-    ds = ClientDataset((x_train, y_train), parts, batch=batch, seed=seed)
-
-    opt = optim.make_optimizer(method, lr=lr, weight_decay=1e-4,
-                               **(opt_kwargs or {}))
-    trainer = DecentralizedTrainer(
-        _ce_loss_fn, opt, topo,
-        lr_fn=lr_schedule(lr, total_steps=steps, warmup=max(1, steps // 20),
+    return api.ExperimentSpec(
+        name=f"bench/{method}/{topo_name}{n_nodes}/alpha{alpha}",
+        seed=seed,
+        data=api.DataSpec(dataset="classification", alpha=alpha, batch=batch,
+                          n_data=n_data, n_classes=n_classes, hw=8,
+                          noise=noise, train_frac=0.5),
+        topology=api.TopologySpec(name=topo_name, n=n_nodes),
+        optim=api.OptimSpec(name=method, lr=lr, weight_decay=1e-4,
+                            kwargs=dict(opt_kwargs or {})),
+        comm=api.CommSpec(compressor=comm or "dense", gamma=comm_gamma,
+                          error_feedback=comm_ef),
+        loop=api.LoopSpec(steps=steps, warmup=max(1, steps // 20),
                           decay_at=(0.5, 0.75)),
-        comm=comm_mod.make_comm(comm, gamma=comm_gamma,
-                                error_feedback=comm_ef))
-    state = trainer.init(jax.random.PRNGKey(seed),
-                         lambda k: _mlp_init(k, x.shape[1], classes=n_classes))
+        model=api.ModelSpec(name="mlp"),
+    )
 
-    t0 = time.time()
-    state, hist = run_training(trainer, state,
-                               iter(lambda: ds.next_batch(), None), steps,
-                               log_every=0, log_fn=lambda *_: None)
-    wall = time.time() - t0
 
-    # paper eval protocol: each node's model on the full test set, averaged
-    def node_acc(p):
-        logits = _mlp_apply(p, jnp.asarray(x_test))
-        return jnp.mean(jnp.argmax(logits, -1) == jnp.asarray(y_test))
-
-    accs = jax.vmap(node_acc)(state.params)
+def run_decentralized(method: str, **kw) -> dict:
+    """Train one grid point; return final metrics + wall time."""
+    spec = bench_spec(method, **kw)
+    result = api.run(spec, log_fn=lambda *_: None)
     out = {
-        "acc": float(jnp.mean(accs)),
-        "acc_std_over_nodes": float(jnp.std(accs)),
-        "loss": hist[-1]["loss"],
-        "consensus": hist[-1]["consensus"],
-        "us_per_step": wall / steps * 1e6,
-        "steps": steps,
+        "acc": result.final["acc"],
+        "acc_std_over_nodes": result.final["acc_std_over_nodes"],
+        "loss": result.final["loss"],
+        "consensus": result.final["consensus"],
+        "us_per_step": result.wall_time_s / max(1, result.steps_run) * 1e6,
+        "steps": result.steps_run,
     }
-    if "comm_bits_per_node" in hist[-1]:
-        out["comm_bits_per_node"] = hist[-1]["comm_bits_per_node"]
-        out["comm_ratio"] = hist[-1]["comm_ratio"]
+    if "comm_bits_per_node" in result.final:
+        out["comm_bits_per_node"] = result.final["comm_bits_per_node"]
+        out["comm_ratio"] = result.final["comm_ratio"]
     return out
 
 
@@ -115,25 +72,25 @@ def bench_loop(method: str = "qg_dsgdm_n", *, alpha: float = 0.1,
                lr: float = 0.1, seed: int = 0, batch: int = 16) -> list[dict]:
     """Python-loop vs scan-fused training-loop dispatch benchmark.
 
-    Same task/model as ``run_decentralized``; each variant warms up (one
-    full run compiles every trace, including the tail chunk) and then times
-    a fresh `steps`-step run.  The trajectory is step-identical across
-    variants (run_training_scanned's contract), so the only difference is
-    per-step Python/jit dispatch overhead vs one dispatch per chunk.
+    Same assembly path as ``run_decentralized`` (``api.build``); each
+    variant warms up (one full run compiles every trace, including the tail
+    chunk) and then times a fresh `steps`-step run.  The trajectory is
+    step-identical across variants (run_training_scanned's contract), so the
+    only difference is per-step Python/jit dispatch overhead vs one dispatch
+    per chunk.
     """
-    x, y = _task_data(n_data=2048, seed=seed)
-    topo = topology.get_topology("ring", n_nodes)
-    parts = dirichlet_partition(y, topo.n, alpha, seed=seed)
+    from repro.train import run_training, run_training_scanned
 
-    trainer = DecentralizedTrainer(
-        _ce_loss_fn, optim.make_optimizer(method, lr=lr, weight_decay=1e-4),
-        topo)
+    spec = bench_spec(method, alpha=alpha, n_nodes=n_nodes, steps=steps,
+                      lr=lr, seed=seed, batch=batch, n_data=2048)
+    ex = api.build(spec)
+    trainer = ex.trainer
 
     def fresh():
-        ds = ClientDataset((x, y), parts, batch=batch, seed=seed)
-        state = trainer.init(jax.random.PRNGKey(seed),
-                             lambda k: _mlp_init(k, x.shape[1], classes=20))
-        return state, iter(lambda: ds.next_batch(), None)
+        # trainer.init is deterministic, so the already-built init state can
+        # be reused as-is (TrainState is an immutable pytree); only the
+        # batch stream needs to restart
+        return ex.state, ex.task.make_iter()
 
     variants = [("python", run_training, {})]
     variants += [(f"scan{c}", run_training_scanned, {"chunk": c})

@@ -1,6 +1,9 @@
 """Figure 3 reproduction: average consensus — plain gossip vs the
 gradient-free QG iteration (Eq. 4) — on the paper's topologies.
 
+(Pure consensus, no training loop — so no ``ExperimentSpec`` here; every
+topology below is addressable from a spec as ``topology.name``/``.n``.)
+
     PYTHONPATH=src python examples/consensus_demo.py
 """
 import numpy as np

@@ -1,34 +1,24 @@
 """Paper-faithful CV experiment (Table 1 protocol, scaled down): ResNet-20
 with EvoNorm-S0 on synthetic CIFAR-shaped data, ring topology, Dirichlet
-heterogeneity sweep, DSGDm-N vs QG-DSGDm-N.
+heterogeneity sweep, DSGDm-N vs QG-DSGDm-N — spec-first: the argparse flags
+only parameterize a declarative ``ExperimentSpec`` per grid point, and the
+one ``repro.api.run`` path does all the wiring (see also the registered
+``cifar_ring16_alpha0.1_qg`` preset).
 
     PYTHONPATH=src python examples/heterogeneous_cifar.py --steps 60
 
 Compressed gossip (CHOCO behind the mix_fn hook) rides along with
-``--compress``, e.g. QG-DSGDm-N at ~2% of full-gossip bandwidth (50x fewer
-bytes on the wire; each kept top-k entry ships a 64-bit value+index pair):
+``--compress``, e.g. QG-DSGDm-N at ~2% of full-gossip bandwidth; any other
+spec field is reachable with ``--set section.key=value``:
 
     PYTHONPATH=src python examples/heterogeneous_cifar.py \
-        --steps 60 --compress topk:0.01
-
-Both methods are chain-built from shared transform stages (DESIGN.md §6) —
-``gossip_mix`` is the only stage touching the network, which is why the
-compressed schedule composes with every registry entry, including the new
-tracking-family ones (``mt_dsgdm``, ``gut``).
+        --steps 60 --compress topk:0.01 --set topology.name=exp
 
 (ResNet-20 on CPU is slow; defaults are sized for a few minutes.)
 """
 import argparse
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.comm import make_comm
-from repro.core import optim, topology
-from repro.data import ClientDataset, dirichlet_partition, make_classification
-from repro.models import resnet
-from repro.train import DecentralizedTrainer, lr_schedule, run_training
+from repro import api
 
 
 def main():
@@ -46,57 +36,42 @@ def main():
                     help="CHOCO consensus step size (default: per-compressor)")
     ap.add_argument("--error-feedback", action="store_true",
                     help="EF14 value exchange instead of CHOCO replicas")
+    ap.add_argument("--set", dest="overrides", action="append", default=[],
+                    metavar="KEY=VALUE",
+                    help="dotted spec override, e.g. topology.name=exp")
     args = ap.parse_args()
 
-    x, y = make_classification(n=1024, hw=16, n_classes=10, noise=1.2, seed=0)
-    x_tr, y_tr, x_te, y_te = x[:768], y[:768], x[768:], y[768:]
-    norm = args.norm
-
-    def init_fn(key):
-        return resnet.init_resnet20(key, norm=norm)
-
-    def loss_fn(p, s, batch, rng):
-        xb, yb = batch
-        logits, ns = resnet.apply_resnet20(p, s, xb, norm=norm, train=True)
-        yb = yb.astype(jnp.int32)
-        ce = jnp.mean(jax.nn.logsumexp(logits, -1) -
-                      jnp.take_along_axis(logits, yb[:, None], -1)[:, 0])
-        return ce, (ns, {})
-
-    comm = make_comm(args.compress, gamma=args.gamma,
-                     error_feedback=args.error_feedback)
-    if comm is not None:
+    if args.compress:
         print(f"compressed gossip: {args.compress} "
               f"(ef={args.error_feedback})")
 
     for alpha in [float(a) for a in args.alphas.split(",")]:
-        parts = dirichlet_partition(y_tr, args.nodes, alpha, seed=0)
         for method in ("dsgdm_n", "qg_dsgdm_n"):
-            ds = ClientDataset((x_tr, y_tr), parts, batch=args.batch, seed=0)
-            trainer = DecentralizedTrainer(
-                loss_fn, optim.make_optimizer(method, lr=args.lr,
-                                              weight_decay=1e-4),
-                topology.ring(args.nodes),
-                lr_fn=lr_schedule(args.lr, total_steps=args.steps,
-                                  warmup=5, decay_at=(0.5, 0.75)),
-                comm=comm)
-            state = trainer.init(jax.random.PRNGKey(0), init_fn)
-            state, hist = run_training(
-                trainer, state, iter(lambda: ds.next_batch(), None),
-                args.steps, log_every=0, log_fn=lambda *_: None)
+            spec = api.ExperimentSpec(
+                name=f"cifar_ring{args.nodes}_alpha{alpha}_{method}",
+                data=api.DataSpec(dataset="classification", alpha=alpha,
+                                  batch=args.batch, n_data=1024,
+                                  n_classes=10, hw=16, noise=1.2,
+                                  train_frac=0.75),
+                topology=api.TopologySpec(name="ring", n=args.nodes),
+                optim=api.OptimSpec(name=method, lr=args.lr,
+                                    weight_decay=1e-4),
+                comm=api.CommSpec(compressor=args.compress or "dense",
+                                  gamma=args.gamma,
+                                  error_feedback=args.error_feedback),
+                loop=api.LoopSpec(steps=args.steps, warmup=5,
+                                  decay_at=(0.5, 0.75)),
+                model=api.ModelSpec(name="resnet20",
+                                    kwargs={"norm": args.norm}),
+            ).override(*args.overrides)
 
-            def node_acc(p, s):
-                logits, _ = resnet.apply_resnet20(
-                    p, s, jnp.asarray(x_te), norm=norm, train=False)
-                return jnp.mean(jnp.argmax(logits, -1) == jnp.asarray(y_te))
-
-            accs = jax.vmap(node_acc)(state.params, state.model_state)
-            bw = (f"  wire={hist[-1]['comm_ratio']:.0f}x less"
-                  if "comm_ratio" in hist[-1] else "")
+            result = api.run(spec, log_fn=lambda *_: None)
+            bw = (f"  wire={result.wire['ratio_vs_dense']:.0f}x less"
+                  if result.wire["ratio_vs_dense"] > 1 else "")
             print(f"alpha={alpha:5.1f}  {method:12s}  "
-                  f"test acc={float(accs.mean()):.4f}  "
-                  f"final loss={hist[-1]['loss']:.3f}  "
-                  f"consensus={hist[-1]['consensus']:.2e}{bw}")
+                  f"test acc={result.final['acc']:.4f}  "
+                  f"final loss={result.final['loss']:.3f}  "
+                  f"consensus={result.final['consensus']:.2e}{bw}")
 
 
 if __name__ == "__main__":

@@ -7,6 +7,11 @@ permutation rounds, so gossip ships bytes proportional to node degree
 instead of the all-gather's n-1 models per node.  Phases whose schedule
 would cost at least an all-gather (complete graph) fall back to dense.
 
+In a training run the schedule is selected by ``GossipSpec`` inside a
+declarative ``ExperimentSpec`` (``--set gossip.schedule=sparse_ppermute``
+on any spec-first entry point) through the one resolver
+``gossip.resolve_gossip``.
+
     PYTHONPATH=src python examples/topology_schedule_demo.py
 """
 from repro.core import gossip, topology

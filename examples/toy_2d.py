@@ -7,7 +7,10 @@
 The numpy 'qg' update below is the two-stage pattern the production zoo
 expresses as ``heavyball(seed_from=qg_buffer) | gossip_mix | qg_buffer``
 (core/transforms.py): seed momentum from the buffer before averaging,
-refresh the buffer from the model difference after.
+refresh the buffer from the model difference after.  In the declarative API
+that chain is data too — ``OptimSpec(stages=(("heavyball", {"beta": 0.9,
+"seed_from": "qg_buffer"}), ("gossip_mix", {}), ("qg_buffer", {"mu":
+0.9})))`` runs it through ``repro.api.run``.
 
     PYTHONPATH=src python examples/toy_2d.py
 """

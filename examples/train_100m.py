@@ -1,38 +1,20 @@
 """End-to-end driver: decentralized training of a ~100M-parameter llama-style
 transformer for a few hundred steps on synthetic non-i.i.d. LM data.
 
-8 nodes on a ring, QG-DSGDm-N (chain-built: DESIGN.md §6), node-stacked
-params (the exact layout the TPU launch shards over the mesh).  The loop is
-scan-fused: ``--chunk`` steps per device dispatch via
-``run_training_scanned`` (``--chunk 1`` falls back to per-step dispatch;
-at 100M params the step is compute-bound, so the fusion win is modest here
-— see the `loop` benchmark for the dispatch-bound regime).  On this CPU
-container a full run takes a while — use --steps to size it.
+8 nodes on a ring, QG-DSGDm-N, node-stacked params (the exact layout the TPU
+launch shards over the mesh).  Spec-first: the whole experiment is the
+``lm100m_ring8_alpha0.1_qg`` preset with CLI flags folded in as nested
+overrides, run through the one ``repro.api.run`` assembly path.  The loop is
+scan-fused (``--chunk`` steps per device dispatch; ``--chunk 1`` falls back
+to per-step dispatch).  On this CPU container a full run takes a while —
+use --steps to size it.
 
     PYTHONPATH=src python examples/train_100m.py --steps 200
 """
 import argparse
-import dataclasses
-import time
 
-import jax
-import jax.numpy as jnp
-
-from repro.configs import get_config
-from repro.core import optim, topology
-from repro.data import ClientDataset, dirichlet_partition, make_lm_domains
-from repro.models import transformer as tf
-from repro.train import (DecentralizedTrainer, lr_schedule,
-                         run_training_scanned)
-
-
-def model_100m():
-    """~100M params: llama-style, vocab 8192."""
-    base = get_config("tinyllama-1.1b")
-    return dataclasses.replace(
-        base, name="llama-100m", n_layers=8, d_model=768, n_heads=12,
-        n_kv_heads=4, head_dim=64, d_ff=2048, vocab_size=8192,
-        mesh_divisor=1)
+from repro import api
+from repro.api.models import resolve_transformer_config
 
 
 def main():
@@ -47,37 +29,25 @@ def main():
                     help="steps fused per lax.scan dispatch")
     args = ap.parse_args()
 
-    cfg = model_100m()
+    base = api.presets.get("lm100m_ring8_alpha0.1_qg")
+    spec = base.replace(
+        data={"alpha": args.alpha, "batch": args.batch,
+              "seq_len": args.seq_len},
+        topology={"n": args.nodes},
+        optim={"lr": args.lr},
+        loop={"steps": args.steps, "chunk": max(1, args.chunk),
+              "warmup": max(1, args.steps // 20),
+              "log_every": max(1, args.steps // 10)},
+        model={"kwargs": {**base.model.kwargs, "chunk": args.seq_len}},
+    )
+
+    cfg = resolve_transformer_config(spec.model)
     print(f"model: {cfg.name}, {cfg.n_params():,} params "
           f"({cfg.n_params()/1e6:.0f}M), {args.nodes} nodes, ring, "
           f"alpha={args.alpha}")
 
-    tokens, domain = make_lm_domains(
-        n_domains=args.nodes, vocab=cfg.vocab_size, seq_len=args.seq_len,
-        n_seq_per_domain=max(64, args.batch * 16), seed=0)
-    parts = dirichlet_partition(domain, args.nodes, args.alpha, seed=0)
-    ds = ClientDataset((tokens,), parts, batch=args.batch, seed=0)
-
-    def loss_fn(params, _ms, batch, _rng):
-        (toks,) = batch
-        b = {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
-        return tf.train_loss(params, b, cfg, chunk=args.seq_len), ({}, {})
-
-    trainer = DecentralizedTrainer(
-        loss_fn,
-        optim.make_optimizer("qg_dsgdm_n", lr=args.lr, weight_decay=1e-4),
-        topology.ring(args.nodes),
-        lr_fn=lr_schedule(args.lr, total_steps=args.steps,
-                          warmup=max(1, args.steps // 20),
-                          decay_at=(0.5, 0.75)))
-    state = trainer.init(jax.random.PRNGKey(0),
-                         lambda k: (tf.init_lm(k, cfg), {}))
-
-    t0 = time.time()
-    state, hist = run_training_scanned(
-        trainer, state, iter(lambda: ds.next_batch(), None), args.steps,
-        chunk=max(1, args.chunk), log_every=max(1, args.steps // 10))
-    dt = time.time() - t0
+    result = api.run(spec)
+    hist, dt = result.history, result.wall_time_s
     tok_per_step = args.nodes * args.batch * args.seq_len
     print(f"\n{args.steps} steps in {dt:.0f}s "
           f"({tok_per_step * args.steps / dt:.0f} tok/s on CPU); "

@@ -1,0 +1,31 @@
+"""Declarative experiment API (DESIGN.md §8).
+
+One serializable :class:`ExperimentSpec` drives every entry point:
+
+    from repro import api
+
+    spec = api.presets.get("quickstart_ring16_alpha0.1_qg")
+    spec = spec.override("loop.steps=50", "data.alpha=1.0")   # --set form
+    result = api.run(spec)                                    # JSON-dumpable
+    print(result.final["acc"], result.wire["ratio_vs_dense"])
+
+``build(spec)`` returns the assembled :class:`Experiment` (trainer, init
+state, client data, eval fn) when you want the loop under your own control;
+``run(spec)`` is build + train + eval + wire accounting.  Specs validate
+eagerly, round-trip through ``to_dict``/``from_dict``/JSON, and accept
+dotted ``--set key=value`` overrides via :func:`apply_overrides`.
+"""
+from . import data, models, presets, spec
+from .build import Experiment, Result, build, run
+from .models import MODELS, ModelBundle, register_model
+from .spec import (CommSpec, DataSpec, EvalSpec, ExperimentSpec, GossipSpec,
+                   LoopSpec, ModelSpec, OptimSpec, TopologySpec,
+                   apply_overrides)
+
+__all__ = [
+    "ExperimentSpec", "DataSpec", "TopologySpec", "OptimSpec", "CommSpec",
+    "GossipSpec", "LoopSpec", "EvalSpec", "ModelSpec",
+    "apply_overrides", "build", "run", "Experiment", "Result",
+    "MODELS", "ModelBundle", "register_model",
+    "presets", "spec", "models", "data",
+]

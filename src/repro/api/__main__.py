@@ -1,0 +1,59 @@
+"""Run any spec from the command line — the whole grid is addressable as
+
+    python -m repro.api <preset-name> [--set k=v ...] [--out result.json]
+    python -m repro.api path/to/spec.json [--set k=v ...]
+    python -m repro.api --list
+
+``--set`` takes dotted overrides (``loop.steps=3``, ``data.alpha=0.5``,
+``comm.compressor=topk:0.01``); ``--out`` writes the JSON Result (the CI
+``specs`` job uploads these as artifacts).
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+from . import presets
+from .build import run
+from .spec import ExperimentSpec
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.api",
+        description="Run a declarative ExperimentSpec (preset or JSON file).")
+    ap.add_argument("spec", nargs="?",
+                    help="preset name (see --list) or path to a spec JSON")
+    ap.add_argument("--set", dest="overrides", action="append", default=[],
+                    metavar="KEY=VALUE", help="dotted spec override; repeatable")
+    ap.add_argument("--out", default="", help="write the Result JSON here")
+    ap.add_argument("--list", action="store_true", help="list presets")
+    args = ap.parse_args(argv)
+
+    if args.list or not args.spec:
+        print("\n".join(presets.names()))
+        return 0
+
+    if os.path.exists(args.spec):
+        with open(args.spec) as f:
+            spec = ExperimentSpec.from_json(f.read())
+    else:
+        spec = presets.get(args.spec)
+    if args.overrides:
+        spec = spec.override(*args.overrides)
+
+    result = run(spec)
+    print(f"[{spec.name or 'spec'}] steps={result.steps_run} "
+          f"wall={result.wall_time_s:.1f}s final="
+          + "  ".join(f"{k}={v:.4f}" for k, v in sorted(result.final.items())
+                      if isinstance(v, float)))
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(result.to_json())
+        print("result ->", args.out)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,187 @@
+"""The ONE assembly path: ``build(spec) -> Experiment`` and
+``run(spec) -> Result``.
+
+Every entry point (examples, ``benchmarks/common.py``, ``launch/train.py``)
+goes through here, so partition + topology + optimizer + comm + gossip
+schedule + loop are wired once, identically, from the spec — the hand-wired
+constructors they replace are preserved bit-for-bit (pinned by
+tests/test_api.py against the pre-refactor quickstart trajectory).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.comm import count_mix_sites, make_comm
+from repro.core import topology as topo_lib
+from repro.core.optim import ChainOptimizer, make_optimizer
+from repro.train import (DecentralizedTrainer, TrainState, lr_schedule,
+                         run_training, run_training_scanned)
+
+from .data import Task, build_task
+from .models import MODELS, ModelBundle
+from .spec import ExperimentSpec
+
+__all__ = ["Experiment", "Result", "build", "run"]
+
+
+@dataclasses.dataclass
+class Experiment:
+    """A built (but not yet run) experiment: everything ``run`` needs."""
+
+    spec: ExperimentSpec
+    trainer: DecentralizedTrainer
+    state: TrainState                  # freshly initialized
+    task: Task
+    bundle: ModelBundle
+
+    @property
+    def eval_fn(self):
+        return self.bundle.eval_fn
+
+
+@dataclasses.dataclass
+class Result:
+    """JSON-dumpable outcome of ``run(spec)``."""
+
+    spec: dict
+    history: list
+    final: dict                        # last-step train metrics + eval
+    steps_run: int
+    wall_time_s: float
+    wire: dict                         # bytes-on-the-wire accounting
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    def to_json(self, *, indent: int | None = 2) -> str:
+        import json
+        return json.dumps(self.to_dict(), indent=indent)
+
+
+def _make_opt(spec: ExperimentSpec):
+    o = spec.optim
+    if o.stages:
+        return ChainOptimizer(
+            lr=o.lr, weight_decay=o.weight_decay,
+            stage_specs=tuple((n, dict(kw)) for n, kw in o.stages))
+    return make_optimizer(o.name, lr=o.lr, weight_decay=o.weight_decay,
+                          **o.kwargs)
+
+
+def build(spec: ExperimentSpec, *, mesh: Any = None) -> Experiment:
+    """Validate the spec eagerly, then assemble trainer + init state + client
+    data + model bundle.  ``mesh`` (a runtime object, hence not part of the
+    spec) activates the sharded gossip schedules per ``spec.gossip``."""
+    spec.validate()
+    topo = topo_lib.get_topology(spec.topology.name, spec.topology.n)
+    task = build_task(spec, topo.n)
+    bundle = MODELS[spec.model.name](spec, task)
+
+    lp = spec.loop
+    lr_fn = None
+    if lp.warmup or lp.decay_at:
+        lr_fn = lr_schedule(spec.optim.lr, total_steps=lp.steps,
+                            warmup=lp.warmup, decay_at=lp.decay_at,
+                            decay=lp.decay, warmup_from=lp.warmup_from)
+
+    trainer = DecentralizedTrainer(
+        bundle.loss_fn, _make_opt(spec), topo, lr_fn=lr_fn,
+        comm=make_comm(spec.comm.compressor, gamma=spec.comm.gamma,
+                       error_feedback=spec.comm.error_feedback,
+                       backend=spec.comm.backend),
+        mesh=mesh, node_axis=spec.gossip.node_axis,
+        gossip_schedule=spec.gossip.schedule)
+    state = trainer.init(jax.random.PRNGKey(spec.seed), bundle.init_fn)
+    return Experiment(spec=spec, trainer=trainer, state=state, task=task,
+                      bundle=bundle)
+
+
+def _evaluate(trainer, state, eval_fn, batches) -> dict:
+    """Paper protocol with per-node spread: each node's model on the full
+    eval set; report mean and std over nodes per metric."""
+    totals: dict[str, np.ndarray] = {}
+    for batch in batches:
+        batch = jax.tree.map(jnp.asarray, batch)
+        res = jax.vmap(lambda p, ms: eval_fn(p, ms, batch))(
+            state.params, state.model_state)
+        for k, v in res.items():
+            totals[k] = totals.get(k, 0) + np.asarray(v)
+    if not totals:
+        return {}
+    count = totals.pop("count")
+    out = {}
+    for k, v in totals.items():
+        per_node = v / count
+        out[k] = float(np.mean(per_node))
+        out[k + "_std_over_nodes"] = float(np.std(per_node))
+    return out
+
+
+def _wire_accounting(ex: Experiment, history: list) -> dict:
+    """Bits each node puts on the wire per step (DESIGN.md §4 convention:
+    one whole-tree transmission per mix site), dense baseline, and the
+    compression ratio actually realized."""
+    trainer, state = ex.trainer, ex.state
+    per_node = sum(l.size / l.shape[0] for l in jax.tree.leaves(state.params))
+    try:
+        sites = count_mix_sites(trainer.optimizer, state.params,
+                                trainer.topology.w(0))
+    except Exception:   # exotic custom chains: fall back to one site
+        sites = 1
+    dense_bits = 32.0 * per_node * sites
+    last = history[-1] if history else {}
+    bits = float(last.get("comm_bits_per_node", dense_bits))
+    return {
+        "mix_sites": int(sites),
+        "params_per_node": int(per_node),
+        "bits_per_node_per_step": bits,
+        "dense_bits_per_node_per_step": dense_bits,
+        "ratio_vs_dense": float(last.get("comm_ratio", 1.0)),
+    }
+
+
+def run(spec: ExperimentSpec, *, mesh: Any = None, log_fn=print,
+        with_state: bool = False):
+    """Build + train + evaluate one spec.  Returns a :class:`Result`
+    (history + final metrics + wire-bytes accounting, JSON-dumpable); with
+    ``with_state=True`` returns ``(result, final_state)`` so launchers can
+    checkpoint."""
+    ex = build(spec, mesh=mesh)
+    lp = spec.loop
+    rng = (None if lp.rng_seed is None
+           else jax.random.PRNGKey(lp.rng_seed))
+
+    t0 = time.time()
+    if lp.chunk > 1:
+        state, history = run_training_scanned(
+            ex.trainer, ex.state, ex.task.make_iter(), lp.steps,
+            chunk=lp.chunk, rng=rng, log_every=lp.log_every, log_fn=log_fn)
+    else:
+        state, history = run_training(
+            ex.trainer, ex.state, ex.task.make_iter(), lp.steps, rng=rng,
+            log_every=lp.log_every, log_fn=log_fn)
+    jax.block_until_ready(state.params)
+    wall = time.time() - t0
+
+    final = dict(history[-1]) if history else {}
+    final.pop("step", None)
+    if spec.eval.enabled and ex.bundle.eval_fn is not None \
+            and ex.task.eval_batches:
+        final.update(_evaluate(ex.trainer, state, ex.bundle.eval_fn,
+                               ex.task.eval_batches))
+
+    steps_run = (history[-1]["step"] + 1) if history else 0
+    wire = _wire_accounting(ex, history)
+    wire["total_mbytes_per_node"] = (
+        wire["bits_per_node_per_step"] * steps_run / 8e6)
+    result = Result(spec=spec.to_dict(), history=history, final=final,
+                    steps_run=steps_run, wall_time_s=wall, wire=wire)
+    if with_state:
+        return result, state
+    return result

@@ -1,0 +1,88 @@
+"""DataSpec -> Task: dataset synthesis + Dirichlet client partition.
+
+One builder per ``DataSpec.dataset``; both return a :class:`Task` carrying a
+fresh-iterator factory (so a spec can be run repeatedly with identical batch
+streams), the eval batches, and the metadata model plugins read (input dim,
+class count, seed).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import numpy as np
+
+from repro.data import ClientDataset, dirichlet_partition, make_classification
+from repro.data.synthetic import make_lm_domains
+
+__all__ = ["Task", "build_task"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Task:
+    """Built data for one experiment (see module docstring)."""
+
+    n_nodes: int
+    seed: int
+    make_iter: Callable                 # () -> infinite node-stacked batches
+    eval_batches: tuple = ()            # batches for the eval protocol
+    d_in: Optional[int] = None          # flattened input dim (classification)
+    n_classes: Optional[int] = None
+    meta: dict = dataclasses.field(default_factory=dict)
+
+
+def _eval_split(arrays: tuple, batch: int) -> tuple:
+    """Whole set as one batch (batch=0) or fixed-size chunks."""
+    n = len(arrays[0])
+    if not n:
+        return ()
+    if batch <= 0 or batch >= n:
+        return (arrays,)
+    return tuple(tuple(a[i:i + batch] for a in arrays)
+                 for i in range(0, n, batch))
+
+
+def build_task(spec, n_nodes: int) -> Task:
+    d = spec.data
+    seed = spec.seed if d.seed is None else d.seed
+    if d.dataset == "classification":
+        x, y = make_classification(n=d.n_data, hw=d.hw,
+                                   n_classes=d.n_classes, noise=d.noise,
+                                   seed=seed)
+        n_train = int(d.n_data * d.train_frac)
+        x_tr, y_tr = x[:n_train], y[:n_train]
+        x_te, y_te = x[n_train:], y[n_train:]
+        parts = dirichlet_partition(y_tr, n_nodes, d.alpha, seed=seed,
+                                    min_per_client=d.min_per_client)
+
+        def make_iter():
+            ds = ClientDataset((x_tr, y_tr), parts, batch=d.batch, seed=seed)
+            return iter(lambda: ds.next_batch(), None)
+
+        return Task(n_nodes=n_nodes, seed=seed, make_iter=make_iter,
+                    eval_batches=_eval_split((x_te, y_te), spec.eval.batch),
+                    d_in=int(np.prod(x.shape[1:])), n_classes=d.n_classes,
+                    meta={"n_train": n_train, "n_eval": len(y_te)})
+
+    if d.dataset == "lm_domains":
+        vocab = d.vocab
+        if vocab == 0:
+            from repro.api.models import model_vocab
+            vocab = model_vocab(spec)
+        n_domains = d.n_domains or n_nodes
+        n_seq = d.n_seq_per_domain or max(64, 16 * d.batch)
+        tokens, domain = make_lm_domains(
+            n_domains=n_domains, vocab=vocab, seq_len=d.seq_len,
+            n_seq_per_domain=n_seq, seed=seed)
+        parts = dirichlet_partition(domain, n_nodes, d.alpha, seed=seed,
+                                    min_per_client=d.min_per_client)
+
+        def make_iter():
+            ds = ClientDataset((tokens,), parts, batch=d.batch, seed=seed)
+            return iter(lambda: ds.next_batch(), None)
+
+        return Task(n_nodes=n_nodes, seed=seed, make_iter=make_iter,
+                    meta={"vocab": vocab, "n_domains": n_domains,
+                          "n_seq_per_domain": n_seq})
+
+    raise ValueError(f"unknown dataset {d.dataset!r}")

@@ -210,9 +210,18 @@ def make_comm(spec: str, *, gamma: float | None = None,
               error_feedback: bool = False,
               backend: str = "jnp") -> CompressedGossip | None:
     """'dense'/''/None -> None (no comm wrapping); otherwise a
-    CompressedGossip from a compressor spec string like 'topk:0.01'."""
+    CompressedGossip from a compressor spec string like 'topk:0.01'.
+
+    Malformed specs (``'topk:'``, ``'qsgd:0'``, unknown names, ...) raise
+    ``ValueError`` listing the valid forms (see ``make_compressor``);
+    ``gamma`` outside ``(0, 1]`` is rejected the same way.
+    """
     if not spec or spec.lower() in ("dense", "none"):
         return None
+    if gamma is not None and not 0.0 < gamma <= 1.0:
+        raise ValueError(
+            f"CHOCO consensus step size gamma must be in (0, 1], got "
+            f"{gamma!r} (None = per-compressor default)")
     return CompressedGossip(
         compressor=make_compressor(spec, backend=backend), gamma=gamma,
         error_feedback=error_feedback)

@@ -291,22 +291,57 @@ class QSGD(Compressor):
 # factory + accounting
 # ---------------------------------------------------------------------------
 
+VALID_COMPRESSOR_FORMS = (
+    "dense", "topk:<frac in (0,1]>", "randk:<frac in (0,1]>", "signnorm",
+    "qsgd:<bits in [1,16]>")
+
+
 def make_compressor(spec: str, *, backend: str = "jnp") -> Compressor:
     """Parse 'dense' | 'topk:<frac>' | 'randk:<frac>' | 'signnorm' |
-    'qsgd:<bits>' into a compressor instance."""
-    kind, _, arg = spec.partition(":")
-    kind = kind.strip().lower()
+    'qsgd:<bits>' into a compressor instance.
+
+    Every malformed spec — empty argument (``'topk:'``), non-numeric or
+    out-of-range argument (``'qsgd:0'``), an argument where none is taken,
+    an unknown name — raises ``ValueError`` listing the valid forms.
+    """
+    def bad(why: str):
+        raise ValueError(
+            f"malformed compressor spec {spec!r}: {why}; valid forms: "
+            + " | ".join(VALID_COMPRESSOR_FORMS))
+
+    if not isinstance(spec, str):
+        bad(f"expected a string, got {type(spec).__name__}")
+    kind, sep, arg = spec.partition(":")
+    kind, arg = kind.strip().lower(), arg.strip()
+    if sep and not arg:
+        bad("empty argument after ':'")
     if kind in ("dense", "identity", "none"):
+        if arg:
+            bad(f"{kind!r} takes no argument")
         return Identity(backend=backend)
-    if kind == "topk":
-        return TopK(frac=float(arg or 0.01), backend=backend)
-    if kind == "randk":
-        return RandomK(frac=float(arg or 0.05), backend=backend)
+    if kind in ("topk", "randk"):
+        default = 0.01 if kind == "topk" else 0.05
+        try:
+            frac = float(arg) if arg else default
+        except ValueError:
+            bad(f"fraction {arg!r} is not a number")
+        if not 0.0 < frac <= 1.0:
+            bad(f"fraction must be in (0, 1], got {frac}")
+        cls = TopK if kind == "topk" else RandomK
+        return cls(frac=frac, backend=backend)
     if kind == "signnorm":
+        if arg:
+            bad("'signnorm' takes no argument")
         return SignNorm(backend=backend)
     if kind == "qsgd":
-        return QSGD(bits=int(arg or 4), backend=backend)
-    raise ValueError(f"unknown compressor spec {spec!r}")
+        try:
+            bits = int(arg) if arg else 4
+        except ValueError:
+            bad(f"bit width {arg!r} is not an integer")
+        if not 1 <= bits <= 16:
+            bad(f"bit width must be in [1, 16], got {bits}")
+        return QSGD(bits=bits, backend=backend)
+    bad(f"unknown compressor {kind!r}")
 
 
 def tree_wire_bits(compressor: Compressor, tree: PyTree) -> float:

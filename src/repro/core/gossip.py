@@ -53,6 +53,9 @@ __all__ = [
     "neighbor_sum_ppermute",
     "GossipSchedule",
     "PhaseSchedule",
+    "ResolvedGossip",
+    "resolve_gossip",
+    "GOSSIP_SCHEDULES",
     "compile_gossip_schedule",
     "schedule_matrix",
     "consensus_distance",
@@ -394,6 +397,84 @@ def make_sparse_mix_fn(schedule: GossipSchedule, *, mesh, axis_name: str,
                                    axis_name=axis_name)
 
     return mix_fn
+
+
+GOSSIP_SCHEDULES = ("auto", "dense", "ring_ppermute", "sparse_ppermute")
+
+
+@dataclasses.dataclass(frozen=True)
+class ResolvedGossip:
+    """Outcome of ``resolve_gossip``: which mix implementation to install
+    behind the zoo-wide ``mix_fn`` hook.
+
+    ``kind`` is ``'dense'`` (keep the optimizer's dense contraction),
+    ``'ring'`` (two-ppermute ring special case) or ``'sparse'`` (compiled
+    schedule; ``schedule`` holds the :class:`GossipSchedule`).  ``mix_fn``
+    materializes the hook closure — callers that mix with a traced step
+    counter (the trainer) pass ``t`` per step; static builders use the
+    default phase 0.
+    """
+
+    kind: str
+    schedule: GossipSchedule | None = None
+    mesh: Any = None
+    node_axis: str | None = None
+
+    def mix_fn(self, *, w_ref=None, t: jax.Array | int = 0):
+        """The ``mix_fn(w, tree)`` to install, or ``None`` when the
+        optimizer's dense default should stand."""
+        if self.kind == "dense":
+            return None
+        if self.kind == "ring":
+            return lambda w, tree: mix_ring_shardmap(
+                tree, mesh=self.mesh, axis_name=self.node_axis)
+        return make_sparse_mix_fn(self.schedule, mesh=self.mesh,
+                                  axis_name=self.node_axis, w_ref=w_ref, t=t)
+
+
+def resolve_gossip(topo: Topology, *, schedule: str = "auto", mesh=None,
+                   node_axis: str | None = None) -> ResolvedGossip:
+    """THE gossip-schedule selection rules, shared by every assembly path
+    (``DecentralizedTrainer`` and ``launch/steps.build_train_step``
+    previously each hand-rolled a diverging copy).
+
+    * ``'dense'`` — always the dense contraction (also the n=1 reduction).
+    * ``'auto'``  — dense without a mesh; the compiled sparse schedule when
+      a mesh carries the node axis (the trainer's historical behavior).
+    * ``'ring_ppermute'`` / ``'sparse_ppermute'`` — explicit; require a mesh
+      whose ``node_axis`` has size ``topo.n``, and ring_ppermute requires an
+      actual ring topology.
+
+    All invalid combinations raise here, at resolve time, with actionable
+    messages — not from deep inside a jitted step builder.
+    """
+    if schedule not in GOSSIP_SCHEDULES:
+        raise ValueError(f"unknown gossip schedule {schedule!r}; valid: "
+                         f"{' | '.join(GOSSIP_SCHEDULES)}")
+    if topo.n == 1 or schedule == "dense":
+        return ResolvedGossip("dense")
+    if schedule == "auto" and (mesh is None or node_axis is None):
+        return ResolvedGossip("dense")
+    if mesh is None or node_axis is None:
+        raise ValueError(f"{schedule} needs mesh + node_axis")
+    axes = dict(mesh.shape)
+    if node_axis not in axes:
+        raise ValueError(
+            f"mesh has no axis {node_axis!r} to carry the node index; "
+            f"mesh axes: {sorted(axes)}")
+    if axes[node_axis] != topo.n:
+        raise ValueError(
+            f"mesh axis {node_axis!r} has size {axes[node_axis]}, topology "
+            f"has n={topo.n}")
+    if schedule == "ring_ppermute":
+        if topo.name != "ring":
+            raise ValueError(
+                "ring_ppermute mixes with a ring schedule only; use "
+                f"gossip_schedule='sparse_ppermute' for topology="
+                f"{topo.name!r}")
+        return ResolvedGossip("ring", None, mesh, node_axis)
+    return ResolvedGossip("sparse", compile_gossip_schedule(topo), mesh,
+                          node_axis)
 
 
 def node_mean(tree: PyTree) -> PyTree:

@@ -54,7 +54,8 @@ from . import transforms as T
 PyTree = Any
 MixFn = Callable[[jax.Array, PyTree], PyTree]
 
-__all__ = ["DecentralizedOptimizer", "make_optimizer", "OPTIMIZERS"]
+__all__ = ["DecentralizedOptimizer", "ChainOptimizer", "make_optimizer",
+           "OPTIMIZERS"]
 
 
 # ---------------------------------------------------------------------------
@@ -341,6 +342,26 @@ class GlobalUpdateTracking(DecentralizedOptimizer):
             T.heavyball(self.beta, nesterov=self.nesterov),
             T.grad_track(),
             T.gossip_mix())
+
+
+# ---------------------------------------------------------------------------
+# explicit stage chains (repro.api OptimSpec.stages)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ChainOptimizer(DecentralizedOptimizer):
+    """An optimizer assembled from an explicit, serializable stage chain:
+    ``stage_specs`` is a tuple of ``(factory_name, kwargs)`` pairs resolved
+    through ``transforms.STAGES``.  This is the declarative-API escape hatch
+    for algorithms that are not (yet) registry entries — the chain is data,
+    so it round-trips through an ``ExperimentSpec`` JSON."""
+
+    stage_specs: tuple = ()
+    name: str = "chain"
+
+    def _stages(self):
+        return T.chain(*(T.make_stage(n, **dict(kw))
+                         for n, kw in self.stage_specs))
 
 
 # ---------------------------------------------------------------------------

@@ -52,7 +52,7 @@ __all__ = [
     "Stage", "StepCtx", "StepVars", "chain", "chain_init", "chain_apply",
     "weight_decay", "heavyball", "qhm_momentum", "adam_scale", "gossip_mix",
     "descent", "qg_buffer", "qg_adam_buffer", "dmsgd_buffer", "grad_track",
-    "d2_correction", "slow_outer", "buffer_sync",
+    "d2_correction", "slow_outer", "buffer_sync", "STAGES", "make_stage",
 ]
 
 
@@ -515,3 +515,37 @@ def buffer_sync(target: str = "heavyball", *, mode: str = "ring",
         return sv, {**states, target: {**states[target], "m": m}}
 
     return _stateless(name, apply)
+
+
+# ---------------------------------------------------------------------------
+# stage-factory registry (serializable chains: repro.api OptimSpec.stages)
+# ---------------------------------------------------------------------------
+
+STAGES: dict[str, Callable[..., Stage]] = {
+    "weight_decay": weight_decay,
+    "heavyball": heavyball,
+    "qhm_momentum": qhm_momentum,
+    "adam_scale": adam_scale,
+    "gossip_mix": gossip_mix,
+    "descent": descent,
+    "qg_buffer": qg_buffer,
+    "qg_adam_buffer": qg_adam_buffer,
+    "dmsgd_buffer": dmsgd_buffer,
+    "grad_track": grad_track,
+    "d2_correction": d2_correction,
+    "slow_outer": slow_outer,
+    "buffer_sync": buffer_sync,
+}
+
+
+def make_stage(name: str, /, **kwargs) -> Stage:
+    """Build one registered stage from its factory name + kwargs — the
+    serializable form a declarative ``OptimSpec.stages`` chain uses."""
+    if name not in STAGES:
+        raise ValueError(
+            f"unknown transform stage {name!r}; have {sorted(STAGES)}")
+    try:
+        return STAGES[name](**kwargs)
+    except TypeError as e:
+        raise ValueError(
+            f"bad kwargs for stage {name!r}: {e}") from None

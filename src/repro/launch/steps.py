@@ -16,6 +16,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import warnings
 from typing import Any, Optional
 
 import jax
@@ -67,9 +68,14 @@ def choose_n_nodes(cfg: ModelConfig, mesh) -> int:
     axes = dict(mesh.shape)
     if "pod" in axes:
         return axes["pod"]  # hierarchical pods-as-clients
+    if "data" not in axes:
+        warnings.warn(
+            f"mesh axes {sorted(axes)} have no 'data' axis to carry the "
+            "node index; falling back to n_nodes=1 (pure local QHM)")
+        return 1
     n = axes["data"]
     # per-chip bytes for x + m_hat + grads (bf16), FSDP over the model axis
-    per_chip = cfg.n_params() * 2 * 3 / axes["model"]
+    per_chip = cfg.n_params() * 2 * 3 / axes.get("model", 1)
     return n if per_chip <= NODE_BUDGET else 1
 
 
@@ -182,28 +188,14 @@ def build_train_step(sc: StepConfig, *, mesh=None, node_axis: str | None = None)
         moe_spec = NamedSharding(mesh, P("model", None, None))
 
     opt = make_opt(sc)
-    if sc.gossip_schedule == "ring_ppermute" and sc.n_nodes > 1:
-        if mesh is None or node_axis is None:
-            raise ValueError("ring_ppermute needs mesh + node_axis")
-        if sc.topology != "ring":
-            raise ValueError(
-                "ring_ppermute mixes with a ring schedule only; use "
-                f"gossip_schedule='sparse_ppermute' for topology="
-                f"{sc.topology!r}")
-
-        def mix(w, tree):
-            return gossip.mix_ring_shardmap(tree, mesh=mesh,
-                                            axis_name=node_axis)
-
+    # schedule selection lives in ONE resolver shared with the trainer
+    # (gossip.resolve_gossip); the builder's step is phase-static, so the
+    # sparse schedule is pinned to phase t=0 here
+    mix = gossip.resolve_gossip(
+        topo, schedule=sc.gossip_schedule, mesh=mesh,
+        node_axis=node_axis).mix_fn(w_ref=w_const)
+    if mix is not None:
         opt = dataclasses.replace(opt, mix_fn=mix)
-    elif sc.gossip_schedule == "sparse_ppermute" and sc.n_nodes > 1:
-        # topology compiler (DESIGN.md §7): works for every registry
-        # topology, not just the ring
-        if mesh is None or node_axis is None:
-            raise ValueError("sparse_ppermute needs mesh + node_axis")
-        schedule = gossip.compile_gossip_schedule(topo)
-        opt = dataclasses.replace(opt, mix_fn=gossip.make_sparse_mix_fn(
-            schedule, mesh=mesh, axis_name=node_axis, w_ref=w_const))
 
     def loss_fn(p, batch):
         return tf.train_loss(

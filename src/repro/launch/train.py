@@ -1,4 +1,10 @@
-"""Decentralized training launcher.
+"""Decentralized training launcher — spec-first.
+
+The CLI flags assemble one declarative ``ExperimentSpec`` (or start from a
+registered preset with ``--preset``), and the single ``repro.api.run``
+assembly path wires partition + topology + optimizer + comm + gossip
+schedule + loop from it.  Any spec field is reachable with
+``--set section.key=value`` dotted overrides.
 
 Two modes:
   * ``--reduced`` (default; CPU-runnable): trains the reduced variant of any
@@ -7,56 +13,46 @@ Two modes:
   * full-size: the same step functions the dry-run compiles, for real TPU
     meshes (``--mesh single|multi``); on this container use dryrun.py.
 
-Example:
+Examples:
   PYTHONPATH=src python -m repro.launch.train --arch tinyllama-1.1b \
       --reduced --optimizer qg_dsgdm_n --topology ring --nodes 8 \
       --alpha 0.1 --steps 200
+  PYTHONPATH=src python -m repro.launch.train \
+      --preset lm100m_ring8_alpha0.1_qg --set loop.steps=50
 """
 from __future__ import annotations
 
 import argparse
-import json
 import time
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.configs import get_config
+from repro import api
+from repro.api import presets
+from repro.api.models import resolve_transformer_config
 from repro.core import topology as topo_lib
-from repro.core.optim import make_optimizer
-from repro.data import dirichlet_partition, make_lm_domains
-from repro.data.synthetic import ClientDataset
-from repro.models import transformer as tf
-from repro.train import DecentralizedTrainer, lr_schedule, run_training
 from repro.train.checkpoint import save_checkpoint
 
 
-def build_lm_task(cfg, *, n_nodes: int, alpha: float, seq_len: int,
-                  batch: int, seed: int = 0):
-    """Synthetic heterogeneous LM data: domains ~ classes, Dirichlet split."""
-    tokens, domain = make_lm_domains(
-        n_domains=max(4, n_nodes), vocab=cfg.vocab_size, seq_len=seq_len,
-        n_seq_per_domain=max(64, 2 * batch * 8), seed=seed)
-    parts = dirichlet_partition(domain, n_nodes, alpha, seed=seed)
-    ds = ClientDataset((tokens,), parts, batch=batch, seed=seed)
-
-    img = None
-    if cfg.n_image_tokens:
-        rng = np.random.default_rng(seed)
-        img = rng.normal(size=(cfg.n_image_tokens, cfg.d_model)
-                         ).astype(np.float32)
-
-    def loss_fn(params, mstate, batch_i, rng):
-        (toks,) = batch_i
-        b = {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
-        if img is not None:
-            b["image_embeds"] = jnp.broadcast_to(
-                jnp.asarray(img), (toks.shape[0],) + img.shape)
-        loss = tf.train_loss(params, b, cfg, chunk=256, ssd_chunk=64)
-        return loss, ({}, {})
-
-    return ds, loss_fn
+def build_spec(args) -> api.ExperimentSpec:
+    """CLI flags -> ExperimentSpec (the historical launcher wiring)."""
+    topo_n = topo_lib.get_topology(args.topology, args.nodes).n
+    return api.ExperimentSpec(
+        name=f"{args.arch}-{args.optimizer}-{args.topology}{topo_n}",
+        seed=args.seed,
+        data=api.DataSpec(dataset="lm_domains", alpha=args.alpha,
+                          batch=args.batch, seq_len=args.seq_len,
+                          n_domains=max(4, topo_n)),
+        topology=api.TopologySpec(name=args.topology, n=args.nodes),
+        optim=api.OptimSpec(name=args.optimizer, lr=args.lr,
+                            weight_decay=1e-4),
+        loop=api.LoopSpec(steps=args.steps, warmup=args.warmup,
+                          decay_at=(0.5, 0.75), log_every=args.log_every,
+                          rng_seed=args.seed + 1),
+        eval=api.EvalSpec(enabled=False),
+        model=api.ModelSpec(name="transformer",
+                            kwargs={"arch": args.arch,
+                                    "reduced": bool(args.reduced),
+                                    "chunk": 256, "ssd_chunk": 64}),
+    )
 
 
 def main(argv=None):
@@ -75,31 +71,23 @@ def main(argv=None):
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--checkpoint", default="")
+    ap.add_argument("--preset", default="",
+                    help="start from a repro.api preset instead of the flags")
+    ap.add_argument("--set", dest="overrides", action="append", default=[],
+                    metavar="KEY=VALUE", help="dotted spec override")
     args = ap.parse_args(argv)
 
-    cfg = get_config(args.arch, reduced=args.reduced)
-    topo = topo_lib.get_topology(args.topology, args.nodes)
-    opt = make_optimizer(args.optimizer, lr=args.lr, weight_decay=1e-4)
-    ds, loss_fn = build_lm_task(cfg, n_nodes=topo.n, alpha=args.alpha,
-                                seq_len=args.seq_len, batch=args.batch,
-                                seed=args.seed)
+    spec = presets.get(args.preset) if args.preset else build_spec(args)
+    if args.overrides:
+        spec = spec.override(*args.overrides)
 
-    trainer = DecentralizedTrainer(
-        loss_fn, opt, topo,
-        lr_fn=lr_schedule(args.lr, total_steps=args.steps,
-                          warmup=args.warmup, decay_at=(0.5, 0.75)))
-    state = trainer.init(
-        jax.random.PRNGKey(args.seed),
-        lambda k: (tf.init_lm(k, cfg), {}))
-
-    print(f"arch={cfg.name} params={cfg.n_params():,} nodes={topo.n} "
-          f"topology={topo.name} optimizer={opt.name} alpha={args.alpha}")
+    cfg = resolve_transformer_config(spec.model)
+    print(f"arch={cfg.name} params={cfg.n_params():,} "
+          f"nodes={spec.topology.n} topology={spec.topology.name} "
+          f"optimizer={spec.optim.name} alpha={spec.data.alpha}")
     t0 = time.time()
-    state, history = run_training(
-        trainer, state,
-        iter(lambda: ds.next_batch(), None),
-        args.steps, rng=jax.random.PRNGKey(args.seed + 1),
-        log_every=args.log_every)
+    result, state = api.run(spec, with_state=True)
+    history = result.history
     print(f"done in {time.time()-t0:.1f}s; final loss "
           f"{history[-1]['loss']:.4f} consensus "
           f"{history[-1]['consensus']:.2e}")

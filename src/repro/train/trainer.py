@@ -87,20 +87,18 @@ class DecentralizedTrainer:
     comm: Optional[CompressedGossip] = None  # compressed gossip (DESIGN.md §4)
     mesh: Any = None              # jax Mesh: auto-select the sparse schedule
     node_axis: str = "data"       # mesh axis carrying the node index
+    gossip_schedule: str = "auto"  # gossip.GOSSIP_SCHEDULES
 
     def __post_init__(self):
         if self.lr_fn is None:
             lr = self.optimizer.lr
             self.lr_fn = lambda t: jnp.asarray(lr, jnp.float32)
         self._mixing = jnp.asarray(self.topology.mixing, jnp.float32)
-        self._schedule = None
-        if self.mesh is not None:
-            axis = dict(self.mesh.shape).get(self.node_axis)
-            if axis != self.topology.n:
-                raise ValueError(
-                    f"mesh axis {self.node_axis!r} has size {axis}, topology "
-                    f"has n={self.topology.n}")
-            self._schedule = gossip.compile_gossip_schedule(self.topology)
+        # one resolver for every assembly path (shared with launch/steps.py);
+        # raises eagerly on mesh/topology/schedule mismatches
+        self._resolved = gossip.resolve_gossip(
+            self.topology, schedule=self.gossip_schedule, mesh=self.mesh,
+            node_axis=self.node_axis if self.mesh is not None else None)
         self._comm_gamma = None   # resolved on first sight of params
         self._comm_bits = None    # wire bits per site per node per step
         self._step_jit = jax.jit(self._step_impl)
@@ -155,12 +153,10 @@ class DecentralizedTrainer:
 
         opt = self.optimizer
         mix_impl = None
-        if self._schedule is not None:
+        if self._resolved.kind != "dense":
             # sparse neighbor-exchange schedule, phase-selected by the
             # traced step counter (w-operand dispatch: see make_sparse_mix_fn)
-            mix_impl = gossip.make_sparse_mix_fn(
-                self._schedule, mesh=self.mesh, axis_name=self.node_axis,
-                w_ref=w, t=state.t)
+            mix_impl = self._resolved.mix_fn(w_ref=w, t=state.t)
             opt = dataclasses.replace(opt, mix_fn=mix_impl)
         new_comm = state.comm_state
         if self.comm is not None and state.comm_state is not None:
@@ -275,22 +271,32 @@ def run_training_scanned(trainer: DecentralizedTrainer, state: TrainState,
 
     A shorter tail (``steps % chunk``) runs as its own scan trace; history
     entries follow the exact ``run_training`` logging cadence.
+
+    If ``batch_iter`` runs dry before ``steps`` are done, the loop stops,
+    warns through ``log_fn``, and the history honestly covers only the steps
+    that actually ran (the last executed step is always recorded).
     """
     rng = jax.random.PRNGKey(0) if rng is None else rng
     it = iter(batch_iter)
     history = []
     done = 0
-    while done < steps:
+    exhausted = False
+    last_metrics = None   # () -> metrics of the last executed step
+    while done < steps and not exhausted:
         k = min(chunk, steps - done)
         batches = []
         for _ in range(k):
             try:
                 batches.append(next(it))
             except StopIteration:
+                exhausted = True
                 break
         if not batches:
             break
         k = len(batches)
+        # a short final chunk moves the "final step" recording boundary so
+        # the last step that actually ran lands in the history
+        total = done + k if exhausted else steps
         # stack on host, ship once: one transfer per chunk instead of one
         # device commit per step per leaf
         stacked = jax.tree.map(
@@ -299,14 +305,23 @@ def run_training_scanned(trainer: DecentralizedTrainer, state: TrainState,
 
         host: dict = {}  # chunk metrics, transferred once and only if needed
 
-        def chunk_metrics(j):
+        def chunk_metrics(j, metrics=metrics, host=host):
             if not host:
                 host.update({mk: np.asarray(mv)
                              for mk, mv in metrics.items()})
             return {mk: float(mv[j]) for mk, mv in host.items()}
 
         for j in range(k):
-            _record_step(history, done + j, steps, log_every, log_fn,
+            _record_step(history, done + j, total, log_every, log_fn,
                          lambda j=j: chunk_metrics(j))
+        last_metrics = lambda k=k, cm=chunk_metrics: cm(k - 1)
         done += k
+    if done < steps:
+        log_fn(f"warning: batch_iter exhausted after {done} steps "
+               f"({steps} requested); history covers the {done} steps run")
+        # exhaustion discovered at a chunk boundary: the previous chunk was
+        # recorded against total=steps, so its last step may be missing
+        if last_metrics is not None and (
+                not history or history[-1]["step"] != done - 1):
+            history.append({"step": done - 1, **last_metrics()})
     return state, history
