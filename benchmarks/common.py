@@ -16,6 +16,7 @@ from __future__ import annotations
 import time
 
 import jax
+import jax.numpy as jnp
 
 from repro import api
 
@@ -26,15 +27,19 @@ def bench_spec(
     n_data: int = 4096, noise: float = 2.5, n_classes: int = 20,
     opt_kwargs: dict | None = None, comm: str | None = None,
     comm_gamma: float | None = None, comm_ef: bool = False,
+    runtime: str = "auto",
 ) -> api.ExperimentSpec:
     """The calibrated benchmark grid point as a spec.
 
     Task difficulty (noise=2.5, 20 classes) is calibrated so the paper's
     method ordering emerges: at alpha=0.1 on ring-16, DSGD << DSGDm-N <
-    QG-DSGDm-N (see EXPERIMENTS.md)."""
+    QG-DSGDm-N (see EXPERIMENTS.md).  ``runtime`` selects the execution
+    backend (the `runtime` benchmark table passes 'vmap'/'sharded' with a
+    forced host-device mesh; everything else keeps 'auto')."""
     return api.ExperimentSpec(
         name=f"bench/{method}/{topo_name}{n_nodes}/alpha{alpha}",
         seed=seed,
+        runtime=runtime,
         data=api.DataSpec(dataset="classification", alpha=alpha, batch=batch,
                           n_data=n_data, n_classes=n_classes, hw=8,
                           noise=noise, train_frac=0.5),
@@ -87,10 +92,10 @@ def bench_loop(method: str = "qg_dsgdm_n", *, alpha: float = 0.1,
     trainer = ex.trainer
 
     def fresh():
-        # trainer.init is deterministic, so the already-built init state can
-        # be reused as-is (TrainState is an immutable pytree); only the
-        # batch stream needs to restart
-        return ex.state, ex.task.make_iter()
+        # trainer.init is deterministic, so the built init state seeds every
+        # variant — but the jitted step DONATES its input state, so each run
+        # gets a fresh copy of the buffers; only the batch stream restarts
+        return jax.tree.map(jnp.copy, ex.state), ex.task.make_iter()
 
     variants = [("python", run_training, {})]
     variants += [(f"scan{c}", run_training_scanned, {"chunk": c})

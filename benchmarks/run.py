@@ -15,6 +15,10 @@ runs; ``--only <name>`` selects a single table.
   topology  compiled sparse ppermute schedule vs dense all-gather:
             bytes-on-wire + mixes/sec per topology (subprocess w/ forced
             host devices; DESIGN.md §7)
+  runtime   execution backends (DESIGN.md §9): vmap (node-stacked) vs
+            sharded (whole step in one shard_map) at ring n in {8,16,32}:
+            steps/s + peak per-device TrainState bytes (subprocess w/
+            forced host devices; sharded bytes must be constant in n)
   serving   batched prefill+decode throughput (reduced archs)
   kernels   Pallas kernel microbench vs jnp reference
   roofline  aggregate the dry-run artifacts into the §Roofline table
@@ -182,6 +186,40 @@ def topology(quick=False):
             f"fallback={'dense' if r['fallback_dense'] else 'sparse'}")
 
 
+def runtime(quick=False):
+    """Execution-backend table (DESIGN.md §9): vmap (node-stacked, no mesh),
+    vmap_mesh (node-stacked + per-mix shard_map — the PR-3 boundary-crossing
+    path) and sharded (whole step inside ONE shard_map) on the calibrated
+    qg_dsgdm_n grid point at ring n in {8, 16, 32}.  ``state_bytes`` is the
+    peak per-device TrainState footprint — O(n) for the vmap rows, O(1) for
+    sharded; the CI gate holds sharded <= vmap_mesh us/step at ring-16 and
+    sharded state bytes constant in n.  Runs in a subprocess because the
+    forced host-device count must precede jax init."""
+    import subprocess
+    import sys
+
+    ns = [8, 16] if quick else [8, 16, 32]
+    spec = {"devices": max(ns), "ns": ns,
+            "steps": 16 if quick else 32, "chunk": 8,
+            "batch": 8, "n_data": 1024 if quick else 2048}
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src" + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    res = subprocess.run(
+        [sys.executable, "-m", "benchmarks.runtime_worker", json.dumps(spec)],
+        capture_output=True, text=True, timeout=3600, env=env,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+    lines = [ln for ln in res.stdout.splitlines()
+             if ln.startswith("RUNTIME_ROWS ")]
+    if not lines:
+        raise RuntimeError(f"runtime_worker failed: {res.stderr[-2000:]}")
+    for r in json.loads(lines[0][len("RUNTIME_ROWS "):]):
+        csv_row(f"runtime/{r['runtime']}/ring{r['n']}", r["us_per_step"],
+                f"steps_per_s={r['steps_per_s']:.1f},"
+                f"state_bytes={r['state_bytes_per_device']},"
+                f"loss={r['loss']:.4f}")
+
+
 def loop(quick=False):
     """Training-loop dispatch: python per-step loop vs ``lax.scan``-fused
     chunks (run_training_scanned).  Same math, same rng stream — the delta
@@ -314,7 +352,8 @@ def roofline(quick=False):
 TABLES = {
     "table1": table1, "table2": table2, "table4": table4, "table5": table5,
     "table6": table6, "fig3": fig3, "fig6": fig6, "comm": comm,
-    "topology": topology, "loop": loop, "serving": serving,
+    "topology": topology, "loop": loop, "runtime": runtime,
+    "serving": serving,
     "kernels": kernels, "roofline": roofline,
 }
 

@@ -1,0 +1,110 @@
+"""Subprocess worker for the ``runtime`` benchmark table.
+
+Runs in its own process because the forced host-device count must be set
+before the first jax import.  Receives a JSON spec on argv[1]:
+
+    {"devices": 32, "ns": [8, 16, 32], "steps": 24, "chunk": 8,
+     "batch": 8, "n_data": 2048}
+
+and prints one ``RUNTIME_ROWS <json list>`` line: per (backend, ring-n),
+steps/s of a scan-fused training run plus the peak per-device
+parameter-state bytes of the live TrainState.  Backends:
+
+  * ``vmap``      — the node-stacked path, NO mesh: today's single-device
+                    behavior (every leaf [n, ...] whole on one device — the
+                    n-device collectives are simulated by one fused program,
+                    so on a CPU host this row is a lower bound, not a
+                    comparable schedule);
+  * ``vmap_mesh`` — the node-stacked path WITH the node-axis mesh: per-node
+                    compute vmapped + each gossip mix entering its own
+                    shard_map (the PR-3 boundary-crossing path this refactor
+                    collapses);
+  * ``sharded``   — ShardedRuntime on the same mesh: the whole step inside
+                    ONE shard_map, each device holding only its node's state.
+
+The acceptance rows (DESIGN.md §9 / CI gate): sharded not slower than
+vmap_mesh at ring-16 (same devices, same collective schedule — the delta is
+purely the per-mix shard_map re-entry), and sharded per-device state bytes
+CONSTANT in n while the vmap rows grow linearly.
+"""
+import json
+import os
+import sys
+
+SPEC = json.loads(sys.argv[1])
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count="
+                           f"{SPEC['devices']}")
+
+import time  # noqa: E402
+
+import jax  # noqa: E402
+
+from repro import api  # noqa: E402
+from repro.launch.mesh import make_debug_mesh  # noqa: E402
+from repro.train import run_training_scanned  # noqa: E402
+
+from benchmarks.common import bench_spec  # noqa: E402
+
+
+def state_bytes_per_device(state) -> int:
+    """Peak parameter-state bytes any single device holds for this
+    TrainState (params + opt + model + comm leaves, actual shard sizes)."""
+    per_dev: dict = {}
+    for leaf in jax.tree.leaves(state):
+        if not hasattr(leaf, "addressable_shards"):
+            continue
+        seen = set()
+        for sh in leaf.addressable_shards:
+            if sh.device in seen:     # fully-replicated layouts repeat
+                continue
+            seen.add(sh.device)
+            per_dev[sh.device] = per_dev.get(sh.device, 0) + sh.data.nbytes
+    return max(per_dev.values()) if per_dev else 0
+
+
+def bench_one(n: int, label: str) -> dict:
+    runtime = "sharded" if label == "sharded" else "vmap"
+    spec = bench_spec("qg_dsgdm_n", alpha=0.1, n_nodes=n,
+                      steps=SPEC["steps"], batch=SPEC["batch"],
+                      n_data=SPEC["n_data"], runtime=runtime)
+    mesh = None
+    if label in ("sharded", "vmap_mesh"):
+        mesh = make_debug_mesh(shape=(n,), axes=("data",))
+    ex = api.build(spec, mesh=mesh)
+    trainer, steps, chunk = ex.trainer, SPEC["steps"], SPEC["chunk"]
+
+    def fresh():
+        import jax.numpy as jnp
+        return jax.tree.map(jnp.copy, ex.state), ex.task.make_iter()
+
+    # warm-up run compiles every trace (incl. the tail chunk)
+    st, batches = fresh()
+    st, _ = run_training_scanned(trainer, st, batches, steps, chunk=chunk,
+                                 log_every=0, log_fn=lambda *_: None)
+    bytes_per_dev = state_bytes_per_device(st)
+    wall = float("inf")
+    for _ in range(SPEC.get("timed_reps", 2)):   # best-of: shared-host noise
+        st, batches = fresh()
+        t0 = time.time()
+        st, hist = run_training_scanned(trainer, st, batches, steps,
+                                        chunk=chunk, log_every=0,
+                                        log_fn=lambda *_: None)
+        jax.block_until_ready(st.params)
+        wall = min(wall, time.time() - t0)
+    return {"runtime": label, "n": n,
+            "us_per_step": wall / steps * 1e6,
+            "steps_per_s": steps / wall,
+            "state_bytes_per_device": bytes_per_dev,
+            "loss": hist[-1]["loss"]}
+
+
+def main() -> None:
+    rows = []
+    for n in SPEC["ns"]:
+        for label in ("vmap", "vmap_mesh", "sharded"):
+            rows.append(bench_one(n, label))
+    print("RUNTIME_ROWS " + json.dumps(rows))
+
+
+if __name__ == "__main__":
+    main()

@@ -14,14 +14,24 @@ spec field is reachable with ``--set section.key=value``:
     PYTHONPATH=src python examples/heterogeneous_cifar.py \
         --steps 60 --compress topk:0.01 --set topology.name=exp
 
+``--runtime sharded`` selects the sharded execution backend (DESIGN.md §9):
+the whole decentralized step — per-node grads, transform chain, gossip —
+runs inside ONE shard_map over a node-axis mesh, each device holding only
+its own node's state.  On this CPU container the node "devices" are forced
+host devices (set before the first jax import, which is why argument
+parsing happens before importing repro); the trajectory is identical to the
+default vmap backend.
+
+    PYTHONPATH=src python examples/heterogeneous_cifar.py \
+        --steps 20 --nodes 4 --runtime sharded
+
 (ResNet-20 on CPU is slow; defaults are sized for a few minutes.)
 """
 import argparse
+import os
 
-from repro import api
 
-
-def main():
+def parse_args():
     ap = argparse.ArgumentParser()
     ap.add_argument("--steps", type=int, default=60)
     ap.add_argument("--nodes", type=int, default=4)
@@ -29,6 +39,11 @@ def main():
     ap.add_argument("--norm", default="evonorm", choices=["bn", "gn", "evonorm"])
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--lr", type=float, default=0.03)
+    ap.add_argument("--runtime", default="auto",
+                    choices=["auto", "vmap", "sharded"],
+                    help="execution backend (DESIGN.md §9); 'sharded' "
+                         "builds an n-node host-device mesh and runs the "
+                         "whole step in one shard_map")
     ap.add_argument("--compress", default="",
                     help="gossip compressor spec: topk:<frac> | qsgd:<bits> "
                          "| signnorm | randk:<frac> (default: dense)")
@@ -39,7 +54,26 @@ def main():
     ap.add_argument("--set", dest="overrides", action="append", default=[],
                     metavar="KEY=VALUE",
                     help="dotted spec override, e.g. topology.name=exp")
-    args = ap.parse_args()
+    return ap.parse_args()
+
+
+def main():
+    args = parse_args()
+    if args.runtime == "sharded":
+        # must precede the first jax import: the sharded backend needs one
+        # (host) device per node to carry the mesh node axis (APPEND so a
+        # pre-existing XLA_FLAGS value keeps its other flags)
+        flag = f"--xla_force_host_platform_device_count={args.nodes}"
+        if "host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
+            os.environ["XLA_FLAGS"] = (
+                os.environ.get("XLA_FLAGS", "") + " " + flag).strip()
+
+    from repro import api
+
+    mesh = None
+    if args.runtime == "sharded":
+        from repro.launch.mesh import make_debug_mesh
+        mesh = make_debug_mesh(shape=(args.nodes,), axes=("data",))
 
     if args.compress:
         print(f"compressed gossip: {args.compress} "
@@ -49,6 +83,7 @@ def main():
         for method in ("dsgdm_n", "qg_dsgdm_n"):
             spec = api.ExperimentSpec(
                 name=f"cifar_ring{args.nodes}_alpha{alpha}_{method}",
+                runtime=args.runtime,
                 data=api.DataSpec(dataset="classification", alpha=alpha,
                                   batch=args.batch, n_data=1024,
                                   n_classes=10, hw=16, noise=1.2,
@@ -65,7 +100,7 @@ def main():
                                     kwargs={"norm": args.norm}),
             ).override(*args.overrides)
 
-            result = api.run(spec, log_fn=lambda *_: None)
+            result = api.run(spec, mesh=mesh, log_fn=lambda *_: None)
             bw = (f"  wire={result.wire['ratio_vs_dense']:.0f}x less"
                   if result.wire["ratio_vs_dense"] > 1 else "")
             print(f"alpha={alpha:5.1f}  {method:12s}  "

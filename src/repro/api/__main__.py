@@ -7,6 +7,12 @@
 ``--set`` takes dotted overrides (``loop.steps=3``, ``data.alpha=0.5``,
 ``comm.compressor=topk:0.01``); ``--out`` writes the JSON Result (the CI
 ``specs`` job uploads these as artifacts).
+
+Checkpointing rides the spec path: ``--checkpoint ckpt.npz`` with
+``--set loop.checkpoint_every=50`` saves the full TrainState (incl.
+comm_state and step counter) + loop rng on that cadence, and
+``--resume ckpt.npz`` continues an interrupted run to ``loop.steps`` with a
+trajectory identical to the uninterrupted one.
 """
 from __future__ import annotations
 
@@ -28,6 +34,12 @@ def main(argv=None):
     ap.add_argument("--set", dest="overrides", action="append", default=[],
                     metavar="KEY=VALUE", help="dotted spec override; repeatable")
     ap.add_argument("--out", default="", help="write the Result JSON here")
+    ap.add_argument("--checkpoint", default="", metavar="PATH",
+                    help="save the full TrainState here every "
+                         "loop.checkpoint_every steps (and at the end)")
+    ap.add_argument("--resume", default="", metavar="PATH",
+                    help="restore a --checkpoint save and continue to "
+                         "loop.steps")
     ap.add_argument("--list", action="store_true", help="list presets")
     args = ap.parse_args(argv)
 
@@ -43,7 +55,7 @@ def main(argv=None):
     if args.overrides:
         spec = spec.override(*args.overrides)
 
-    result = run(spec)
+    result = run(spec, checkpoint_path=args.checkpoint, resume=args.resume)
     print(f"[{spec.name or 'spec'}] steps={result.steps_run} "
           f"wall={result.wall_time_s:.1f}s final="
           + "  ".join(f"{k}={v:.4f}" for k, v in sorted(result.final.items())

@@ -96,7 +96,7 @@ def build(spec: ExperimentSpec, *, mesh: Any = None) -> Experiment:
                        error_feedback=spec.comm.error_feedback,
                        backend=spec.comm.backend),
         mesh=mesh, node_axis=spec.gossip.node_axis,
-        gossip_schedule=spec.gossip.schedule)
+        gossip_schedule=spec.gossip.schedule, runtime=spec.runtime)
     state = trainer.init(jax.random.PRNGKey(spec.seed), bundle.init_fn)
     return Experiment(spec=spec, trainer=trainer, state=state, task=task,
                       bundle=bundle)
@@ -147,27 +147,77 @@ def _wire_accounting(ex: Experiment, history: list) -> dict:
 
 
 def run(spec: ExperimentSpec, *, mesh: Any = None, log_fn=print,
-        with_state: bool = False):
+        with_state: bool = False, checkpoint_path: str = "",
+        resume: str = ""):
     """Build + train + evaluate one spec.  Returns a :class:`Result`
     (history + final metrics + wire-bytes accounting, JSON-dumpable); with
     ``with_state=True`` returns ``(result, final_state)`` so launchers can
-    checkpoint."""
+    checkpoint.
+
+    ``checkpoint_path`` + ``spec.loop.checkpoint_every`` save the FULL
+    TrainState (params, opt/comm state, step counter) and the loop rng every
+    that many steps (and once at the end); ``resume=<path>`` restores such a
+    checkpoint, fast-forwards the deterministic batch stream to the saved
+    step, and runs the remaining ``loop.steps - step`` steps — the combined
+    trajectory is identical to an uninterrupted run (pinned in
+    tests/test_runtime.py).  History ``step`` indices are absolute."""
+    from repro.train.checkpoint import restore_train_state, save_train_state
+
     ex = build(spec, mesh=mesh)
     lp = spec.loop
-    rng = (None if lp.rng_seed is None
+    rng = (jax.random.PRNGKey(0) if lp.rng_seed is None
            else jax.random.PRNGKey(lp.rng_seed))
+
+    state, start = ex.state, 0
+    batch_iter = ex.task.make_iter()
+    if resume:
+        state, rng, meta = restore_train_state(resume, ex.state,
+                                               like_rng=rng)
+        state = ex.trainer._runtime.finalize_state(state)
+        start = int(meta["step"])
+        if start > lp.steps:
+            raise ValueError(
+                f"resume checkpoint is at step {start} but loop.steps="
+                f"{lp.steps}; raise loop.steps to continue")
+        for _ in range(start):       # replay the deterministic batch stream
+            next(batch_iter)
+        log_fn(f"resumed from {resume} at step {start}")
+
+    ckpt_kw = {}
+    last_save = [start, rng]   # (absolute step, rng carry) of the last save
+    if checkpoint_path and lp.checkpoint_every:
+        def _periodic_save(done, st, r):
+            save_train_state(checkpoint_path, st, rng=r, step=done)
+            last_save[:] = [done, r]
+
+        ckpt_kw = {"checkpoint_every": lp.checkpoint_every,
+                   "checkpoint_fn": _periodic_save}
 
     t0 = time.time()
     if lp.chunk > 1:
         state, history = run_training_scanned(
-            ex.trainer, ex.state, ex.task.make_iter(), lp.steps,
-            chunk=lp.chunk, rng=rng, log_every=lp.log_every, log_fn=log_fn)
+            ex.trainer, state, batch_iter, lp.steps - start,
+            chunk=lp.chunk, rng=rng, log_every=lp.log_every, log_fn=log_fn,
+            step_offset=start, **ckpt_kw)
     else:
         state, history = run_training(
-            ex.trainer, ex.state, ex.task.make_iter(), lp.steps, rng=rng,
-            log_every=lp.log_every, log_fn=log_fn)
+            ex.trainer, state, batch_iter, lp.steps - start, rng=rng,
+            log_every=lp.log_every, log_fn=log_fn, step_offset=start,
+            **ckpt_kw)
     jax.block_until_ready(state.params)
     wall = time.time() - t0
+    if checkpoint_path:
+        # final save: the loops don't return their rng carry, but the stream
+        # is deterministic (one split per executed step), so advance it from
+        # the last periodic save in ONE scanned dispatch; the state's own
+        # counter is the absolute step
+        abs_done = int(np.asarray(state.t))
+        base_step, r_final = last_save
+        if abs_done > base_step:
+            r_final = jax.lax.scan(
+                lambda c, _: (jax.random.split(c)[0], None), r_final, None,
+                length=abs_done - base_step)[0]
+        save_train_state(checkpoint_path, state, rng=r_final, step=abs_done)
 
     final = dict(history[-1]) if history else {}
     final.pop("step", None)

@@ -111,6 +111,8 @@ class LoopSpec:
     warmup_from: float = 0.1
     log_every: int = 0
     rng_seed: int | None = None       # None -> run_training default (0)
+    checkpoint_every: int = 0         # full-TrainState save cadence (steps);
+                                      # 0 = off; needs run(checkpoint_path=)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -145,6 +147,10 @@ class ExperimentSpec:
 
     name: str = ""
     seed: int = 0                     # init + data/partition seed
+    runtime: str = "auto"             # execution backend (DESIGN.md §9):
+                                      # auto | vmap | sharded; 'sharded'
+                                      # needs build(spec, mesh=...) whose
+                                      # gossip.node_axis carries n
     data: DataSpec = dataclasses.field(default_factory=DataSpec)
     topology: TopologySpec = dataclasses.field(default_factory=TopologySpec)
     optim: OptimSpec = dataclasses.field(default_factory=OptimSpec)
@@ -233,6 +239,12 @@ class ExperimentSpec:
         if self.comm.backend not in ("jnp", "pallas"):
             err("comm.backend", f"must be 'jnp' or 'pallas', got "
                 f"{self.comm.backend!r}")
+        # runtime (the mesh itself is a build(..., mesh=) argument; the
+        # sharded backend re-validates axis x n against the actual mesh)
+        from repro.runtime import RUNTIMES
+        if self.runtime not in RUNTIMES:
+            err("runtime", f"unknown runtime {self.runtime!r}; valid: "
+                f"{' | '.join(RUNTIMES)}")
         # gossip schedule (mesh-dependent checks re-run at build with the
         # actual mesh; the mesh-independent ones fire here)
         if self.gossip.schedule not in GOSSIP_SCHEDULES:
@@ -276,6 +288,9 @@ class ExperimentSpec:
             err("loop.steps", f"must be >= 1, got {lp.steps}")
         if lp.chunk < 1:
             err("loop.chunk", f"must be >= 1, got {lp.chunk}")
+        if lp.checkpoint_every < 0:
+            err("loop.checkpoint_every", f"must be >= 0, got "
+                f"{lp.checkpoint_every}")
         for f in lp.decay_at:
             if not 0.0 <= f <= 1.0:
                 err("loop.decay_at", f"fractions must be in [0, 1], got "

@@ -31,6 +31,13 @@ installed as ``mix_fn`` pops site i's state on the i-th call and deposits
 the new state for the trainer to return (pure within one trace).
 ``count_mix_sites`` is the shape-only (eval_shape, no FLOPs) variant when
 just the count is wanted.
+
+Comm state is SHARDABLE: every site leaf is node-stacked ``[n, ...]`` like
+params, and every per-site operation (compression, EF residuals, replica
+advance) is per-node — so under the sharded execution runtime (DESIGN.md
+§9) the sites shard over the node mesh axis, each device advancing only
+its own node's replicas, and the inner anchor gossip rides the ``mix_impl``
+the runtime injects (the compiled schedule executed on local shards).
 """
 from __future__ import annotations
 
@@ -53,7 +60,9 @@ __all__ = ["CompressedGossip", "capture_mix_targets", "count_mix_sites",
 
 def count_mix_sites(optimizer, params: PyTree, w, *, lr: float = 0.1) -> int:
     """Number of times ``optimizer.step`` invokes its mix hook (traced
-    abstractly — no FLOPs)."""
+    abstractly — no FLOPs).  ``opt.init`` runs under the same ``eval_shape``
+    so only the params AVALS are read — donated/deleted state buffers (the
+    runtimes' buffer-donation contract) still count fine."""
     counter = [0]
 
     def counting_mix(w_, tree):
@@ -61,12 +70,13 @@ def count_mix_sites(optimizer, params: PyTree, w, *, lr: float = 0.1) -> int:
         return tree
 
     opt = dataclasses.replace(optimizer, mix_fn=counting_mix)
-    grads = jax.tree.map(jnp.zeros_like, params)
-    opt_state = opt.init(params)
-    jax.eval_shape(
-        lambda p, g, s: opt.step(p, g, s, w=jnp.asarray(w, jnp.float32),
-                                 lr=lr, t=0),
-        params, grads, opt_state)
+
+    def probe(p):
+        g = jax.tree.map(jnp.zeros_like, p)
+        return opt.step(p, g, opt.init(p), w=jnp.asarray(w, jnp.float32),
+                        lr=lr, t=0)
+
+    jax.eval_shape(probe, params)
     return counter[0]
 
 

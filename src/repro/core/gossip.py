@@ -50,6 +50,8 @@ __all__ = [
     "mix_ring_shardmap",
     "mix_sparse_shardmap",
     "make_sparse_mix_fn",
+    "apply_schedule_local",
+    "make_local_mix_fn",
     "neighbor_sum_ppermute",
     "GossipSchedule",
     "PhaseSchedule",
@@ -319,6 +321,69 @@ def _apply_phase_local(x: jax.Array, phase: PhaseSchedule, *,
     return out.astype(x.dtype)
 
 
+def apply_schedule_local(x: jax.Array, schedule: GossipSchedule,
+                         t: jax.Array | int, *, axis_name: str) -> jax.Array:
+    """One gossip round of a compiled schedule on a *local* (per-node) shard.
+
+    THE schedule executor: the caller must already be inside a manual region
+    over ``axis_name`` (``mix_sparse_shardmap`` wraps it in its own
+    shard_map; the sharded execution runtime calls it directly from inside
+    the whole-step shard_map, so the step stays ONE dispatch).  A python-int
+    ``t`` (or a single-phase schedule) resolves the phase statically; a
+    traced step counter selects it with ``lax.switch`` (``t`` is replicated,
+    so every device takes the same branch and the collectives inside the
+    branches stay coherent).
+    """
+    n_phases = len(schedule.phases)
+    if n_phases == 1:
+        return _apply_phase_local(x, schedule.phases[0], axis_name=axis_name)
+    if isinstance(t, int):
+        return _apply_phase_local(x, schedule.phases[t % n_phases],
+                                  axis_name=axis_name)
+    branches = [functools.partial(_apply_phase_local, phase=ph,
+                                  axis_name=axis_name)
+                for ph in schedule.phases]
+    return jax.lax.switch(t % n_phases, branches, x)
+
+
+def mix_leaf_dense_local(w: jax.Array, x: jax.Array, *,
+                         axis_name: str) -> jax.Array:
+    """Dense contraction of an EXPLICIT [n, n] matrix against local shards:
+    ``out_i = sum_j w[i, j] x_j`` via one all-gather, row selected by
+    ``axis_index``.  The in-shard-map analogue of :func:`mix_leaf_dense`
+    (same fp32 contraction rule); used for mix sites that pass a matrix
+    other than the compiled topology W (``buffer_sync(mode='complete')``'s
+    1/n global average) and for the forced-dense schedule."""
+    i = jax.lax.axis_index(axis_name)
+    cdt = jnp.promote_types(x.dtype, jnp.float32)
+    g = jax.lax.all_gather(x, axis_name)            # [n, ...local]
+    out = jnp.tensordot(jnp.asarray(w, cdt)[i], g.astype(cdt), axes=1)
+    return out.astype(x.dtype)
+
+
+def make_local_mix_fn(schedule: GossipSchedule | None, *, axis_name: str,
+                      w_ref, t: jax.Array | int = 0):
+    """``mix_fn(w, tree)`` for callers ALREADY inside a shard_map over
+    ``axis_name`` — the sharded execution runtime's counterpart of
+    :func:`make_sparse_mix_fn`, with the same w-operand dispatch: sites that
+    mix with the topology matrix pass the exact ``w_ref`` object and get the
+    compiled schedule at phase ``t`` executed directly on the local shards
+    (NO shard_map re-entry); sites that pass any other [n, n] matrix — or
+    every site when ``schedule`` is None (forced-dense gossip) — get the
+    all-gather row contraction of the matrix they actually asked for."""
+
+    def mix_fn(w, tree):
+        if schedule is None or w is not w_ref:
+            return jax.tree.map(
+                functools.partial(mix_leaf_dense_local, w,
+                                  axis_name=axis_name), tree)
+        return jax.tree.map(
+            lambda x: apply_schedule_local(x, schedule, t,
+                                           axis_name=axis_name), tree)
+
+    return mix_fn
+
+
 def mix_sparse_shardmap(
     tree: PyTree,
     *,
@@ -348,26 +413,16 @@ def mix_sparse_shardmap(
         raise ValueError(
             f"schedule for n={n} nodes but mesh axis {axis_name!r} has size "
             f"{dict(mesh.shape).get(axis_name)}")
-    n_phases = len(schedule.phases)
     # static t (python int) or a single phase: resolve the phase now and
     # compile no switch; only a traced step counter pays the lax.switch
-    static_phase = None
-    if n_phases == 1:
-        static_phase = schedule.phases[0]
-    elif isinstance(t, int):
-        static_phase = schedule.phases[t % n_phases]
+    static = len(schedule.phases) == 1 or isinstance(t, int)
 
     def local_fn(t_, local_tree):
-        def mix_leaf(x):
-            if static_phase is not None:
-                return _apply_phase_local(x, static_phase,
-                                          axis_name=axis_name)
-            branches = [functools.partial(_apply_phase_local, phase=ph,
-                                          axis_name=axis_name)
-                        for ph in schedule.phases]
-            return jax.lax.switch(t_ % n_phases, branches, x)
-
-        return jax.tree.map(mix_leaf, local_tree)
+        tt = t if static else t_
+        return jax.tree.map(
+            lambda x: apply_schedule_local(x, schedule, tt,
+                                           axis_name=axis_name),
+            local_tree)
 
     specs = jax.tree.map(
         lambda x: P(axis_name, *([None] * (x.ndim - 1))), tree)
@@ -477,17 +532,34 @@ def resolve_gossip(topo: Topology, *, schedule: str = "auto", mesh=None,
                           node_axis)
 
 
-def node_mean(tree: PyTree) -> PyTree:
-    """Global average over the node axis (the hypothetical 'global' model)."""
+def node_mean(tree: PyTree, *, axis_name: str | None = None) -> PyTree:
+    """Global average over the node axis (the hypothetical 'global' model).
+
+    ``axis_name=None`` reduces the stacked leading axis (keepdims, so the
+    result broadcasts back against ``[n, ...]`` leaves); with an axis name
+    the node axis is a mesh axis and the caller is inside a manual region —
+    the same average is a ``lax.pmean`` that keeps the local ``[1, ...]``
+    shape, so the two forms are drop-in interchangeable.
+    """
+    if axis_name is not None:
+        return jax.tree.map(lambda x: jax.lax.pmean(x, axis_name), tree)
     return jax.tree.map(lambda x: jnp.mean(x, axis=0, keepdims=True), tree)
 
 
-def consensus_distance(tree: PyTree) -> jax.Array:
+def consensus_distance(tree: PyTree, *,
+                       axis_name: str | None = None) -> jax.Array:
     """sqrt( mean_i || x_i - x_bar ||^2 / n ) aggregated over all leaves —
-    the quantity plotted in Fig. 3 / Kong et al. 2021."""
+    the quantity plotted in Fig. 3 / Kong et al. 2021.  Axis-context rule as
+    :func:`node_mean`: per-node squared distances reduce over the stacked
+    leading axis, or over the named mesh axis (``lax.pmean`` of the local
+    sums == sum/n) when called from inside a sharded step."""
     sq, cnt = 0.0, 0.0
     for leaf in jax.tree.leaves(tree):
-        mean = jnp.mean(leaf, axis=0, keepdims=True)
-        sq = sq + jnp.sum((leaf - mean) ** 2) / leaf.shape[0]
+        if axis_name is not None:
+            mean = jax.lax.pmean(leaf, axis_name)
+            sq = sq + jax.lax.pmean(jnp.sum((leaf - mean) ** 2), axis_name)
+        else:
+            mean = jnp.mean(leaf, axis=0, keepdims=True)
+            sq = sq + jnp.sum((leaf - mean) ** 2) / leaf.shape[0]
         cnt = cnt + np.prod(leaf.shape[1:])
     return jnp.sqrt(sq / cnt)

@@ -85,8 +85,14 @@ class DecentralizedOptimizer:
     def init(self, params: PyTree) -> PyTree:
         return T.chain_init(self._stages(), params)
 
-    def step(self, params, grads, state, *, w=None, lr=None, t=0):
-        ctx = T.StepCtx(w=w, lr=self._lr(lr), t=t, mix_fn=self.mix_fn)
+    def step(self, params, grads, state, *, w=None, lr=None, t=0,
+             axis_name=None, n_nodes=None):
+        """One chained step.  ``axis_name``/``n_nodes`` are the axis context
+        (transforms.StepCtx): None = node-stacked leaves (the default);
+        a mesh axis name = the chain is running on local shards inside a
+        sharded step and node-reducing stages go through collectives."""
+        ctx = T.StepCtx(w=w, lr=self._lr(lr), t=t, mix_fn=self.mix_fn,
+                        axis_name=axis_name, n_nodes=n_nodes)
         sv = T.StepVars(grads=grads, update=grads, params=params,
                         params_pre_mix=params)
         sv, new_state = T.chain_apply(self._stages(), ctx, sv, state)

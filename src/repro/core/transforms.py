@@ -92,12 +92,29 @@ def _lerp(mu, a, b):
 
 @dataclasses.dataclass(frozen=True)
 class StepCtx:
-    """Per-step inputs every stage sees."""
+    """Per-step inputs every stage sees.
+
+    ``axis_name`` / ``n_nodes`` are the *axis context* (DESIGN.md §9): with
+    ``axis_name=None`` (the default, and the only mode before the sharded
+    execution runtime) the node index is the stacked leading axis of every
+    leaf, and node-reductions are ordinary ``axis=0`` ops.  When the chain
+    runs inside a ``shard_map`` over the node mesh axis, ``axis_name`` names
+    that axis and leaves are local ``[1, ...]`` shards — node-reductions
+    must then go through ``lax.pmean`` / collectives (``gossip.node_mean``
+    and friends take the same ``axis_name``), and stages that need the
+    GLOBAL node count must read ``ctx.n_nodes`` instead of ``shape[0]``
+    (which is the local shard size, 1).  Per-node ops (elementwise math,
+    per-node norms over ``shape[1:]``) are identical in both modes and need
+    no change — which is why only the node-reducing stages below ever
+    consult the context.
+    """
 
     w: Any                      # mixing matrix for this round (None if local)
     lr: Any                     # resolved learning rate eta_t
     t: Any                      # step counter (int or traced scalar)
     mix_fn: MixFn               # the gossip hook (dense / ring / compressed)
+    axis_name: Optional[str] = None   # mesh node axis when inside shard_map
+    n_nodes: Optional[int] = None     # global n (None -> leading-axis size)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -474,8 +491,10 @@ def slow_outer(slow_beta: float, slow_alpha: float, tau: int, *,
         st = states[name]
         eta = ctx.lr
         do_outer = (jnp.asarray(ctx.t) + 1) % tau == 0
+        # local leading-axis size: n when stacked, 1 inside a sharded step
+        # (where node_mean's pmean already keeps the [1, ...] local shape)
         n = jax.tree.leaves(sv.params)[0].shape[0]
-        avg = gossip.node_mean(sv.params)
+        avg = gossip.node_mean(sv.params, axis_name=ctx.axis_name)
         avg = _tmap(lambda a: jnp.broadcast_to(a, (n,) + a.shape[1:]), avg)
         slow_m_new = _tmap(
             lambda sm, x0, xt: slow_beta * sm + (x0 - xt) / eta,
@@ -508,7 +527,12 @@ def buffer_sync(target: str = "heavyball", *, mode: str = "ring",
         if mode == "ring":
             m = ctx.mix_fn(ctx.w, m)
         elif mode == "complete":
-            n = jax.tree.leaves(m)[0].shape[0]
+            # the GLOBAL node count: inside a sharded step the leading axis
+            # is the local shard (size 1), so the 1/n matrix must come from
+            # ctx.n_nodes; the mix hook stays the transport either way, so
+            # the per-step mix-site count (CHOCO site discovery) is
+            # identical across execution backends
+            n = ctx.n_nodes or jax.tree.leaves(m)[0].shape[0]
             m = ctx.mix_fn(jnp.full((n, n), 1.0 / n, dtype=jnp.float32), m)
         else:
             raise ValueError(f"unknown buffer_sync mode {mode!r}")

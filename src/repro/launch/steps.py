@@ -51,6 +51,9 @@ class StepConfig:
     param_dtype: Any = jnp.bfloat16
     gossip_schedule: str = "dense"   # dense | ring_ppermute | sparse_ppermute
     topology: str = "ring"           # any core/topology.get_topology name
+    runtime: str = "vmap"            # vmap | sharded: 'sharded' runs the
+                                     # whole train step inside ONE shard_map
+                                     # over node_axis (DESIGN.md §9)
     skip_masked_chunks: bool = False
     cache_shard_features: bool = True   # decode: shard K/D dims over model
     remat_attention: bool = False       # recompute attn chunks in backward
@@ -188,14 +191,6 @@ def build_train_step(sc: StepConfig, *, mesh=None, node_axis: str | None = None)
         moe_spec = NamedSharding(mesh, P("model", None, None))
 
     opt = make_opt(sc)
-    # schedule selection lives in ONE resolver shared with the trainer
-    # (gossip.resolve_gossip); the builder's step is phase-static, so the
-    # sparse schedule is pinned to phase t=0 here
-    mix = gossip.resolve_gossip(
-        topo, schedule=sc.gossip_schedule, mesh=mesh,
-        node_axis=node_axis).mix_fn(w_ref=w_const)
-    if mix is not None:
-        opt = dataclasses.replace(opt, mix_fn=mix)
 
     def loss_fn(p, batch):
         return tf.train_loss(
@@ -205,6 +200,22 @@ def build_train_step(sc: StepConfig, *, mesh=None, node_axis: str | None = None)
             remat_attention=sc.remat_attention, act_spec=act_spec,
             repeat_kv=sc.repeat_kv or sc.megatron_attn,
             head_spec=head_spec, moe_expert_spec=moe_spec)
+
+    if sc.runtime == "sharded":
+        return _build_sharded_train_step(sc, topo, w_const, loss_fn, opt,
+                                         mesh=mesh, node_axis=node_axis)
+    if sc.runtime != "vmap":
+        raise ValueError(f"StepConfig.runtime must be 'vmap' or 'sharded', "
+                         f"got {sc.runtime!r}")
+
+    # schedule selection lives in ONE resolver shared with the trainer
+    # (gossip.resolve_gossip); the builder's step is phase-static, so the
+    # sparse schedule is pinned to phase t=0 here
+    mix = gossip.resolve_gossip(
+        topo, schedule=sc.gossip_schedule, mesh=mesh,
+        node_axis=node_axis).mix_fn(w_ref=w_const)
+    if mix is not None:
+        opt = dataclasses.replace(opt, mix_fn=mix)
 
     spmd_kw = {}
     if act_spec is not None and node_axis is not None:
@@ -216,6 +227,60 @@ def build_train_step(sc: StepConfig, *, mesh=None, node_axis: str | None = None)
         new_params, new_opt = opt.step(params, grads, opt_state,
                                        w=w_const, lr=sc.lr, t=0)
         return new_params, new_opt, jnp.mean(losses)
+
+    return train_step
+
+
+def _build_sharded_train_step(sc: StepConfig, topo, w_const, loss_fn, opt,
+                              *, mesh, node_axis):
+    """The sharded-runtime variant of the launcher step: the COMPLETE step
+    (per-node grad, transform chain, compiled gossip rounds) inside ONE
+    shard_map over ``node_axis`` (DESIGN.md §9).  Each device computes only
+    its own node; the node axis of params/opt-state/batch leaves is manual,
+    every other mesh axis ('model') stays compiler-managed, so FSDP/TP
+    sharding of the feature dims composes as before."""
+    from jax.sharding import PartitionSpec as P
+
+    from repro.runtime.sharded import node_specs
+
+    if mesh is None or node_axis is None:
+        raise ValueError("StepConfig.runtime='sharded' needs mesh= and "
+                         "node_axis=")
+    n = topo.n
+    if dict(mesh.shape).get(node_axis) != n:
+        raise ValueError(
+            f"runtime='sharded': mesh axis {node_axis!r} has size "
+            f"{dict(mesh.shape).get(node_axis)}, topology has n={n}")
+    resolved = gossip.resolve_gossip(topo, schedule=sc.gossip_schedule,
+                                     mesh=mesh, node_axis=node_axis)
+    if resolved.kind == "dense":
+        schedule = None           # every site: local all-gather contraction
+    elif resolved.schedule is not None:
+        schedule = resolved.schedule
+    else:                         # 'ring' legacy kind carries no schedule
+        schedule = gossip.compile_gossip_schedule(topo)
+
+    def local_step(params, opt_state, batch):
+        losses, grads = jax.vmap(jax.value_and_grad(loss_fn))(params, batch)
+        mix = gossip.make_local_mix_fn(schedule, axis_name=node_axis,
+                                       w_ref=w_const, t=0)
+        opt_l = dataclasses.replace(opt, mix_fn=mix)
+        new_params, new_opt = opt_l.step(
+            params, grads, opt_state, w=w_const, lr=sc.lr, t=0,
+            axis_name=node_axis, n_nodes=n)
+        loss = jax.lax.pmean(jnp.mean(losses), node_axis)
+        return new_params, new_opt, loss
+
+    def specs(tree):
+        return node_specs(tree, n=n, axis_name=node_axis)
+
+    def train_step(params, opt_state, batch):
+        fn = gossip._shard_map(
+            local_step, mesh=mesh,
+            in_specs=(specs(params), specs(opt_state), specs(batch)),
+            out_specs=(specs(params), specs(opt_state), P()),
+            manual_axes=frozenset({node_axis}))
+        return fn(params, opt_state, batch)
 
     return train_step
 

@@ -19,6 +19,10 @@ Examples:
       --alpha 0.1 --steps 200
   PYTHONPATH=src python -m repro.launch.train \
       --preset lm100m_ring8_alpha0.1_qg --set loop.steps=50
+  PYTHONPATH=src python -m repro.launch.train --steps 200 \
+      --checkpoint run.npz --checkpoint-every 50     # periodic full state
+  PYTHONPATH=src python -m repro.launch.train --steps 200 \
+      --checkpoint run.npz --resume run.npz          # continue after a kill
 """
 from __future__ import annotations
 
@@ -29,7 +33,6 @@ from repro import api
 from repro.api import presets
 from repro.api.models import resolve_transformer_config
 from repro.core import topology as topo_lib
-from repro.train.checkpoint import save_checkpoint
 
 
 def build_spec(args) -> api.ExperimentSpec:
@@ -70,7 +73,15 @@ def main(argv=None):
     ap.add_argument("--warmup", type=int, default=10)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--log-every", type=int, default=10)
-    ap.add_argument("--checkpoint", default="")
+    ap.add_argument("--checkpoint", default="",
+                    help="save the FULL TrainState (incl. comm_state + step "
+                         "counter) here every loop.checkpoint_every steps "
+                         "and at the end")
+    ap.add_argument("--resume", default="", metavar="PATH",
+                    help="restore a --checkpoint save and continue training "
+                         "to loop.steps")
+    ap.add_argument("--checkpoint-every", type=int, default=0,
+                    help="shorthand for --set loop.checkpoint_every=N")
     ap.add_argument("--preset", default="",
                     help="start from a repro.api preset instead of the flags")
     ap.add_argument("--set", dest="overrides", action="append", default=[],
@@ -80,21 +91,23 @@ def main(argv=None):
     spec = presets.get(args.preset) if args.preset else build_spec(args)
     if args.overrides:
         spec = spec.override(*args.overrides)
+    if args.checkpoint_every:
+        spec = spec.override(
+            f"loop.checkpoint_every={args.checkpoint_every}")
 
     cfg = resolve_transformer_config(spec.model)
     print(f"arch={cfg.name} params={cfg.n_params():,} "
           f"nodes={spec.topology.n} topology={spec.topology.name} "
           f"optimizer={spec.optim.name} alpha={spec.data.alpha}")
     t0 = time.time()
-    result, state = api.run(spec, with_state=True)
+    result = api.run(spec, checkpoint_path=args.checkpoint,
+                     resume=args.resume)
     history = result.history
     print(f"done in {time.time()-t0:.1f}s; final loss "
           f"{history[-1]['loss']:.4f} consensus "
           f"{history[-1]['consensus']:.2e}")
 
     if args.checkpoint:
-        save_checkpoint(args.checkpoint, state.params,
-                        step=int(state.t), extra={"history": history[-1]})
         print("checkpoint ->", args.checkpoint)
     return history
 

@@ -1,0 +1,57 @@
+"""Execution backends for the decentralized training engine (DESIGN.md §9).
+
+One interface, two interchangeable backends behind it:
+
+  * ``'vmap'``    — node axis stacked + vmapped (the degenerate
+                    single-device path; today's CPU behavior);
+  * ``'sharded'`` — the whole step inside one ``shard_map`` over the mesh
+                    node axis: O(1) per-device state in n, one dispatch per
+                    step/chunk;
+  * ``'auto'``    — sharded when the trainer carries a mesh whose
+                    ``node_axis`` matches the topology's n, vmap otherwise
+                    (mirrors the gossip resolver's 'auto').
+
+Trajectories are backend-identical (pinned in tests/test_runtime.py for the
+registry optimizers, compressed comm included; stochastic compressors —
+randk/qsgd — draw per-node randomness differently across layouts and are
+the one documented exception).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+from .base import Runtime
+from .sharded import ShardedRuntime
+from .vmap import VmapRuntime
+
+__all__ = ["Runtime", "VmapRuntime", "ShardedRuntime", "RUNTIMES",
+           "resolve_runtime", "make_runtime"]
+
+RUNTIMES = ("auto", "vmap", "sharded")
+
+
+def resolve_runtime(name: str, *, mesh: Any = None,
+                    node_axis: str | None = None, n: int = 1) -> str:
+    """THE backend selection rules: 'vmap' / 'sharded' verbatim ('sharded'
+    validated against the mesh at runtime construction); 'auto' picks
+    'sharded' iff a mesh carries ``node_axis`` with size ``n``."""
+    if name not in RUNTIMES:
+        raise ValueError(f"unknown runtime {name!r}; valid: "
+                         f"{' | '.join(RUNTIMES)}")
+    if name != "auto":
+        return name
+    if mesh is not None and node_axis is not None \
+            and dict(mesh.shape).get(node_axis) == n:
+        return "sharded"
+    return "vmap"
+
+
+def make_runtime(trainer) -> Runtime:
+    """Build the backend a :class:`DecentralizedTrainer` asked for (its
+    ``runtime`` field), resolving 'auto' against its mesh."""
+    kind = resolve_runtime(trainer.runtime, mesh=trainer.mesh,
+                           node_axis=trainer.node_axis,
+                           n=trainer.topology.n)
+    if kind == "sharded":
+        return ShardedRuntime(trainer)
+    return VmapRuntime(trainer)

@@ -1,0 +1,192 @@
+"""Execution-backend base: the ONE decentralized step, written once.
+
+A :class:`Runtime` owns how the node axis of the paper's n independent
+workers is realized on hardware (DESIGN.md §9):
+
+  * :class:`~repro.runtime.vmap.VmapRuntime` — the node index is the stacked
+    leading axis of every leaf; per-node work is ``jax.vmap``; node
+    reductions are ordinary ``axis=0`` ops.  The degenerate single-device
+    path (CPU tests, benchmarks, examples).
+  * :class:`~repro.runtime.sharded.ShardedRuntime` — the node index is a
+    mesh axis; the COMPLETE step (per-node grad, the transform-stage chain,
+    CHOCO/EF comm updates, the compiled gossip schedule) runs inside a
+    single ``shard_map``, so each device holds only its own node's
+    params/opt/comm state and a step (or a whole scanned chunk) is exactly
+    one dispatch.
+
+Both backends run the SAME step math — the methods below — parameterized by
+a handful of node-axis hooks (``_node_rngs``, ``_node_mean_scalar``,
+``_node_sum_scalar``, ``_mix_impl``).  Everything the hooks do not touch is
+shared verbatim, which is what makes the cross-backend trajectory-parity
+pins in tests/test_runtime.py hold.
+
+Compilation is LAZY and owned by the runtime: the trainer never jits in
+``__post_init__`` anymore, so backends control jit options — in particular
+``donate_argnums=0``: the incoming :class:`TrainState` buffers are donated
+to the step/chunk outputs (the old state is dead the moment the new one
+exists; callers that want to reuse a state across runs must copy it first,
+see ``benchmarks/common.bench_loop``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import gossip
+
+PyTree = Any
+
+
+@dataclasses.dataclass
+class Runtime:
+    """Base execution backend.  ``trainer`` is the owning
+    :class:`~repro.train.trainer.DecentralizedTrainer`; the runtime reads
+    its loss/optimizer/topology/comm/gossip wiring and owns compilation."""
+
+    trainer: Any
+    name: str = "base"
+    axis_name: str | None = None    # mesh node axis (sharded backend only)
+
+    def __post_init__(self):
+        self._step_fn = None
+        self._chunk_fn = None
+
+    # -- node-axis hooks (vmap semantics by default) -------------------------
+    def _node_rngs(self, rng, n: int):
+        """Per-node rng keys with the SAME stream in every backend: the
+        sharded override picks row ``axis_index`` of this split."""
+        return jax.random.split(rng, n)
+
+    def _node_mean_scalar(self, x):
+        """Global mean of a per-node quantity -> replicated scalar."""
+        return jnp.mean(x)
+
+    def _node_sum_scalar(self, x):
+        """``x`` already accumulates the local node contributions; reduce to
+        the global sum (identity when all nodes are stacked locally)."""
+        return x
+
+    def _mix_impl(self, w, t):
+        """The mix hook to install for this backend (None keeps the
+        optimizer's dense default)."""
+        r = self.trainer._resolved
+        if r.kind == "dense":
+            return None
+        return r.mix_fn(w_ref=w, t=t)
+
+    # -- the step math (shared by every backend) -----------------------------
+    def _step_math(self, state, batch, rng):
+        """One decentralized step on whatever layout the backend presents:
+        node-stacked ``[n, ...]`` leaves (vmap) or local ``[1, ...]`` shards
+        inside shard_map (sharded).  Returns (new TrainState, metrics)."""
+        from repro.train.trainer import TrainState
+
+        tr = self.trainer
+        n = tr.topology.n
+        rngs = self._node_rngs(rng, n)
+        grad_fn = jax.value_and_grad(tr.loss_fn, has_aux=True)
+        (loss, (new_ms, metrics)), grads = jax.vmap(grad_fn)(
+            state.params, state.model_state, batch, rngs)
+
+        w = tr._mixing[state.t % tr._mixing.shape[0]]
+        lr = tr.lr_fn(state.t)
+
+        opt = tr.optimizer
+        mix_impl = self._mix_impl(w, state.t)
+        if mix_impl is not None:
+            opt = dataclasses.replace(opt, mix_fn=mix_impl)
+        new_comm = state.comm_state
+        if tr.comm is not None and state.comm_state is not None:
+            # compressed gossip: swap the mix hook for a CHOCO round against
+            # this step's replica states (one site per mix call; DESIGN.md §4)
+            sites_in = list(state.comm_state)
+            sites_out = list(sites_in)
+            comm_key = jax.random.fold_in(rng, 0x0C0)
+            opt = dataclasses.replace(opt, mix_fn=tr.comm.make_mix_fn(
+                sites_in, sites_out, comm_key, tr._comm_gamma,
+                mix_impl=mix_impl))
+            new_comm = sites_out
+
+        new_params, new_opt = opt.step(
+            state.params, grads, state.opt_state, w=w, lr=lr, t=state.t,
+            axis_name=self.axis_name, n_nodes=n)
+
+        out_metrics = {
+            "loss": self._node_mean_scalar(loss),
+            "lr": lr,
+            "consensus": gossip.consensus_distance(
+                new_params, axis_name=self.axis_name),
+            "grad_norm": jnp.sqrt(self._node_sum_scalar(sum(
+                jnp.sum(g.astype(jnp.float32) ** 2)
+                for g in jax.tree.leaves(grads))) / n),
+        }
+        if tr.comm is not None and state.comm_state is not None:
+            n_sites = len(state.comm_state)
+            out_metrics["comm_bits_per_node"] = jnp.asarray(
+                tr._comm_bits * n_sites, jnp.float32)
+            out_metrics["comm_ratio"] = jnp.asarray(
+                tr._dense_bits / max(tr._comm_bits, 1e-9), jnp.float32)
+        for k, v in metrics.items():
+            out_metrics[k] = self._node_mean_scalar(v)
+        return TrainState(new_params, new_opt, new_ms, state.t + 1,
+                          new_comm), out_metrics
+
+    def _chunk_math(self, state, batches, rng):
+        """k steps fused under one ``lax.scan`` (the per-step rng stream is
+        split inside the scan exactly as the outer loop splits it)."""
+        def body(carry, batch):
+            st, r = carry
+            r, sub = jax.random.split(r)
+            st, metrics = self._step_math(st, batch, sub)
+            return (st, r), metrics
+
+        (state, rng), metrics = jax.lax.scan(body, (state, rng), batches)
+        return state, rng, metrics
+
+    # -- backend surface ------------------------------------------------------
+    def _build_step(self):
+        return jax.jit(self._step_math, donate_argnums=0)
+
+    def _build_chunk(self):
+        return jax.jit(self._chunk_math, donate_argnums=0)
+
+    def step(self, state, batch, rng):
+        """One jitted step.  DONATES ``state``: the input buffers back the
+        output state, so per-device memory holds one state, not two."""
+        if self._step_fn is None:
+            self._step_fn = self._build_step()
+        return self._step_fn(state, batch, rng)
+
+    def step_chunk(self, state, batches, rng):
+        """k fused steps in ONE dispatch; donates ``state`` like ``step``."""
+        if self._chunk_fn is None:
+            self._chunk_fn = self._build_chunk()
+        return self._chunk_fn(state, batches, rng)
+
+    def finalize_state(self, state):
+        """Place a freshly initialized (host/replicated) TrainState where
+        this backend wants it.  Identity for vmap; the sharded backend
+        device_puts every node-stacked leaf sharded over the node axis."""
+        return state
+
+    # -- evaluation -----------------------------------------------------------
+    def _eval_batch(self, state, eval_fn, batch):
+        """Per-node sums for one eval batch: dict of ``[n]`` arrays."""
+        return jax.vmap(lambda p, ms: eval_fn(p, ms, batch))(
+            state.params, state.model_state)
+
+    def evaluate(self, state, eval_fn, batches) -> dict:
+        """Paper protocol: evaluate EACH node's local model on the FULL eval
+        set, then average the per-node metrics.  eval_fn(params_i, mstate_i,
+        batch) -> dict of sums + 'count'.  Identical across backends."""
+        totals: dict[str, np.ndarray] = {}
+        for batch in batches:
+            res = self._eval_batch(state, eval_fn, batch)
+            for k, v in res.items():
+                totals[k] = totals.get(k, 0) + np.asarray(v)
+        count = totals.pop("count")
+        return {k: float(np.mean(v / count)) for k, v in totals.items()}

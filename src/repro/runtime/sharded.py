@@ -1,0 +1,173 @@
+"""ShardedRuntime — the whole decentralized step inside one ``shard_map``.
+
+The paper's setting is n independent nodes, each holding its own params,
+momentum and data shard.  This backend makes the hardware look exactly like
+that: the node index is a mesh axis, every node-stacked ``[n, ...]`` leaf of
+the :class:`TrainState` is sharded over it (``P(node_axis, ...)``), and the
+COMPLETE step — per-node ``grad(loss)``, the full transform-stage chain,
+CHOCO/EF comm updates, and the compiled ppermute gossip schedule — runs
+inside a single ``shard_map`` over that axis:
+
+  * per-device memory is O(1) in n — each device holds only its own node's
+    params/opt/comm state (``[1, ...]`` local shards), never the replicated
+    node stack;
+  * a step (or a whole ``lax.scan``-fused chunk) is exactly ONE dispatch —
+    no vmap<->shard_map boundary crossing per mix site: the schedule
+    executor (``gossip.apply_schedule_local``) is called directly from
+    inside the already-sharded step instead of wrapping its own shard_map;
+  * the transform chain runs unchanged on the local shards — elementwise
+    stages are layout-oblivious, and the node-reducing stages read the axis
+    context threaded through ``StepCtx`` (DESIGN.md §9).
+
+Sharding rule (the layout contract): a leaf is node-stacked iff its leading
+dimension equals the topology's n; such leaves get ``P(node_axis, None...)``,
+everything else (step counters, per-stage scalars) is replicated ``P()``.
+RNG parity with the vmap backend is exact: the per-node key is row
+``axis_index`` of the SAME ``jax.random.split(rng, n)``.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core import gossip
+
+from .base import Runtime
+
+
+def node_leaf_spec(leaf, *, n: int, axis_name: str, lead: int = 0):
+    """THE layout contract, in one place: ``P(axis_name, None, ...)`` for a
+    node-stacked leaf (dim ``lead`` equals the global node count ``n``),
+    replicated ``P()`` for everything else (step counters, per-stage
+    scalars).  ``lead=1`` handles chunked batches stacked [k, n, ...].
+    Shared by :class:`ShardedRuntime` and the launcher's sharded step
+    builder (``launch/steps.py``) so the rule cannot drift."""
+    shape = getattr(leaf, "shape", None)
+    if shape is not None and len(shape) > lead and shape[lead] == n:
+        spec = [None] * len(shape)
+        spec[lead] = axis_name
+        return P(*spec)
+    return P()
+
+
+def node_specs(tree, *, n: int, axis_name: str, lead: int = 0):
+    """Per-leaf :func:`node_leaf_spec` tree."""
+    return jax.tree.map(
+        lambda l: node_leaf_spec(l, n=n, axis_name=axis_name, lead=lead),
+        tree)
+
+
+@dataclasses.dataclass
+class ShardedRuntime(Runtime):
+    name: str = "sharded"
+
+    def __post_init__(self):
+        super().__post_init__()
+        tr = self.trainer
+        n = tr.topology.n
+        if tr.mesh is None:
+            raise ValueError(
+                "runtime='sharded' needs a mesh whose node axis carries the "
+                "n node index; pass DecentralizedTrainer(mesh=, node_axis=) "
+                "or use runtime='vmap'")
+        axes = dict(tr.mesh.shape)
+        if axes.get(tr.node_axis) != n:
+            raise ValueError(
+                f"runtime='sharded': mesh axis {tr.node_axis!r} has size "
+                f"{axes.get(tr.node_axis)}, topology has n={n}")
+        self.axis_name = tr.node_axis
+        self.mesh = tr.mesh
+        # the compiled collective schedule this step executes in-place:
+        # resolve_gossip already validated mesh x topology; 'ring' (the
+        # legacy two-ppermute special case) compiles to the same schedule,
+        # and 'dense' (forced) runs every site as a local all-gather round
+        r = tr._resolved
+        if r.kind == "sparse":
+            self._schedule = r.schedule
+        elif r.kind == "dense":
+            self._schedule = None
+        else:
+            self._schedule = gossip.compile_gossip_schedule(tr.topology)
+
+    # -- node-axis hooks ------------------------------------------------------
+    def _node_rngs(self, rng, n: int):
+        # row axis_index of the SAME split the vmap backend uses — per-node
+        # rng streams are bit-identical across backends
+        rngs = jax.random.split(rng, n)
+        i = jax.lax.axis_index(self.axis_name)
+        return jax.lax.dynamic_slice_in_dim(rngs, i, 1, axis=0)
+
+    def _node_mean_scalar(self, x):
+        return jax.lax.pmean(jnp.mean(x), self.axis_name)
+
+    def _node_sum_scalar(self, x):
+        return jax.lax.psum(x, self.axis_name)
+
+    def _mix_impl(self, w, t):
+        # always installed: the optimizer's dense-einsum default would
+        # contract the LOCAL leading axis (size 1), not the node axis
+        return gossip.make_local_mix_fn(
+            self._schedule, axis_name=self.axis_name, w_ref=w, t=t)
+
+    # -- sharding specs (the shared layout contract above) --------------------
+    def _leaf_spec(self, leaf, lead: int = 0):
+        return node_leaf_spec(leaf, n=self.trainer.topology.n,
+                              axis_name=self.axis_name, lead=lead)
+
+    def _specs(self, tree, lead: int = 0):
+        return node_specs(tree, n=self.trainer.topology.n,
+                          axis_name=self.axis_name, lead=lead)
+
+    def finalize_state(self, state):
+        """Shard a freshly initialized TrainState over the node axis — after
+        this, no device ever materializes the full node stack again."""
+        return jax.tree.map(
+            lambda l: jax.device_put(
+                l, NamedSharding(self.mesh, self._leaf_spec(l))), state)
+
+    # -- compilation: ONE shard_map per step / per chunk ----------------------
+    def _shard(self, fn, in_specs, out_specs):
+        return gossip._shard_map(
+            fn, mesh=self.mesh, in_specs=in_specs, out_specs=out_specs,
+            manual_axes=frozenset({self.axis_name}))
+
+    def _build_step(self):
+        def sharded_step(state, batch, rng):
+            sspecs = self._specs(state)
+            fn = self._shard(self._step_math,
+                             in_specs=(sspecs, self._specs(batch), P()),
+                             out_specs=(sspecs, P()))
+            return fn(state, batch, rng)
+
+        return jax.jit(sharded_step, donate_argnums=0)
+
+    def _build_chunk(self):
+        def sharded_chunk(state, batches, rng):
+            sspecs = self._specs(state)
+            fn = self._shard(self._chunk_math,
+                             in_specs=(sspecs, self._specs(batches, lead=1),
+                                       P()),
+                             out_specs=(sspecs, P(), P()))
+            return fn(state, batches, rng)
+
+        return jax.jit(sharded_chunk, donate_argnums=0)
+
+    # -- evaluation -----------------------------------------------------------
+    def _eval_batch(self, state, eval_fn, batch):
+        """Each device evaluates its own node's model on the (replicated)
+        batch; per-node sums come back as global [n] arrays, so the host
+        aggregation is byte-identical to the vmap backend's."""
+        batch = jax.tree.map(jnp.asarray, batch)
+
+        def local_eval(p, ms, b):
+            return jax.vmap(lambda pi, mi: eval_fn(pi, mi, b))(p, ms)
+
+        fn = self._shard(
+            local_eval,
+            in_specs=(self._specs(state.params),
+                      self._specs(state.model_state), P()),
+            out_specs=P(self.axis_name))
+        return fn(state.params, state.model_state, batch)

@@ -1,0 +1,23 @@
+"""VmapRuntime — the node-stacked execution backend (today's behavior).
+
+Every leaf carries the node index as its stacked leading axis ``[n, ...]``
+replicated on (each) device; per-node gradients are ``jax.vmap`` over that
+axis and the transform chain contracts it directly.  When the trainer
+carries a mesh, gossip still runs through the compiled sparse-ppermute
+schedule (``gossip.mix_sparse_shardmap``) — each mix site enters its own
+shard_map region, the PR-3 behavior the sharded backend collapses away.
+
+This is the degenerate single-device path: correct everywhere, O(n) state
+per device.  The base class already implements it; this subclass only pins
+the name.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from .base import Runtime
+
+
+@dataclasses.dataclass
+class VmapRuntime(Runtime):
+    name: str = "vmap"

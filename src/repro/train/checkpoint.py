@@ -58,3 +58,32 @@ def restore_checkpoint(path: str, like: PyTree) -> tuple[PyTree, dict]:
                              f"{arr.shape} vs {leaf.shape}")
         leaves.append(arr)
     return jax.tree_util.tree_unflatten(treedef, leaves), meta
+
+
+# ---------------------------------------------------------------------------
+# full-TrainState checkpoints (the spec-path resume surface)
+# ---------------------------------------------------------------------------
+
+def save_train_state(path: str, state: PyTree, *, rng,
+                     step: int | None = None,
+                     extra: dict | None = None) -> None:
+    """Save a FULL TrainState — params, opt_state, model_state, comm_state
+    and the step counter — plus the training-loop rng carry, as one
+    resumable checkpoint.  ``step`` defaults to the state's own counter;
+    a run restarted from ``restore_train_state`` continues the exact rng /
+    batch stream (run_training's ``checkpoint_fn`` contract)."""
+    step = int(np.asarray(state.t)) if step is None else int(step)
+    save_checkpoint(path, {"state": state, "rng": rng}, step=step,
+                    extra=extra)
+
+
+def restore_train_state(path: str, like_state: PyTree, *,
+                        like_rng=None) -> tuple[PyTree, Any, dict]:
+    """Restore ``(state, rng, meta)`` saved by :func:`save_train_state` into
+    the structure of ``like_state`` (a freshly built init state — same spec,
+    same shapes)."""
+    if like_rng is None:
+        like_rng = jax.random.PRNGKey(0)
+    tree, meta = restore_checkpoint(path, {"state": like_state,
+                                           "rng": like_rng})
+    return tree["state"], jax.numpy.asarray(tree["rng"]), meta

@@ -1,27 +1,39 @@
 """Decentralized training engine.
 
-Node-stacked layout everywhere: params/opt-state leaves are [n_nodes, ...].
-One engine serves three execution modes:
+The step math lives in ONE place — ``repro.runtime.base.Runtime`` — and the
+trainer delegates execution to a pluggable backend (DESIGN.md §9), selected
+by the ``runtime`` field:
 
-  * CPU / single process — node axis vmapped (tests, benchmarks, examples);
-  * mesh 'data' axis      — node axis sharded over the in-pod data axis;
-  * mesh 'pod' axis       — hierarchical pods-as-clients (DESIGN.md §2).
+  * ``'vmap'``    — node-stacked layout: params/opt-state leaves are
+                    ``[n_nodes, ...]`` with the node axis vmapped.  The
+                    degenerate single-device path (CPU tests, benchmarks,
+                    examples); with a mesh, gossip still runs the compiled
+                    sparse-ppermute schedule per mix site.
+  * ``'sharded'`` — the COMPLETE step (per-node grad, transform chain,
+                    CHOCO/EF comm, gossip schedule) inside one ``shard_map``
+                    over the mesh node axis: each device holds only its own
+                    node's state (O(1) per-device memory in n), one dispatch
+                    per step/chunk, buffers donated.
+  * ``'auto'``    — sharded when a mesh carries the node axis, else vmap.
 
-The jitted step:   grads = vmap(grad(loss))(params, batches)
-                   params, opt_state = opt.step(params, grads, w=W_t)
+Trajectories are backend-identical (pinned in tests/test_runtime.py).
+
+The step:   grads = per-node grad(loss)    (vmapped or device-local)
+            params, opt_state = opt.step(params, grads, w=W_t)
 
 The optimizer step is a pure transform chain (core/transforms.py), so whole
 training chunks fuse under ``lax.scan``: ``run_training_scanned`` dispatches
 k steps at a time (one device dispatch per chunk instead of per step),
-producing step-identical metrics to ``run_training``.
+producing step-identical metrics to ``run_training``.  Compilation is lazy
+and backend-owned (the runtime jits with buffer donation on first use —
+never in ``__post_init__``, so mesh/runtime choices can shape the options).
 
-Model state (e.g. BN running stats) is vmapped but NEVER gossiped — the
-paper's local-statistics BN protocol.
+Model state (e.g. BN running stats) stays per-node and is NEVER gossiped —
+the paper's local-statistics BN protocol.
 """
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any, Callable, Optional
 
 import jax
@@ -75,9 +87,13 @@ class DecentralizedTrainer:
     When ``mesh`` is given (node axis sharded over ``node_axis``), the
     topology is compiled once into a sparse ppermute schedule
     (``gossip.compile_gossip_schedule``) and every mix — including the inner
-    anchor gossip of compressed CHOCO/EF comm — runs through
-    ``gossip.mix_sparse_shardmap`` instead of the dense all-gather
-    contraction (DESIGN.md §7).  The trajectory is identical either way.
+    anchor gossip of compressed CHOCO/EF comm — runs those compiled rounds
+    instead of the dense all-gather contraction (DESIGN.md §7).  With
+    ``runtime='auto'`` a mesh also selects the SHARDED execution backend
+    (DESIGN.md §9): the whole step runs inside one shard_map and the
+    schedule executes on the local shards; ``runtime='vmap'`` keeps the
+    node-stacked layout with a shard_map region per mix site.  The
+    trajectory is identical either way.
     """
 
     loss_fn: Callable
@@ -88,6 +104,7 @@ class DecentralizedTrainer:
     mesh: Any = None              # jax Mesh: auto-select the sparse schedule
     node_axis: str = "data"       # mesh axis carrying the node index
     gossip_schedule: str = "auto"  # gossip.GOSSIP_SCHEDULES
+    runtime: str = "auto"          # repro.runtime.RUNTIMES (DESIGN.md §9)
 
     def __post_init__(self):
         if self.lr_fn is None:
@@ -101,8 +118,11 @@ class DecentralizedTrainer:
             node_axis=self.node_axis if self.mesh is not None else None)
         self._comm_gamma = None   # resolved on first sight of params
         self._comm_bits = None    # wire bits per site per node per step
-        self._step_jit = jax.jit(self._step_impl)
-        self._chunk_jit = jax.jit(self._chunk_impl)
+        # the execution backend owns compilation (LAZY, with buffer
+        # donation) — jitting here would bake options in before the
+        # runtime/mesh could influence them
+        from repro.runtime import make_runtime
+        self._runtime = make_runtime(self)
 
     def _comm_setup(self, params):
         if self.comm is not None and self._comm_gamma is None:
@@ -114,7 +134,8 @@ class DecentralizedTrainer:
     # -- init ---------------------------------------------------------------
     def init(self, key, init_fn) -> TrainState:
         """init_fn(key) -> (params, model_state); every node starts from the
-        SAME x^0 (the paper's setup)."""
+        SAME x^0 (the paper's setup).  The runtime places the state (the
+        sharded backend shards every node-stacked leaf over the node axis)."""
         params, mstate = init_fn(key)
         n = self.topology.n
         stack = lambda tree: jax.tree.map(
@@ -126,75 +147,25 @@ class DecentralizedTrainer:
         if self.comm is not None:
             comm_state = self.comm.init_state(
                 self.optimizer, params_n, self._mixing[0])
-        return TrainState(params=params_n,
-                          opt_state=self.optimizer.init(params_n),
-                          model_state=mstate_n,
-                          t=jnp.zeros((), jnp.int32),
-                          comm_state=comm_state)
+        state = TrainState(params=params_n,
+                           opt_state=self.optimizer.init(params_n),
+                           model_state=mstate_n,
+                           t=jnp.zeros((), jnp.int32),
+                           comm_state=comm_state)
+        return self._runtime.finalize_state(state)
 
     # -- one jitted decentralized step ---------------------------------------
     def step(self, state: TrainState, batch: PyTree, rng):
+        """One decentralized step on the selected execution backend.
+        DONATES ``state``: the input buffers back the output state (copy
+        first to keep a state across repeated runs)."""
         self._comm_setup(state.params)
-        return self._step_jit(state, batch, rng)
-
-    def _step_impl(self, state: TrainState, batch: PyTree, rng) -> tuple[TrainState, dict]:
-        n = self.topology.n
-        rngs = jax.random.split(rng, n)
-
-        def node_loss(p, ms, b, r):
-            return self.loss_fn(p, ms, b, r)
-
-        grad_fn = jax.value_and_grad(node_loss, has_aux=True)
-        (loss, (new_ms, metrics)), grads = jax.vmap(grad_fn)(
-            state.params, state.model_state, batch, rngs)
-
-        w = self._mixing[state.t % self._mixing.shape[0]]
-        lr = self.lr_fn(state.t)
-
-        opt = self.optimizer
-        mix_impl = None
-        if self._resolved.kind != "dense":
-            # sparse neighbor-exchange schedule, phase-selected by the
-            # traced step counter (w-operand dispatch: see make_sparse_mix_fn)
-            mix_impl = self._resolved.mix_fn(w_ref=w, t=state.t)
-            opt = dataclasses.replace(opt, mix_fn=mix_impl)
-        new_comm = state.comm_state
-        if self.comm is not None and state.comm_state is not None:
-            # compressed gossip: swap the mix hook for a CHOCO round against
-            # this step's replica states (one site per mix call; DESIGN.md §4)
-            sites_in = list(state.comm_state)
-            sites_out = list(sites_in)
-            comm_key = jax.random.fold_in(rng, 0x0C0)
-            opt = dataclasses.replace(opt, mix_fn=self.comm.make_mix_fn(
-                sites_in, sites_out, comm_key, self._comm_gamma,
-                mix_impl=mix_impl))
-            new_comm = sites_out
-
-        new_params, new_opt = opt.step(
-            state.params, grads, state.opt_state, w=w, lr=lr, t=state.t)
-
-        out_metrics = {
-            "loss": jnp.mean(loss),
-            "lr": lr,
-            "consensus": gossip.consensus_distance(new_params),
-            "grad_norm": jnp.sqrt(sum(
-                jnp.sum(g.astype(jnp.float32) ** 2)
-                for g in jax.tree.leaves(grads)) / n),
-        }
-        if self.comm is not None and state.comm_state is not None:
-            n_sites = len(state.comm_state)
-            out_metrics["comm_bits_per_node"] = jnp.asarray(
-                self._comm_bits * n_sites, jnp.float32)
-            out_metrics["comm_ratio"] = jnp.asarray(
-                self._dense_bits / max(self._comm_bits, 1e-9), jnp.float32)
-        for k, v in metrics.items():
-            out_metrics[k] = jnp.mean(v)
-        return TrainState(new_params, new_opt, new_ms, state.t + 1,
-                          new_comm), out_metrics
+        return self._runtime.step(state, batch, rng)
 
     # -- k fused steps under one dispatch (lax.scan over the chunk) -----------
     def step_chunk(self, state: TrainState, batches: PyTree, rng):
-        """Run ``k`` decentralized steps in ONE jitted dispatch.
+        """Run ``k`` decentralized steps in ONE jitted dispatch (donating
+        ``state`` like :meth:`step`).
 
         ``batches`` leaves are stacked ``[k, n, ...]``; the per-step rng
         stream is split inside the scan exactly as ``run_training`` splits it
@@ -202,32 +173,14 @@ class DecentralizedTrainer:
         Returns the final state, the advanced rng, and metrics stacked [k].
         """
         self._comm_setup(state.params)
-        return self._chunk_jit(state, batches, rng)
-
-    def _chunk_impl(self, state: TrainState, batches: PyTree, rng):
-        def body(carry, batch):
-            st, r = carry
-            r, sub = jax.random.split(r)
-            st, metrics = self._step_impl(st, batch, sub)
-            return (st, r), metrics
-
-        (state, rng), metrics = jax.lax.scan(body, (state, rng), batches)
-        return state, rng, metrics
+        return self._runtime.step_chunk(state, batches, rng)
 
     # -- evaluation -----------------------------------------------------------
     def evaluate(self, state: TrainState, eval_fn, batches) -> dict:
         """Paper protocol: evaluate EACH node's local model on the FULL eval
         set, then average the per-node metrics.  eval_fn(params_i, mstate_i,
         batch) -> dict of sums + 'count'."""
-        n = self.topology.n
-        totals: dict[str, np.ndarray] = {}
-        for batch in batches:
-            res = jax.vmap(lambda p, ms: eval_fn(p, ms, batch))(
-                state.params, state.model_state)
-            for k, v in res.items():
-                totals[k] = totals.get(k, 0) + np.asarray(v)
-        count = totals.pop("count")
-        return {k: float(np.mean(v / count)) for k, v in totals.items()}
+        return self._runtime.evaluate(state, eval_fn, batches)
 
 
 def _record_step(history, i, steps, log_every, log_fn, get_metrics):
@@ -248,22 +201,36 @@ def _record_step(history, i, steps, log_every, log_fn, get_metrics):
 
 def run_training(trainer: DecentralizedTrainer, state: TrainState,
                  batch_iter, steps: int, *, rng=None, log_every: int = 0,
-                 log_fn=print) -> tuple[TrainState, list[dict]]:
+                 log_fn=print, checkpoint_every: int = 0,
+                 checkpoint_fn=None,
+                 step_offset: int = 0) -> tuple[TrainState, list[dict]]:
+    """Per-step python loop.  ``checkpoint_fn(done, state, rng)`` is called
+    whenever ``done`` (ABSOLUTE completed steps, offset included) hits a
+    ``checkpoint_every`` multiple; the passed ``rng`` is the loop carry
+    AFTER the step's split, so a run restarted from ``(state, rng)``
+    continues the exact same stream (the save->resume parity pinned in
+    tests/test_runtime.py).  ``step_offset`` makes a resumed run log/record
+    absolute step indices with the uninterrupted run's cadence."""
     rng = jax.random.PRNGKey(0) if rng is None else rng
     history = []
-    for i, batch in zip(range(steps), batch_iter):
+    total = step_offset + steps
+    for i, batch in zip(range(step_offset, total), batch_iter):
         rng, sub = jax.random.split(rng)
         batch = jax.tree.map(jnp.asarray, batch)
         state, metrics = trainer.step(state, batch, sub)
-        _record_step(history, i, steps, log_every, log_fn,
+        _record_step(history, i, total, log_every, log_fn,
                      lambda: {k: float(v) for k, v in metrics.items()})
+        if checkpoint_fn and checkpoint_every \
+                and (i + 1) % checkpoint_every == 0:
+            checkpoint_fn(i + 1, state, rng)
     return state, history
 
 
 def run_training_scanned(trainer: DecentralizedTrainer, state: TrainState,
                          batch_iter, steps: int, *, chunk: int = 16,
-                         rng=None, log_every: int = 0,
-                         log_fn=print) -> tuple[TrainState, list[dict]]:
+                         rng=None, log_every: int = 0, log_fn=print,
+                         checkpoint_every: int = 0, checkpoint_fn=None,
+                         step_offset: int = 0) -> tuple[TrainState, list[dict]]:
     """``run_training`` with ``chunk`` steps fused under one ``lax.scan``
     dispatch — same rng stream, same math, step-identical metrics, but the
     per-step Python/jit dispatch overhead is paid once per chunk (the `loop`
@@ -275,6 +242,13 @@ def run_training_scanned(trainer: DecentralizedTrainer, state: TrainState,
     If ``batch_iter`` runs dry before ``steps`` are done, the loop stops,
     warns through ``log_fn``, and the history honestly covers only the steps
     that actually ran (the last executed step is always recorded).
+
+    ``checkpoint_fn(done, state, rng)`` fires at the first chunk boundary
+    at/after each ``checkpoint_every`` multiple of the ABSOLUTE step count
+    (the scan carry is only available between dispatches) — a resume from
+    any such save replays the identical stream, whatever the chunking.
+    ``step_offset`` shifts logging/recording to absolute indices like
+    ``run_training``.
     """
     rng = jax.random.PRNGKey(0) if rng is None else rng
     it = iter(batch_iter)
@@ -312,9 +286,15 @@ def run_training_scanned(trainer: DecentralizedTrainer, state: TrainState,
             return {mk: float(mv[j]) for mk, mv in host.items()}
 
         for j in range(k):
-            _record_step(history, done + j, total, log_every, log_fn,
+            _record_step(history, step_offset + done + j,
+                         step_offset + total, log_every, log_fn,
                          lambda j=j: chunk_metrics(j))
         last_metrics = lambda k=k, cm=chunk_metrics: cm(k - 1)
+        abs_done = step_offset + done
+        if checkpoint_fn and checkpoint_every and (
+                (abs_done + k) // checkpoint_every
+                > abs_done // checkpoint_every):
+            checkpoint_fn(abs_done + k, state, rng)
         done += k
     if done < steps:
         log_fn(f"warning: batch_iter exhausted after {done} steps "
@@ -322,6 +302,8 @@ def run_training_scanned(trainer: DecentralizedTrainer, state: TrainState,
         # exhaustion discovered at a chunk boundary: the previous chunk was
         # recorded against total=steps, so its last step may be missing
         if last_metrics is not None and (
-                not history or history[-1]["step"] != done - 1):
-            history.append({"step": done - 1, **last_metrics()})
+                not history
+                or history[-1]["step"] != step_offset + done - 1):
+            history.append({"step": step_offset + done - 1,
+                            **last_metrics()})
     return state, history
