@@ -123,6 +123,72 @@ def bench_loop(method: str = "qg_dsgdm_n", *, alpha: float = 0.1,
     return rows
 
 
+def bench_telemetry(*, n_nodes: int = 8, steps: int = 160, chunk: int = 8,
+                    reps: int = 3, every: int = 80) -> list[dict]:
+    """Telemetry overhead on the ring-``n_nodes`` scan-fused loop bench:
+    steps/s with telemetry off vs cadence-on (every collector, memory sink).
+
+    Cadence is HOST-gated (DESIGN.md §10): a chunk containing an on-cadence
+    step runs the telemetry-collecting trace (all ``chunk`` steps collect),
+    every other chunk runs the exact telemetry-free graph — so the amortized
+    overhead is ~``chunk/every`` of the per-step collector cost, and the
+    off-cadence steps are literally free.
+
+    The two variants are warmed up first (all traces compiled), then timed
+    in ``reps`` INTERLEAVED rounds taking the best wall time of each — the
+    pairing cancels machine-load drift, best-of-N cancels one-off stalls, so
+    the CI ≤5% overhead gate on ``overhead_pct`` stays stable.
+    """
+    from repro.telemetry import MemorySink, TelemetryRecorder
+    from repro.train import run_training_scanned
+
+    base = bench_spec("qg_dsgdm_n", alpha=0.1, n_nodes=n_nodes, steps=steps,
+                      n_data=2048)
+    spec_on = base.replace(telemetry={"enabled": True, "every": every,
+                                      "sink": "memory"})
+    variants = []
+    for tag, spec in (("off", base), ("on", spec_on)):
+        ex = api.build(spec)
+
+        def make_run(ex=ex):
+            recorder = (None if ex.trainer.telemetry is None else
+                        TelemetryRecorder(ex.trainer.telemetry, MemorySink()))
+
+            def go():
+                state = jax.tree.map(jnp.copy, ex.state)
+                state, hist = run_training_scanned(
+                    ex.trainer, state, ex.task.make_iter(), steps,
+                    chunk=chunk, log_every=0, log_fn=lambda *_: None,
+                    telemetry=recorder)
+                jax.block_until_ready(state.params)
+                return hist
+
+            return go
+
+        variants.append({"tag": tag, "run": make_run(),
+                         "best": float("inf"), "loss": None})
+
+    for v in variants:                 # warm-up: compile every trace
+        v["run"]()
+    for _ in range(reps):              # interleaved best-of-N timing
+        for v in variants:
+            t0 = time.time()
+            hist = v["run"]()
+            v["best"] = min(v["best"], time.time() - t0)
+            v["loss"] = hist[-1]["loss"]
+
+    base_sps = steps / variants[0]["best"]
+    rows = []
+    for v in variants:
+        sps = steps / v["best"]
+        rows.append({
+            "tag": v["tag"], "us_per_step": v["best"] / steps * 1e6,
+            "steps_per_s": sps, "loss": v["loss"],
+            "overhead_pct": max(0.0, (base_sps / sps - 1.0) * 100.0),
+        })
+    return rows
+
+
 ROWS: list[dict] = []  # every csv_row also lands here for --json export
 
 

@@ -25,6 +25,13 @@ default vmap backend.
     PYTHONPATH=src python examples/heterogeneous_cifar.py \
         --steps 20 --nodes 4 --runtime sharded
 
+``--telemetry DIR`` turns on the in-graph telemetry collectors (DESIGN.md
+§10) and writes one ``<spec name>.metrics.jsonl`` per grid point into DIR —
+consensus distance, momentum/QG-buffer alignment vs the node-mean gradient,
+grad-norm spread over nodes, wire bytes, and spectral-gap-normalized mixing
+progress.  Render any stream with
+``python -m repro.telemetry.report DIR/<name>.metrics.jsonl``.
+
 (ResNet-20 on CPU is slow; defaults are sized for a few minutes.)
 """
 import argparse
@@ -51,6 +58,9 @@ def parse_args():
                     help="CHOCO consensus step size (default: per-compressor)")
     ap.add_argument("--error-feedback", action="store_true",
                     help="EF14 value exchange instead of CHOCO replicas")
+    ap.add_argument("--telemetry", default="", metavar="DIR",
+                    help="enable in-graph telemetry (DESIGN.md §10); one "
+                         "<spec name>.metrics.jsonl per grid point in DIR")
     ap.add_argument("--set", dest="overrides", action="append", default=[],
                     metavar="KEY=VALUE",
                     help="dotted spec override, e.g. topology.name=exp")
@@ -98,15 +108,24 @@ def main():
                                   decay_at=(0.5, 0.75)),
                 model=api.ModelSpec(name="resnet20",
                                     kwargs={"norm": args.norm}),
+                telemetry=api.TelemetrySpec(enabled=bool(args.telemetry)),
             ).override(*args.overrides)
 
-            result = api.run(spec, mesh=mesh, log_fn=lambda *_: None)
+            telemetry_path = ""
+            if args.telemetry:
+                os.makedirs(args.telemetry, exist_ok=True)
+                telemetry_path = os.path.join(
+                    args.telemetry, f"{spec.name}.metrics.jsonl")
+            result = api.run(spec, mesh=mesh, log_fn=lambda *_: None,
+                             telemetry_path=telemetry_path)
             bw = (f"  wire={result.wire['ratio_vs_dense']:.0f}x less"
                   if result.wire["ratio_vs_dense"] > 1 else "")
+            tm = (f"  telemetry={result.telemetry['path']}"
+                  if result.telemetry else "")
             print(f"alpha={alpha:5.1f}  {method:12s}  "
                   f"test acc={result.final['acc']:.4f}  "
                   f"final loss={result.final['loss']:.3f}  "
-                  f"consensus={result.final['consensus']:.2e}{bw}")
+                  f"consensus={result.final['consensus']:.2e}{bw}{tm}")
 
 
 if __name__ == "__main__":

@@ -16,16 +16,16 @@ eagerly, round-trip through ``to_dict``/``from_dict``/JSON, and accept
 dotted ``--set key=value`` overrides via :func:`apply_overrides`.
 """
 from . import data, models, presets, spec
-from .build import Experiment, Result, build, run
+from .build import Experiment, Result, build, run, wire_stats
 from .models import MODELS, ModelBundle, register_model
 from .spec import (CommSpec, DataSpec, EvalSpec, ExperimentSpec, GossipSpec,
-                   LoopSpec, ModelSpec, OptimSpec, TopologySpec,
-                   apply_overrides)
+                   LoopSpec, ModelSpec, OptimSpec, TelemetrySpec,
+                   TopologySpec, apply_overrides)
 
 __all__ = [
     "ExperimentSpec", "DataSpec", "TopologySpec", "OptimSpec", "CommSpec",
-    "GossipSpec", "LoopSpec", "EvalSpec", "ModelSpec",
-    "apply_overrides", "build", "run", "Experiment", "Result",
+    "GossipSpec", "LoopSpec", "EvalSpec", "ModelSpec", "TelemetrySpec",
+    "apply_overrides", "build", "run", "wire_stats", "Experiment", "Result",
     "MODELS", "ModelBundle", "register_model",
     "presets", "spec", "models", "data",
 ]

@@ -55,7 +55,18 @@ def main(argv=None):
     if args.overrides:
         spec = spec.override(*args.overrides)
 
-    result = run(spec, checkpoint_path=args.checkpoint, resume=args.resume)
+    # telemetry stream lands next to the Result: <out stem>.metrics.jsonl
+    # (spec.telemetry.path still wins if set explicitly)
+    telemetry_path = ""
+    if args.out and spec.telemetry.enabled and not spec.telemetry.path:
+        ext = "jsonl" if spec.telemetry.sink != "csv" else "csv"
+        telemetry_path = os.path.splitext(args.out)[0] + f".metrics.{ext}"
+
+    result = run(spec, checkpoint_path=args.checkpoint, resume=args.resume,
+                 telemetry_path=telemetry_path)
+    if result.telemetry and result.telemetry.get("path"):
+        print(f"telemetry -> {result.telemetry['path']} "
+              f"({result.telemetry['rows_emitted']} rows)")
     print(f"[{spec.name or 'spec'}] steps={result.steps_run} "
           f"wall={result.wall_time_s:.1f}s final="
           + "  ".join(f"{k}={v:.4f}" for k, v in sorted(result.final.items())

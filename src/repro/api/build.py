@@ -27,7 +27,7 @@ from .data import Task, build_task
 from .models import MODELS, ModelBundle
 from .spec import ExperimentSpec
 
-__all__ = ["Experiment", "Result", "build", "run"]
+__all__ = ["Experiment", "Result", "build", "run", "wire_stats"]
 
 
 @dataclasses.dataclass
@@ -55,6 +55,9 @@ class Result:
     steps_run: int
     wall_time_s: float
     wire: dict                         # bytes-on-the-wire accounting
+    telemetry: Optional[dict] = None   # recorder summary (sink path, row
+                                       # count, step-time percentiles) when
+                                       # spec.telemetry.enabled
 
     def to_dict(self) -> dict:
         return dataclasses.asdict(self)
@@ -90,14 +93,36 @@ def build(spec: ExperimentSpec, *, mesh: Any = None) -> Experiment:
                             warmup=lp.warmup, decay_at=lp.decay_at,
                             decay=lp.decay, warmup_from=lp.warmup_from)
 
+    telemetry_cfg = None
+    if spec.telemetry.enabled:
+        from repro.telemetry import resolve_config
+        telemetry_cfg = resolve_config(spec.telemetry.metrics,
+                                       spec.telemetry.every)
+
     trainer = DecentralizedTrainer(
         bundle.loss_fn, _make_opt(spec), topo, lr_fn=lr_fn,
         comm=make_comm(spec.comm.compressor, gamma=spec.comm.gamma,
                        error_feedback=spec.comm.error_feedback,
                        backend=spec.comm.backend),
         mesh=mesh, node_axis=spec.gossip.node_axis,
-        gossip_schedule=spec.gossip.schedule, runtime=spec.runtime)
+        gossip_schedule=spec.gossip.schedule, runtime=spec.runtime,
+        telemetry=telemetry_cfg)
     state = trainer.init(jax.random.PRNGKey(spec.seed), bundle.init_fn)
+    if telemetry_cfg is not None:
+        # build-time constants for the 'wire'/'mixing' collectors — resolved
+        # here (the trainer's gossip/comm wiring must exist) and baked into
+        # the step graph as literals at first trace (compilation is lazy)
+        gap = topo.spectral_gap()
+        ws = wire_stats(trainer, state.params)
+        telemetry_cfg.static.update({
+            "spectral_gap": gap,
+            # consensus DISTANCE (sqrt) contracts by sqrt(lambda_2) per mix
+            "rho": float(np.sqrt(max(1.0 - gap, 0.0))),
+            "wire_bits_per_node_per_step": ws["bits_per_node_per_step"],
+        })
+        if "messages_per_step" in ws:
+            telemetry_cfg.static["wire_messages_per_step"] = (
+                ws["messages_per_step"])
     return Experiment(spec=spec, trainer=trainer, state=state, task=task,
                       bundle=bundle)
 
@@ -123,32 +148,82 @@ def _evaluate(trainer, state, eval_fn, batches) -> dict:
     return out
 
 
-def _wire_accounting(ex: Experiment, history: list) -> dict:
-    """Bits each node puts on the wire per step (DESIGN.md §4 convention:
-    one whole-tree transmission per mix site), dense baseline, and the
-    compression ratio actually realized."""
-    trainer, state = ex.trainer, ex.state
-    per_node = sum(l.size / l.shape[0] for l in jax.tree.leaves(state.params))
+def wire_stats(trainer: DecentralizedTrainer, params) -> dict:
+    """THE wire model: bits each node puts on the wire per step (DESIGN.md
+    §4 convention: one whole-tree transmission per mix site).  Shape-only —
+    safe on donated/deleted param buffers.  Shared by ``Result.wire``
+    accounting and the telemetry ``wire`` collector's build-time statics.
+
+    Dense baseline: full 32-bit tree per site.  Compressed comm replaces
+    that with the compressor's innovation bits — EXCEPT that under a
+    physically executing ppermute schedule (resolved gossip kind ``ring`` /
+    ``sparse``) the CHOCO/EF anchor gossip really ships the FULL anchor
+    tree, one message per schedule edge per site (``comm/choco.mix_site``
+    routes the anchors through ``mix_impl``), so those bytes are charged on
+    top.  Uncompressed runs are unaffected (the full tree per site IS the
+    traffic, whatever collective carries it).  Pinned by the regression in
+    tests/test_telemetry.py: sparse compressed gossip must never account
+    below its anchor traffic."""
+    per_node = sum(l.size / l.shape[0] for l in jax.tree.leaves(params))
     try:
-        sites = count_mix_sites(trainer.optimizer, state.params,
+        sites = count_mix_sites(trainer.optimizer, params,
                                 trainer.topology.w(0))
     except Exception:   # exotic custom chains: fall back to one site
         sites = 1
     dense_bits = 32.0 * per_node * sites
-    last = history[-1] if history else {}
-    bits = float(last.get("comm_bits_per_node", dense_bits))
-    return {
+    out = {
         "mix_sites": int(sites),
         "params_per_node": int(per_node),
-        "bits_per_node_per_step": bits,
         "dense_bits_per_node_per_step": dense_bits,
-        "ratio_vs_dense": float(last.get("comm_ratio", 1.0)),
     }
+    resolved = trainer._resolved
+    messages = None
+    if resolved.kind in ("ring", "sparse"):
+        schedule = resolved.schedule
+        if schedule is None:   # 'ring' special case: same compiled rounds
+            from repro.core.gossip import compile_gossip_schedule
+            schedule = compile_gossip_schedule(trainer.topology)
+        messages = schedule.messages_per_step()
+        out["messages_per_step"] = messages
+    if trainer.comm is not None:
+        comp_bits = trainer.comm.wire_bits_per_site(params) * sites
+        anchor_bits = 0.0
+        if messages is not None:
+            # full-width anchor per edge message, averaged over the n senders
+            anchor_bits = 32.0 * per_node * sites * (
+                messages / trainer.topology.n)
+        out["compressed_bits_per_node_per_step"] = comp_bits
+        out["anchor_bits_per_node_per_step"] = anchor_bits
+        out["bits_per_node_per_step"] = comp_bits + anchor_bits
+    else:
+        out["bits_per_node_per_step"] = dense_bits
+    out["ratio_vs_dense"] = dense_bits / max(
+        out["bits_per_node_per_step"], 1e-9)
+    return out
+
+
+def _wire_accounting(ex: Experiment, history: list) -> dict:
+    """``Result.wire``: the :func:`wire_stats` model for this experiment."""
+    return wire_stats(ex.trainer, ex.state.params)
+
+
+def _make_recorder(ex: Experiment, telemetry_path: str = ""):
+    """Recorder + sink for a telemetry-enabled experiment (None otherwise).
+    ``telemetry_path`` overrides ``spec.telemetry.path``; file sinks with
+    neither default to ``metrics.<ext>`` in the cwd."""
+    if ex.trainer.telemetry is None:
+        return None
+    from repro.telemetry import TelemetryRecorder, make_sink
+    tl = ex.spec.telemetry
+    path = telemetry_path or tl.path
+    if tl.sink != "memory" and not path:
+        path = "metrics.jsonl" if tl.sink == "jsonl" else "metrics.csv"
+    return TelemetryRecorder(ex.trainer.telemetry, make_sink(tl.sink, path))
 
 
 def run(spec: ExperimentSpec, *, mesh: Any = None, log_fn=print,
         with_state: bool = False, checkpoint_path: str = "",
-        resume: str = ""):
+        resume: str = "", telemetry_path: str = ""):
     """Build + train + evaluate one spec.  Returns a :class:`Result`
     (history + final metrics + wire-bytes accounting, JSON-dumpable); with
     ``with_state=True`` returns ``(result, final_state)`` so launchers can
@@ -160,10 +235,18 @@ def run(spec: ExperimentSpec, *, mesh: Any = None, log_fn=print,
     checkpoint, fast-forwards the deterministic batch stream to the saved
     step, and runs the remaining ``loop.steps - step`` steps — the combined
     trajectory is identical to an uninterrupted run (pinned in
-    tests/test_runtime.py).  History ``step`` indices are absolute."""
+    tests/test_runtime.py).  History ``step`` indices are absolute.
+
+    With ``spec.telemetry.enabled``, the jitted step additionally runs the
+    selected in-graph collectors and one row per on-cadence step streams to
+    the telemetry sink (``metrics.jsonl`` by default, ``telemetry_path``
+    overrides the location); ``Result.telemetry`` carries the recorder
+    summary (row count, sink path, host step-time percentiles).  Render the
+    stream with ``python -m repro.telemetry.report`` (DESIGN.md §10)."""
     from repro.train.checkpoint import restore_train_state, save_train_state
 
     ex = build(spec, mesh=mesh)
+    recorder = _make_recorder(ex, telemetry_path)
     lp = spec.loop
     rng = (jax.random.PRNGKey(0) if lp.rng_seed is None
            else jax.random.PRNGKey(lp.rng_seed))
@@ -198,12 +281,12 @@ def run(spec: ExperimentSpec, *, mesh: Any = None, log_fn=print,
         state, history = run_training_scanned(
             ex.trainer, state, batch_iter, lp.steps - start,
             chunk=lp.chunk, rng=rng, log_every=lp.log_every, log_fn=log_fn,
-            step_offset=start, **ckpt_kw)
+            step_offset=start, telemetry=recorder, **ckpt_kw)
     else:
         state, history = run_training(
             ex.trainer, state, batch_iter, lp.steps - start, rng=rng,
             log_every=lp.log_every, log_fn=log_fn, step_offset=start,
-            **ckpt_kw)
+            telemetry=recorder, **ckpt_kw)
     jax.block_until_ready(state.params)
     wall = time.time() - t0
     if checkpoint_path:
@@ -230,8 +313,10 @@ def run(spec: ExperimentSpec, *, mesh: Any = None, log_fn=print,
     wire = _wire_accounting(ex, history)
     wire["total_mbytes_per_node"] = (
         wire["bits_per_node_per_step"] * steps_run / 8e6)
+    telemetry_summary = recorder.close() if recorder is not None else None
     result = Result(spec=spec.to_dict(), history=history, final=final,
-                    steps_run=steps_run, wall_time_s=wall, wire=wire)
+                    steps_run=steps_run, wall_time_s=wall, wire=wire,
+                    telemetry=telemetry_summary)
     if with_state:
         return result, state
     return result

@@ -27,7 +27,7 @@ from typing import Any
 
 __all__ = [
     "DataSpec", "TopologySpec", "OptimSpec", "CommSpec", "GossipSpec",
-    "LoopSpec", "EvalSpec", "ModelSpec", "ExperimentSpec",
+    "LoopSpec", "EvalSpec", "ModelSpec", "TelemetrySpec", "ExperimentSpec",
     "apply_overrides",
 ]
 
@@ -134,10 +134,32 @@ class ModelSpec:
     kwargs: dict = dataclasses.field(default_factory=dict)
 
 
+@dataclasses.dataclass(frozen=True)
+class TelemetrySpec:
+    """In-graph metric collection + streaming sink (DESIGN.md §10).
+
+    Disabled (the default) leaves the compiled step graph IDENTICAL to a
+    telemetry-less build — the bit-for-bit history pin in tests/test_api.py
+    holds.  Enabled, the jitted step runs the selected
+    ``repro.telemetry.METRICS`` collectors every ``every`` steps (cadence is
+    host-gated: off-cadence steps/chunks dispatch the exact telemetry-free
+    compiled graph) and
+    ``run(spec)`` streams one row per on-cadence step to the ``sink``
+    (``metrics.jsonl`` next to the Result by default); render with
+    ``python -m repro.telemetry.report``."""
+
+    enabled: bool = False
+    every: int = 1                    # collect when step % every == 0
+    metrics: tuple = ()               # () -> all registered collectors
+    sink: str = "jsonl"               # telemetry.SINKS: memory | jsonl | csv
+    path: str = ""                    # '' -> metrics.<sink ext> in cwd (file
+                                      # sinks); run(telemetry_path=) overrides
+
+
 _NESTED = {
     "data": DataSpec, "topology": TopologySpec, "optim": OptimSpec,
     "comm": CommSpec, "gossip": GossipSpec, "loop": LoopSpec,
-    "eval": EvalSpec, "model": ModelSpec,
+    "eval": EvalSpec, "model": ModelSpec, "telemetry": TelemetrySpec,
 }
 
 
@@ -159,6 +181,8 @@ class ExperimentSpec:
     loop: LoopSpec = dataclasses.field(default_factory=LoopSpec)
     eval: EvalSpec = dataclasses.field(default_factory=EvalSpec)
     model: ModelSpec = dataclasses.field(default_factory=ModelSpec)
+    telemetry: TelemetrySpec = dataclasses.field(
+        default_factory=TelemetrySpec)
 
     # -- serialization -------------------------------------------------------
     def to_dict(self) -> dict:
@@ -295,6 +319,18 @@ class ExperimentSpec:
             if not 0.0 <= f <= 1.0:
                 err("loop.decay_at", f"fractions must be in [0, 1], got "
                     f"{lp.decay_at}")
+        # telemetry (names/sink checked against the live registries)
+        tl = self.telemetry
+        from repro.telemetry import METRICS, SINKS
+        if tl.every < 1:
+            err("telemetry.every", f"must be >= 1, got {tl.every}")
+        unknown_m = [m for m in tl.metrics if m not in METRICS]
+        if unknown_m:
+            err("telemetry.metrics", f"unknown metrics {unknown_m}; have "
+                f"{sorted(METRICS)}")
+        if tl.sink not in SINKS:
+            err("telemetry.sink", f"unknown sink {tl.sink!r}; have "
+                f"{sorted(SINKS)}")
         # model (+ model x dataset compatibility)
         from repro.api.models import MODEL_DATASETS, MODELS
         if self.model.name not in MODELS:

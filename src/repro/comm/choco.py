@@ -176,19 +176,22 @@ class CompressedGossip:
         compiled sparse-ppermute schedule here when a mesh is present, so
         compressed gossip rides the same collective schedule as dense.
         """
-        if self.error_feedback:
-            q, new_residual = ef.ef_compress(
-                self.compressor, key, tree, site["residual"])
-            new_site = {"residual": new_residual}
-            anchor = q
-        else:
-            new_x_hat, _ = ef.ef21_update(self.compressor, key, tree,
-                                          site["x_hat"])
-            new_site = {"x_hat": new_x_hat}
-            anchor = new_x_hat
-        mixed = (mix_impl or gossip.mix_dense)(w, anchor)
-        out = jax.tree.map(
-            lambda x, mh, h: x + gamma * (mh - h), tree, mixed, anchor)
+        with jax.named_scope("tm/comm/compress"):
+            if self.error_feedback:
+                q, new_residual = ef.ef_compress(
+                    self.compressor, key, tree, site["residual"])
+                new_site = {"residual": new_residual}
+                anchor = q
+            else:
+                new_x_hat, _ = ef.ef21_update(self.compressor, key, tree,
+                                              site["x_hat"])
+                new_site = {"x_hat": new_x_hat}
+                anchor = new_x_hat
+        with jax.named_scope("tm/comm/anchor_exchange"):
+            mixed = (mix_impl or gossip.mix_dense)(w, anchor)
+        with jax.named_scope("tm/comm/decompress"):
+            out = jax.tree.map(
+                lambda x, mh, h: x + gamma * (mh - h), tree, mixed, anchor)
         return out, new_site
 
     # -- trainer hook ----------------------------------------------------------

@@ -310,13 +310,15 @@ def _apply_phase_local(x: jax.Array, phase: PhaseSchedule, *,
     i = jax.lax.axis_index(axis_name)
     cdt = jnp.promote_types(x.dtype, jnp.float32)
     if phase.dense:
-        g = jax.lax.all_gather(x, axis_name)           # [n, ...local]
+        with jax.named_scope("tm/gossip/allgather"):
+            g = jax.lax.all_gather(x, axis_name)       # [n, ...local]
         w_row = jnp.asarray(phase.w, cdt)[i]           # [n]
         out = jnp.tensordot(w_row, g.astype(cdt), axes=1)
     else:
         out = x.astype(cdt) * jnp.asarray(phase.self_weight, cdt)[i]
         for perm, recv_w in phase.rounds:
-            recv = jax.lax.ppermute(x, axis_name, perm=list(perm))
+            with jax.named_scope("tm/gossip/ppermute"):
+                recv = jax.lax.ppermute(x, axis_name, perm=list(perm))
             out = out + recv.astype(cdt) * jnp.asarray(recv_w, cdt)[i]
     return out.astype(x.dtype)
 

@@ -171,7 +171,11 @@ def chain_apply(stages: tuple[Stage, ...], ctx: StepCtx, sv: StepVars,
                 states: dict) -> tuple[StepVars, dict]:
     states = dict(states)
     for s in stages:
-        sv, states = s.apply(ctx, sv, states)
+        # tm/ spans label the per-stage HLO for profile captures
+        # (metadata-only: the computation — and hence any trajectory pinned
+        # against it — is untouched; DESIGN.md §10)
+        with jax.named_scope(f"tm/stage/{s.name}"):
+            sv, states = s.apply(ctx, sv, states)
     return sv, states
 
 

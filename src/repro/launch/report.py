@@ -1,6 +1,14 @@
 """Render the §Dry-run / §Roofline markdown tables from dryrun artifacts.
 
     PYTHONPATH=src python -m repro.launch.report [--dir experiments/dryrun]
+                                                 [--out report.md]
+
+Table/formatting helpers live in ``repro.telemetry.report`` (the shared
+markdown machinery — DESIGN.md §10); this module is the dryrun-artifact
+front end.  Records are partial by design: a dryrun that failed before the
+roofline or memory analysis still produces a JSON artifact, so every lookup
+here tolerates missing optional keys (``roofline``, ``memory_analysis``,
+``n_chips``, ...) instead of raising.
 """
 from __future__ import annotations
 
@@ -8,6 +16,8 @@ import argparse
 import glob
 import json
 import os
+
+from repro.telemetry.report import fmt_s, markdown_table
 
 
 def load(dir_: str) -> list[dict]:
@@ -19,20 +29,9 @@ def load(dir_: str) -> list[dict]:
     return recs
 
 
-def fmt_s(x: float) -> str:
-    if x >= 1.0:
-        return f"{x:.2f}s"
-    if x >= 1e-3:
-        return f"{x*1e3:.1f}ms"
-    return f"{x*1e6:.0f}us"
-
-
 def roofline_table(recs: list[dict], mesh: str = "single",
                    gossip: str | None = None) -> str:
     rows = []
-    head = ("| arch | shape | nodes | compute | memory | collective | "
-            "bottleneck | useful FLOPs | per-chip temp mem |\n"
-            "|---|---|---|---|---|---|---|---|---|")
     for r in recs:
         if r.get("mesh") != mesh or "roofline" not in r:
             continue
@@ -43,21 +42,23 @@ def roofline_table(recs: list[dict], mesh: str = "single",
         if gossip is None and (r.get("gossip") or "dense") != "dense":
             continue
         rt = r["roofline"]
-        mem = r.get("memory_analysis", "")
+        mem = str(r.get("memory_analysis", ""))
         temp = ""
         if "temp=" in mem:
             temp = mem.split("temp=")[1].split(" ")[0]
-        rows.append(
-            f"| {r['arch']} | {r['shape']} | {r.get('n_nodes','-')} | "
-            f"{fmt_s(rt['compute_s'])} | {fmt_s(rt['memory_s'])} | "
-            f"{fmt_s(rt['collective_s'])} | **{rt['bottleneck']}** | "
-            f"{r.get('useful_flops_ratio', 0):.2f} | {temp} |")
-    return "\n".join([head] + rows)
+        rows.append([
+            r.get("arch", "?"), r.get("shape", "?"),
+            r.get("n_nodes", "-"),
+            fmt_s(rt.get("compute_s", 0.0)), fmt_s(rt.get("memory_s", 0.0)),
+            fmt_s(rt.get("collective_s", 0.0)),
+            f"**{rt.get('bottleneck', '?')}**",
+            f"{r.get('useful_flops_ratio', 0):.2f}", temp])
+    return markdown_table(
+        ["arch", "shape", "nodes", "compute", "memory", "collective",
+         "bottleneck", "useful FLOPs", "per-chip temp mem"], rows)
 
 
 def dryrun_table(recs: list[dict]) -> str:
-    head = ("| arch | shape | mesh | chips | compiled | memory analysis "
-            "(per chip) |\n|---|---|---|---|---|---|")
     rows = []
     for r in recs:
         if r.get("variant", "baseline") != "baseline" or \
@@ -65,11 +66,14 @@ def dryrun_table(recs: list[dict]) -> str:
             continue
         ok = "yes" if ("memory_analysis" in r and
                        "failed" not in str(r["memory_analysis"])) else "?"
-        rows.append(
-            f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r['n_chips']} | "
-            f"{ok} ({r.get('full_compile_s','-')}s) | "
-            f"{str(r.get('memory_analysis',''))[:70]} |")
-    return "\n".join([head] + rows)
+        rows.append([
+            r.get("arch", "?"), r.get("shape", "?"), r.get("mesh", "?"),
+            r.get("n_chips", "-"),
+            f"{ok} ({r.get('full_compile_s', '-')}s)",
+            str(r.get("memory_analysis", ""))[:70]])
+    return markdown_table(
+        ["arch", "shape", "mesh", "chips", "compiled",
+         "memory analysis (per chip)"], rows)
 
 
 def main(argv=None):
@@ -79,13 +83,23 @@ def main(argv=None):
                     choices=["roofline", "dryrun", "both"])
     ap.add_argument("--mesh", default="single")
     ap.add_argument("--gossip", default=None)
+    ap.add_argument("--out", default=None,
+                    help="write the rendered markdown here instead of stdout")
     args = ap.parse_args(argv)
     recs = load(args.dir)
+    parts = []
     if args.what in ("roofline", "both"):
-        print(roofline_table(recs, mesh=args.mesh, gossip=args.gossip))
+        parts.append(roofline_table(recs, mesh=args.mesh,
+                                    gossip=args.gossip))
     if args.what in ("dryrun", "both"):
-        print()
-        print(dryrun_table(recs))
+        parts.append(dryrun_table(recs))
+    text = "\n\n".join(parts)
+    if args.out:
+        with open(args.out, "w") as fh:
+            fh.write(text + "\n")
+        print(f"wrote {args.out}")
+    else:
+        print(text)
 
 
 if __name__ == "__main__":

@@ -23,6 +23,15 @@ Examples:
       --checkpoint run.npz --checkpoint-every 50     # periodic full state
   PYTHONPATH=src python -m repro.launch.train --steps 200 \
       --checkpoint run.npz --resume run.npz          # continue after a kill
+  PYTHONPATH=src python -m repro.launch.train --steps 200 \
+      --telemetry metrics.jsonl                      # in-graph telemetry
+
+``--telemetry PATH`` enables the in-graph telemetry collectors (DESIGN.md
+§10) — consensus distance, momentum/QG-buffer alignment vs the node-mean
+gradient, grad-norm spread, wire bytes, mixing progress — streamed one JSONL
+row per step to PATH; render with ``python -m repro.telemetry.report PATH``.
+Cadence/collector selection ride the spec: ``--set telemetry.every=10``,
+``--set telemetry.metrics='["consensus","alignment"]'``.
 """
 from __future__ import annotations
 
@@ -82,6 +91,10 @@ def main(argv=None):
                          "to loop.steps")
     ap.add_argument("--checkpoint-every", type=int, default=0,
                     help="shorthand for --set loop.checkpoint_every=N")
+    ap.add_argument("--telemetry", default="", metavar="PATH",
+                    help="enable in-graph telemetry (DESIGN.md §10) and "
+                         "stream metrics rows to PATH (.jsonl); shorthand "
+                         "for --set telemetry.enabled=true + a sink path")
     ap.add_argument("--preset", default="",
                     help="start from a repro.api preset instead of the flags")
     ap.add_argument("--set", dest="overrides", action="append", default=[],
@@ -94,6 +107,8 @@ def main(argv=None):
     if args.checkpoint_every:
         spec = spec.override(
             f"loop.checkpoint_every={args.checkpoint_every}")
+    if args.telemetry:
+        spec = spec.override("telemetry.enabled=true")
 
     cfg = resolve_transformer_config(spec.model)
     print(f"arch={cfg.name} params={cfg.n_params():,} "
@@ -101,7 +116,7 @@ def main(argv=None):
           f"optimizer={spec.optim.name} alpha={spec.data.alpha}")
     t0 = time.time()
     result = api.run(spec, checkpoint_path=args.checkpoint,
-                     resume=args.resume)
+                     resume=args.resume, telemetry_path=args.telemetry)
     history = result.history
     print(f"done in {time.time()-t0:.1f}s; final loss "
           f"{history[-1]['loss']:.4f} consensus "
@@ -109,6 +124,10 @@ def main(argv=None):
 
     if args.checkpoint:
         print("checkpoint ->", args.checkpoint)
+    if result.telemetry and result.telemetry.get("path"):
+        print(f"telemetry -> {result.telemetry['path']} "
+              f"({result.telemetry['rows_emitted']} rows); render with "
+              f"python -m repro.telemetry.report {result.telemetry['path']}")
     return history
 
 

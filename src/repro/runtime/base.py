@@ -37,6 +37,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import gossip
+from repro.telemetry.metrics import TM_PREFIX, CollectorCtx
 
 PyTree = Any
 
@@ -52,8 +53,11 @@ class Runtime:
     axis_name: str | None = None    # mesh node axis (sharded backend only)
 
     def __post_init__(self):
-        self._step_fn = None
-        self._chunk_fn = None
+        # one compiled fn per (step|chunk) x (plain|telemetry) — the
+        # telemetry variants only exist once a loop asks for them, so the
+        # default path compiles exactly what it always did
+        self._step_fns = {}
+        self._chunk_fns = {}
 
     # -- node-axis hooks (vmap semantics by default) -------------------------
     def _node_rngs(self, rng, n: int):
@@ -70,6 +74,10 @@ class Runtime:
         the global sum (identity when all nodes are stacked locally)."""
         return x
 
+    def _node_max_scalar(self, x):
+        """Global max of a per-node quantity -> replicated scalar."""
+        return jnp.max(x)
+
     def _mix_impl(self, w, t):
         """The mix hook to install for this backend (None keeps the
         optimizer's dense default)."""
@@ -79,18 +87,23 @@ class Runtime:
         return r.mix_fn(w_ref=w, t=t)
 
     # -- the step math (shared by every backend) -----------------------------
-    def _step_math(self, state, batch, rng):
+    def _step_math(self, state, batch, rng, collect: bool = False):
         """One decentralized step on whatever layout the backend presents:
         node-stacked ``[n, ...]`` leaves (vmap) or local ``[1, ...]`` shards
-        inside shard_map (sharded).  Returns (new TrainState, metrics)."""
+        inside shard_map (sharded).  Returns (new TrainState, metrics).
+
+        ``collect`` is a TRACE-TIME flag: True adds the telemetry collectors
+        (DESIGN.md §10) to this trace; False is the exact pre-telemetry
+        graph."""
         from repro.train.trainer import TrainState
 
         tr = self.trainer
         n = tr.topology.n
         rngs = self._node_rngs(rng, n)
         grad_fn = jax.value_and_grad(tr.loss_fn, has_aux=True)
-        (loss, (new_ms, metrics)), grads = jax.vmap(grad_fn)(
-            state.params, state.model_state, batch, rngs)
+        with jax.named_scope("tm/grad"):
+            (loss, (new_ms, metrics)), grads = jax.vmap(grad_fn)(
+                state.params, state.model_state, batch, rngs)
 
         w = tr._mixing[state.t % tr._mixing.shape[0]]
         lr = tr.lr_fn(state.t)
@@ -111,9 +124,10 @@ class Runtime:
                 mix_impl=mix_impl))
             new_comm = sites_out
 
-        new_params, new_opt = opt.step(
-            state.params, grads, state.opt_state, w=w, lr=lr, t=state.t,
-            axis_name=self.axis_name, n_nodes=n)
+        with jax.named_scope("tm/opt_step"):
+            new_params, new_opt = opt.step(
+                state.params, grads, state.opt_state, w=w, lr=lr, t=state.t,
+                axis_name=self.axis_name, n_nodes=n)
 
         out_metrics = {
             "loss": self._node_mean_scalar(loss),
@@ -132,40 +146,84 @@ class Runtime:
                 tr._dense_bits / max(tr._comm_bits, 1e-9), jnp.float32)
         for k, v in metrics.items():
             out_metrics[k] = self._node_mean_scalar(v)
+        if collect:
+            out_metrics.update(self._telemetry_metrics(
+                state, grads, new_params, new_opt, new_comm, lr, n))
         return TrainState(new_params, new_opt, new_ms, state.t + 1,
                           new_comm), out_metrics
 
-    def _chunk_math(self, state, batches, rng):
+    def _telemetry_metrics(self, state, grads, new_params, new_opt,
+                           new_comm, lr, n) -> dict:
+        """In-graph telemetry collection (DESIGN.md §10): when the trainer
+        carries a resolved :class:`~repro.telemetry.metrics.TelemetryConfig`,
+        run its collectors on this step and return their scalars under the
+        ``tm.`` prefix (the host recorder splits them back off, so the
+        user-facing metric keys are untouched).
+
+        Cadence is gated on the HOST, not with an in-graph ``lax.cond``: the
+        loops pick between the plain trace and this telemetry trace per
+        step/chunk (``collect=``).  A cond gate was measured at ~9% steps/s
+        on the ring-8 CPU micro-bench even when it NEVER took the collect
+        branch — XLA:CPU marshals every captured tree (grads, old/new
+        params/opt/comm state) as conditional operands each step.  With two
+        traces, an off-cadence step runs the byte-identical pre-telemetry
+        graph, so telemetry off — and off-cadence — costs exactly zero (the
+        bit-for-bit history pin in tests/test_api.py covers this)."""
+        tel = getattr(self.trainer, "telemetry", None)
+        if tel is None:
+            return {}
+        ctx = CollectorCtx(
+            grads=grads, params_old=state.params, params_new=new_params,
+            opt_state_old=state.opt_state, opt_state_new=new_opt,
+            comm_state_old=state.comm_state, comm_state_new=new_comm,
+            lr=lr, t=state.t, n_nodes=n, axis_name=self.axis_name,
+            node_mean=self._node_mean_scalar,
+            node_sum=self._node_sum_scalar,
+            node_max=self._node_max_scalar,
+            static=tel.static)
+        with jax.named_scope("tm/collect"):
+            vals = tel.collect(ctx)
+        return {TM_PREFIX + k: v for k, v in vals.items()}
+
+    def _chunk_math(self, state, batches, rng, collect: bool = False):
         """k steps fused under one ``lax.scan`` (the per-step rng stream is
         split inside the scan exactly as the outer loop splits it)."""
         def body(carry, batch):
             st, r = carry
             r, sub = jax.random.split(r)
-            st, metrics = self._step_math(st, batch, sub)
+            st, metrics = self._step_math(st, batch, sub, collect=collect)
             return (st, r), metrics
 
         (state, rng), metrics = jax.lax.scan(body, (state, rng), batches)
         return state, rng, metrics
 
     # -- backend surface ------------------------------------------------------
-    def _build_step(self):
-        return jax.jit(self._step_math, donate_argnums=0)
+    def _build_step(self, collect: bool = False):
+        def step(state, batch, rng):
+            return self._step_math(state, batch, rng, collect=collect)
 
-    def _build_chunk(self):
-        return jax.jit(self._chunk_math, donate_argnums=0)
+        return jax.jit(step, donate_argnums=0)
 
-    def step(self, state, batch, rng):
+    def _build_chunk(self, collect: bool = False):
+        def chunk(state, batches, rng):
+            return self._chunk_math(state, batches, rng, collect=collect)
+
+        return jax.jit(chunk, donate_argnums=0)
+
+    def step(self, state, batch, rng, collect: bool = False):
         """One jitted step.  DONATES ``state``: the input buffers back the
-        output state, so per-device memory holds one state, not two."""
-        if self._step_fn is None:
-            self._step_fn = self._build_step()
-        return self._step_fn(state, batch, rng)
+        output state, so per-device memory holds one state, not two.
+        ``collect=True`` selects the telemetry-collecting trace (compiled
+        separately, on first use)."""
+        if collect not in self._step_fns:
+            self._step_fns[collect] = self._build_step(collect)
+        return self._step_fns[collect](state, batch, rng)
 
-    def step_chunk(self, state, batches, rng):
+    def step_chunk(self, state, batches, rng, collect: bool = False):
         """k fused steps in ONE dispatch; donates ``state`` like ``step``."""
-        if self._chunk_fn is None:
-            self._chunk_fn = self._build_chunk()
-        return self._chunk_fn(state, batches, rng)
+        if collect not in self._chunk_fns:
+            self._chunk_fns[collect] = self._build_chunk(collect)
+        return self._chunk_fns[collect](state, batches, rng)
 
     def finalize_state(self, state):
         """Place a freshly initialized (host/replicated) TrainState where

@@ -106,6 +106,9 @@ class ShardedRuntime(Runtime):
     def _node_sum_scalar(self, x):
         return jax.lax.psum(x, self.axis_name)
 
+    def _node_max_scalar(self, x):
+        return jax.lax.pmax(jnp.max(x), self.axis_name)
+
     def _mix_impl(self, w, t):
         # always installed: the optimizer's dense-einsum default would
         # contract the LOCAL leading axis (size 1), not the node axis
@@ -134,23 +137,25 @@ class ShardedRuntime(Runtime):
             fn, mesh=self.mesh, in_specs=in_specs, out_specs=out_specs,
             manual_axes=frozenset({self.axis_name}))
 
-    def _build_step(self):
+    def _build_step(self, collect: bool = False):
         def sharded_step(state, batch, rng):
             sspecs = self._specs(state)
-            fn = self._shard(self._step_math,
-                             in_specs=(sspecs, self._specs(batch), P()),
-                             out_specs=(sspecs, P()))
+            fn = self._shard(
+                lambda st, b, r: self._step_math(st, b, r, collect=collect),
+                in_specs=(sspecs, self._specs(batch), P()),
+                out_specs=(sspecs, P()))
             return fn(state, batch, rng)
 
         return jax.jit(sharded_step, donate_argnums=0)
 
-    def _build_chunk(self):
+    def _build_chunk(self, collect: bool = False):
         def sharded_chunk(state, batches, rng):
             sspecs = self._specs(state)
-            fn = self._shard(self._chunk_math,
-                             in_specs=(sspecs, self._specs(batches, lead=1),
-                                       P()),
-                             out_specs=(sspecs, P(), P()))
+            fn = self._shard(
+                lambda st, b, r: self._chunk_math(st, b, r, collect=collect),
+                in_specs=(sspecs, self._specs(batches, lead=1),
+                          P()),
+                out_specs=(sspecs, P(), P()))
             return fn(state, batches, rng)
 
         return jax.jit(sharded_chunk, donate_argnums=0)

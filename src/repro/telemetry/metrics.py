@@ -1,0 +1,299 @@
+"""In-graph metric collectors (DESIGN.md §10).
+
+A *collector* is a pure function computed INSIDE the jitted decentralized
+step, on whatever node layout the execution backend presents — node-stacked
+``[n, ...]`` leaves under :class:`~repro.runtime.vmap.VmapRuntime`, local
+``[1, ...]`` shards inside the whole-step ``shard_map`` of
+:class:`~repro.runtime.sharded.ShardedRuntime`.  The layout difference is
+absorbed by the :class:`CollectorCtx` node hooks (``node_mean`` /
+``node_sum`` / ``node_max`` — plain ``axis=0`` reductions in the stacked
+layout, ``lax.pmean``/``psum``/``pmax`` collectives in the sharded one), so
+every collector is written ONCE and produces the same values under both
+backends (pinned by tests/test_telemetry.py).
+
+Contract:
+
+    collector(ctx: CollectorCtx) -> dict[str, f32 scalar]
+
+* outputs must be fully node-reduced f32 scalars (``shape ()``) — under the
+  sharded backend they must come out replicated, which the ctx hooks
+  guarantee; anything per-node would break the step's output sharding;
+* the set of keys must be a trace-time constant for a given experiment
+  (it may depend on the optimizer's state structure — e.g. one alignment
+  key per momentum buffer — but not on traced values): every on-cadence
+  step must emit the same row schema, and the scanned loop stacks the
+  per-step dicts under ``lax.scan``;
+* collectors must not mutate anything: they read the step's inputs/outputs
+  from the ctx and return numbers.
+
+``METRICS`` is the registry a :class:`MetricsSpec` selects from;
+:func:`resolve_config` turns the serializable ``TelemetrySpec`` fields into
+the :class:`TelemetryConfig` the trainer threads into its runtime.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import gossip
+
+PyTree = Any
+
+__all__ = [
+    "CollectorCtx", "MetricsSpec", "TelemetryConfig", "METRICS",
+    "DEFAULT_METRICS", "resolve_config", "TM_PREFIX",
+]
+
+#: metric keys emitted by the jitted step are namespaced with this prefix so
+#: the host-side recorder can split them off the user-facing metrics dict
+#: (history stays byte-identical to a telemetry-less run).
+TM_PREFIX = "tm."
+
+_EPS = 1e-12
+
+
+@dataclasses.dataclass
+class CollectorCtx:
+    """Everything a collector may read about one decentralized step.
+
+    Leaves follow the backend's node layout; the ``node_*`` hooks are the
+    ONLY sanctioned way to reduce over the node axis (see module docstring).
+    ``static`` carries host-side constants resolved once at build time
+    (spectral gap, wire bytes, mix-site count) — collectors that need a
+    missing static key must return ``{}`` rather than guess.
+    """
+
+    grads: PyTree                  # per-node effective gradients
+    params_old: PyTree             # params entering the step
+    params_new: PyTree             # params leaving the step (post-mix)
+    opt_state_old: dict
+    opt_state_new: dict
+    comm_state_old: Any
+    comm_state_new: Any
+    lr: Any
+    t: Any                         # step counter (traced)
+    n_nodes: int                   # GLOBAL node count (not the local shard)
+    axis_name: Optional[str]       # mesh node axis inside a sharded step
+    node_mean: Callable            # per-node scalar array -> global mean ()
+    node_sum: Callable             # local accumulation -> global sum ()
+    node_max: Callable             # per-node scalar array -> global max ()
+    static: dict                   # build-time constants (may be empty)
+
+    # -- shared per-node helpers ---------------------------------------------
+    def per_node_sq_norm(self, tree: PyTree) -> jax.Array:
+        """Per-node squared L2 norm over a whole pytree: ``[n_local]`` array
+        (``n_local`` = n stacked, or 1 inside a sharded step)."""
+        leaves = jax.tree.leaves(tree)
+        n_local = leaves[0].shape[0]
+        return sum(
+            jnp.sum(l.reshape(n_local, -1).astype(jnp.float32) ** 2, axis=-1)
+            for l in leaves)
+
+    def per_node_dot(self, a: PyTree, b: PyTree) -> jax.Array:
+        """Per-node inner product ``<a_i, b_i>`` (``b`` may be a broadcast
+        ``[1, ...]`` node-mean tree): ``[n_local]`` array."""
+        leaves_a = jax.tree.leaves(a)
+        leaves_b = jax.tree.leaves(b)
+        n_local = leaves_a[0].shape[0]
+        return sum(
+            jnp.sum((la.astype(jnp.float32)
+                     * lb.astype(jnp.float32)).reshape(n_local, -1), axis=-1)
+            for la, lb in zip(leaves_a, leaves_b))
+
+    def node_std(self, x: jax.Array) -> jax.Array:
+        """Std over nodes of a per-node scalar array, via the node hooks so
+        the reduction structure is identical across backends."""
+        m = self.node_mean(x)
+        m2 = self.node_mean(x.astype(jnp.float32) ** 2)
+        return jnp.sqrt(jnp.maximum(m2 - m**2, 0.0))
+
+
+# ---------------------------------------------------------------------------
+# collectors
+# ---------------------------------------------------------------------------
+
+def _consensus(ctx: CollectorCtx) -> dict:
+    """Consensus distance before and after the step (Fig. 3's quantity) —
+    the paper's primary heterogeneity-failure diagnostic."""
+    return {
+        "consensus_pre": gossip.consensus_distance(
+            ctx.params_old, axis_name=ctx.axis_name),
+        "consensus_post": gossip.consensus_distance(
+            ctx.params_new, axis_name=ctx.axis_name),
+    }
+
+
+def _grad_norms(ctx: CollectorCtx) -> dict:
+    """Per-node gradient-norm spread — large std/max vs mean is the
+    heterogeneity signature (each node's Dirichlet shard pulls elsewhere)."""
+    norms = jnp.sqrt(ctx.per_node_sq_norm(ctx.grads))
+    return {
+        "grad_norm_mean": ctx.node_mean(norms),
+        "grad_norm_std": ctx.node_std(norms),
+        "grad_norm_max": ctx.node_max(norms),
+    }
+
+
+def _alignment(ctx: CollectorCtx) -> dict:
+    """Cosine alignment of every momentum-family buffer against the
+    node-mean gradient — the paper's core diagnostic: local momentum
+    decorrelates from the global descent direction under heterogeneity,
+    the quasi-global buffer is built to stay aligned.
+
+    Emits one ``align_<stage>`` key per stage state carrying an ``m`` /
+    ``m_hat`` / ``y`` buffer (heavyball, qhm, adam, qg/dmsgd buffers,
+    trackers) — node-mean of cos(buffer_i, mean_j grad_j).
+    """
+    g_bar = gossip.node_mean(ctx.grads, axis_name=ctx.axis_name)
+    g_bar_sq = ctx.per_node_sq_norm(g_bar)[0]  # identical for every node
+    out = {}
+    for stage, st in sorted(ctx.opt_state_new.items()):
+        if not isinstance(st, dict):
+            continue
+        buf = next((st[k] for k in ("m", "m_hat", "y") if k in st), None)
+        if buf is None:
+            continue
+        dot = ctx.per_node_dot(buf, g_bar)
+        denom = jnp.sqrt(ctx.per_node_sq_norm(buf) * g_bar_sq) + _EPS
+        out[f"align_{stage}"] = ctx.node_mean(dot / denom)
+    return out
+
+
+def _comm_buffers(ctx: CollectorCtx) -> dict:
+    """Compressed-comm site diagnostics: EF14 residual norms (unsent mass
+    awaiting its telescoped delivery) and CHOCO replica-anchor norms, one
+    key per mix site, node-averaged."""
+    sites = ctx.comm_state_new
+    if not sites:
+        return {}
+    out = {}
+    for i, site in enumerate(sites):
+        if "residual" in site:
+            norms = jnp.sqrt(ctx.per_node_sq_norm(site["residual"]))
+            out[f"ef_residual_norm_{i}"] = ctx.node_mean(norms)
+        elif "x_hat" in site:
+            norms = jnp.sqrt(ctx.per_node_sq_norm(site["x_hat"]))
+            out[f"choco_replica_norm_{i}"] = ctx.node_mean(norms)
+    return out
+
+
+def _wire(ctx: CollectorCtx) -> dict:
+    """Per-round bytes-on-the-wire, resolved once at build time from the
+    compiled gossip schedule + compressor (see ``api.build.wire_stats``) and
+    replayed into every row so a metrics stream is self-describing."""
+    s = ctx.static
+    if "wire_bits_per_node_per_step" not in s:
+        return {}
+    out = {"wire_bits_per_node": jnp.asarray(
+        s["wire_bits_per_node_per_step"], jnp.float32)}
+    if "wire_messages_per_step" in s:
+        out["wire_messages_per_step"] = jnp.asarray(
+            s["wire_messages_per_step"], jnp.float32)
+    return out
+
+
+def _mixing(ctx: CollectorCtx) -> dict:
+    """Spectral-gap-normalized mixing progress.
+
+    One step multiplies the consensus error by at most
+    ``rho = sqrt(1 - spectral_gap)`` (gossip-averaging worst case) *before*
+    the local gradient drift re-injects disagreement.  ``mix_contraction``
+    is the realized per-step ratio ``consensus_post / consensus_pre``;
+    ``mix_progress`` divides it by ``rho`` — values <= 1 mean the gossip
+    schedule is realizing at least its spectral-bound share of mixing, a
+    sustained value >> 1 means heterogeneity-driven drift is outrunning the
+    topology (the regime where plain DSGDm diverges and QG-DSGDm holds).
+    """
+    s = ctx.static
+    if "rho" not in s:
+        return {}
+    pre = gossip.consensus_distance(ctx.params_old, axis_name=ctx.axis_name)
+    post = gossip.consensus_distance(ctx.params_new, axis_name=ctx.axis_name)
+    # pre == 0 (identical nodes, e.g. step 0 from a common x^0): nothing to
+    # contract — report 1.0 instead of a division blow-up
+    contraction = jnp.where(pre > 0, post / jnp.maximum(pre, _EPS), 1.0)
+    rho = max(float(s["rho"]), _EPS)
+    return {
+        "mix_contraction": contraction,
+        "mix_progress": contraction / rho,
+        "spectral_gap": jnp.asarray(s.get("spectral_gap", 0.0), jnp.float32),
+    }
+
+
+METRICS: dict[str, Callable[[CollectorCtx], dict]] = {
+    "consensus": _consensus,
+    "grad_norms": _grad_norms,
+    "alignment": _alignment,
+    "comm_buffers": _comm_buffers,
+    "wire": _wire,
+    "mixing": _mixing,
+}
+
+DEFAULT_METRICS = tuple(sorted(METRICS))
+
+
+# ---------------------------------------------------------------------------
+# resolved configuration (what the trainer threads into its runtime)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class MetricsSpec:
+    """Which collectors run, at what step cadence.  The serializable
+    ``api.TelemetrySpec`` resolves to this; direct trainer users can build
+    one by hand."""
+
+    names: tuple = DEFAULT_METRICS
+    every: int = 1
+
+    def validate(self) -> "MetricsSpec":
+        unknown = [n for n in self.names if n not in METRICS]
+        if unknown:
+            raise ValueError(f"unknown telemetry metrics {unknown}; have "
+                             f"{sorted(METRICS)}")
+        if self.every < 1:
+            raise ValueError(f"telemetry cadence 'every' must be >= 1, got "
+                             f"{self.every}")
+        return self
+
+
+@dataclasses.dataclass
+class TelemetryConfig:
+    """The in-graph side of the subsystem: resolved collectors + cadence +
+    build-time statics.  ``static`` is filled by ``api.build`` after the
+    trainer exists (it needs the resolved gossip schedule and comm
+    constants); collectors tolerate missing keys, so a hand-built config
+    with ``static={}`` still collects every dynamic metric."""
+
+    metrics: MetricsSpec = dataclasses.field(default_factory=MetricsSpec)
+    static: dict = dataclasses.field(default_factory=dict)
+
+    def __post_init__(self):
+        self.metrics.validate()
+
+    @property
+    def every(self) -> int:
+        return self.metrics.every
+
+    def collect(self, ctx: CollectorCtx) -> dict:
+        """Run every selected collector; enforce the scalar-f32 contract."""
+        out = {}
+        for name in self.metrics.names:
+            for k, v in METRICS[name](ctx).items():
+                v = jnp.asarray(v, jnp.float32)
+                if v.ndim != 0:
+                    raise ValueError(
+                        f"telemetry collector {name!r} produced non-scalar "
+                        f"{k!r} with shape {v.shape}; collectors must fully "
+                        "node-reduce (see CollectorCtx node hooks)")
+                out[k] = v
+        return out
+
+
+def resolve_config(names=(), every: int = 1) -> TelemetryConfig:
+    """``TelemetrySpec`` fields -> validated :class:`TelemetryConfig`
+    (empty ``names`` selects :data:`DEFAULT_METRICS`)."""
+    return TelemetryConfig(metrics=MetricsSpec(
+        names=tuple(names) or DEFAULT_METRICS, every=every))

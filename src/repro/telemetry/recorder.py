@@ -1,0 +1,134 @@
+"""Host-side telemetry recorder: the bridge between the jitted step's
+``tm.``-prefixed metric outputs and a :class:`~repro.telemetry.sinks.
+TelemetrySink` (DESIGN.md §10).
+
+The training loops stay telemetry-agnostic: they accept an OPTIONAL
+duck-typed recorder (``telemetry=None``) and, when given one, pass every
+step's raw metrics dict through :meth:`TelemetryRecorder.consume` /
+:meth:`consume_chunk` before recording history.  The recorder
+
+  * splits off every ``tm.``-prefixed key (so ``history`` keeps exactly the
+    pre-telemetry key set — the bit-for-bit pin in tests/test_api.py also
+    holds with telemetry ON for the non-tm keys);
+  * answers the loops' cadence questions (:meth:`wants` /
+    :meth:`wants_chunk`) — ON-CADENCE steps (``step % every == 0``) run the
+    telemetry-collecting step trace, everything else runs the exact
+    telemetry-free graph — and emits one sink row per on-cadence step (a
+    collecting CHUNK collects on all its steps; the off-cadence rows are
+    dropped here, not recorded);
+  * drives a :class:`~repro.telemetry.trace.StepTimer` so wall-clock
+    percentiles ride along in :meth:`summary` without a separate loop hook.
+
+Consumed values are BUFFERED as device arrays and only moved to host in
+:meth:`flush` (called by :meth:`summary`/:meth:`close`): a per-chunk
+``np.asarray`` would force a device sync every chunk and stall the async
+dispatch pipeline — measured at ~30% steps/s on the ring-8 loop bench,
+i.e. more than the collectors themselves.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import numpy as np
+
+from repro.telemetry.metrics import TM_PREFIX, TelemetryConfig
+from repro.telemetry.sinks import TelemetrySink
+from repro.telemetry.trace import StepTimer
+
+__all__ = ["TelemetryRecorder"]
+
+
+class TelemetryRecorder:
+    """Consumes step metrics, streams telemetry rows, times steps."""
+
+    def __init__(self, config: TelemetryConfig, sink: TelemetrySink,
+                 timer: Optional[StepTimer] = None):
+        self.config = config
+        self.sink = sink
+        self.timer = timer or StepTimer()
+        self.rows_emitted = 0
+        # buffered (step, chunk_size, tm-values) still on device; see flush()
+        self._pending: list[tuple[int, int, dict]] = []
+
+    # -- loop interface ------------------------------------------------------
+    def wants(self, step: int) -> bool:
+        """Should the loop run the telemetry-collecting trace at ``step``?"""
+        return step % self.config.every == 0
+
+    def wants_chunk(self, start_step: int, k: int) -> bool:
+        """Does the chunk ``[start_step, start_step + k)`` contain an
+        on-cadence step?  (The whole chunk then runs the collecting trace.)"""
+        every = self.config.every
+        return (start_step % every == 0) or (start_step % every) + k > every
+
+    def consume(self, step: int, metrics: dict) -> dict:
+        """Split one step's metrics: buffer the ``tm.`` keys (on cadence),
+        return the user-facing remainder untouched."""
+        self.timer.lap()
+        rest, tm = self._split(metrics)
+        if tm and step % self.config.every == 0:
+            self._pending.append((step, 0, tm))
+        return rest
+
+    def consume_chunk(self, start_step: int, metrics: dict) -> dict:
+        """Chunked variant: metric values are stacked ``[k]``; one row per
+        on-cadence step inside the chunk."""
+        rest, tm = self._split(metrics)
+        k = (int(next(iter(metrics.values())).shape[0]) if metrics
+             else 0)
+        self.timer.lap(steps=k)
+        if tm and k:
+            self._pending.append((start_step, k, tm))
+        return rest
+
+    def flush(self) -> None:
+        """Move buffered values to host and emit the sink rows.  This is the
+        ONLY device->host transfer point — calling it mid-run syncs the
+        dispatch pipeline, so the loops never do; close()/summary() do."""
+        for start, k, tm in self._pending:
+            if k == 0:                       # single step, already on cadence
+                self._emit(start, {mk: float(mv) for mk, mv in tm.items()})
+                continue
+            host = {mk: np.asarray(mv) for mk, mv in tm.items()}
+            for j in range(k):
+                step = start + j
+                if step % self.config.every == 0:
+                    self._emit(step, {mk: float(mv[j])
+                                      for mk, mv in host.items()})
+        self._pending.clear()
+
+    # -- internals -----------------------------------------------------------
+    def _split(self, metrics: dict) -> tuple[dict, dict]:
+        rest, tm = {}, {}
+        for key, v in metrics.items():
+            if key.startswith(TM_PREFIX):
+                tm[key[len(TM_PREFIX):]] = v
+            else:
+                rest[key] = v
+        return rest, tm
+
+    def _emit(self, step: int, values: dict) -> None:
+        self.sink.emit({"step": step, **values})
+        self.rows_emitted += 1
+
+    # -- lifecycle -----------------------------------------------------------
+    def summary(self) -> dict:
+        """JSON-ready digest for ``Result.telemetry``: sink location, row
+        count, cadence, selected collectors, build-time statics, and the
+        host step-time percentiles.  Flushes buffered rows first."""
+        self.flush()
+        return {
+            "rows_emitted": self.rows_emitted,
+            "path": self.sink.path,
+            "every": self.config.every,
+            "metrics": list(self.config.metrics.names),
+            "static": {k: (float(v) if isinstance(v, (int, float)) else v)
+                       for k, v in self.config.static.items()},
+            "step_time": self.timer.summary(),
+        }
+
+    def close(self) -> dict:
+        """Flush/close the sink; returns :meth:`summary`."""
+        out = self.summary()
+        self.sink.close()
+        return out

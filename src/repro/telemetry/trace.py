@@ -1,0 +1,107 @@
+"""Trace spans + host-side step timing (DESIGN.md §10).
+
+Two span mechanisms, deliberately layered:
+
+  * :func:`span` / :func:`graph_span` — region labels.  Inside a traced
+    function only ``jax.named_scope`` is meaningful (it tags the emitted
+    HLO, zero runtime cost, shows up in compiled-module dumps and
+    device profiles); at trace/dispatch time ``jax.profiler.TraceAnnotation``
+    additionally marks the host timeline for ``jax.profiler.trace`` captures.
+    :func:`span` composes both so one context manager works either place —
+    this is what gossip/choco/transforms wrap their phases in
+    (``tm/grad``, ``tm/stage/<name>``, ``tm/comm/compress``,
+    ``tm/gossip/ppermute``, ``tm/comm/decompress``).  Spans are ALWAYS on:
+    the in-graph half is metadata-only, so the telemetry-off path stays
+    bit-identical (pinned by tests/test_api.py).
+
+  * :class:`StepTimer` — host wall-clock per dispatched step, kept in a
+    fixed-size ring buffer with percentile summaries (p50/p90/p99).  The
+    recorder drives it; its summary lands in ``Result.telemetry``.
+"""
+from __future__ import annotations
+
+import contextlib
+import time
+
+import jax
+
+__all__ = ["span", "graph_span", "StepTimer"]
+
+
+@contextlib.contextmanager
+def span(name: str):
+    """Label a region for BOTH the HLO (named_scope) and the host profiler
+    timeline (TraceAnnotation).  Safe inside jit-traced code: the annotation
+    then wraps tracing (a host-side event), while the named_scope metadata
+    travels into the compiled graph."""
+    with jax.named_scope(name), jax.profiler.TraceAnnotation(name):
+        yield
+
+
+def graph_span(name: str):
+    """HLO-metadata-only span (no host annotation) for the hottest traced
+    paths; zero runtime cost."""
+    return jax.named_scope(name)
+
+
+class StepTimer:
+    """Ring buffer of host-side per-step wall times with percentile
+    summaries.
+
+    Usage: ``timer.lap()`` after every dispatched step (or
+    ``timer.lap(steps=k)`` after a k-step fused chunk — the chunk time is
+    attributed evenly).  The first lap after construction/reset only arms
+    the clock; compile time is excluded by calling :meth:`arm` after
+    warm-up (the recorder does this on its first consumed step).
+    """
+
+    def __init__(self, capacity: int = 512):
+        if capacity < 1:
+            raise ValueError("StepTimer capacity must be >= 1")
+        self.capacity = capacity
+        self._buf: list[float] = []
+        self._next = 0          # ring write cursor
+        self._t0: float | None = None
+        self.total_laps = 0
+
+    def arm(self) -> None:
+        """Start (or restart) the clock; the next lap measures from here."""
+        self._t0 = time.perf_counter()
+
+    def lap(self, steps: int = 1) -> None:
+        """Record the time since the last lap/arm, split over ``steps``."""
+        now = time.perf_counter()
+        if self._t0 is None:
+            self._t0 = now
+            return
+        per_step = (now - self._t0) / max(steps, 1)
+        self._t0 = now
+        for _ in range(steps):
+            if len(self._buf) < self.capacity:
+                self._buf.append(per_step)
+            else:
+                self._buf[self._next] = per_step
+                self._next = (self._next + 1) % self.capacity
+            self.total_laps += 1
+
+    def summary(self) -> dict:
+        """{count, mean_s, p50_s, p90_s, p99_s, steps_per_s} over the
+        retained window (empty dict before the first measured lap)."""
+        if not self._buf:
+            return {}
+        xs = sorted(self._buf)
+
+        def pct(q: float) -> float:
+            # nearest-rank on the retained window
+            idx = min(int(q * len(xs)), len(xs) - 1)
+            return xs[idx]
+
+        mean = sum(xs) / len(xs)
+        return {
+            "count": self.total_laps,
+            "mean_s": mean,
+            "p50_s": pct(0.50),
+            "p90_s": pct(0.90),
+            "p99_s": pct(0.99),
+            "steps_per_s": (1.0 / mean) if mean > 0 else float("inf"),
+        }

@@ -105,6 +105,10 @@ class DecentralizedTrainer:
     node_axis: str = "data"       # mesh axis carrying the node index
     gossip_schedule: str = "auto"  # gossip.GOSSIP_SCHEDULES
     runtime: str = "auto"          # repro.runtime.RUNTIMES (DESIGN.md §9)
+    telemetry: Any = None          # resolved telemetry.TelemetryConfig; when
+                                   # set, the jitted step emits 'tm.'-prefixed
+                                   # collector scalars (DESIGN.md §10).  None
+                                   # (default) leaves the graph untouched.
 
     def __post_init__(self):
         if self.lr_fn is None:
@@ -155,15 +159,20 @@ class DecentralizedTrainer:
         return self._runtime.finalize_state(state)
 
     # -- one jitted decentralized step ---------------------------------------
-    def step(self, state: TrainState, batch: PyTree, rng):
+    def step(self, state: TrainState, batch: PyTree, rng,
+             collect: bool = False):
         """One decentralized step on the selected execution backend.
         DONATES ``state``: the input buffers back the output state (copy
-        first to keep a state across repeated runs)."""
+        first to keep a state across repeated runs).  ``collect=True``
+        selects the telemetry-collecting trace (DESIGN.md §10) — a
+        separately compiled variant of the same step, so ``False`` (the
+        default) stays the exact pre-telemetry graph."""
         self._comm_setup(state.params)
-        return self._runtime.step(state, batch, rng)
+        return self._runtime.step(state, batch, rng, collect=collect)
 
     # -- k fused steps under one dispatch (lax.scan over the chunk) -----------
-    def step_chunk(self, state: TrainState, batches: PyTree, rng):
+    def step_chunk(self, state: TrainState, batches: PyTree, rng,
+                   collect: bool = False):
         """Run ``k`` decentralized steps in ONE jitted dispatch (donating
         ``state`` like :meth:`step`).
 
@@ -171,9 +180,11 @@ class DecentralizedTrainer:
         stream is split inside the scan exactly as ``run_training`` splits it
         outside, so the trajectory is step-identical to k calls of ``step``.
         Returns the final state, the advanced rng, and metrics stacked [k].
+        ``collect=True`` selects the telemetry-collecting chunk trace (every
+        step of the chunk collects; the recorder keeps on-cadence rows).
         """
         self._comm_setup(state.params)
-        return self._runtime.step_chunk(state, batches, rng)
+        return self._runtime.step_chunk(state, batches, rng, collect=collect)
 
     # -- evaluation -----------------------------------------------------------
     def evaluate(self, state: TrainState, eval_fn, batches) -> dict:
@@ -202,22 +213,35 @@ def _record_step(history, i, steps, log_every, log_fn, get_metrics):
 def run_training(trainer: DecentralizedTrainer, state: TrainState,
                  batch_iter, steps: int, *, rng=None, log_every: int = 0,
                  log_fn=print, checkpoint_every: int = 0,
-                 checkpoint_fn=None,
-                 step_offset: int = 0) -> tuple[TrainState, list[dict]]:
+                 checkpoint_fn=None, step_offset: int = 0,
+                 telemetry=None) -> tuple[TrainState, list[dict]]:
     """Per-step python loop.  ``checkpoint_fn(done, state, rng)`` is called
     whenever ``done`` (ABSOLUTE completed steps, offset included) hits a
     ``checkpoint_every`` multiple; the passed ``rng`` is the loop carry
     AFTER the step's split, so a run restarted from ``(state, rng)``
     continues the exact same stream (the save->resume parity pinned in
     tests/test_runtime.py).  ``step_offset`` makes a resumed run log/record
-    absolute step indices with the uninterrupted run's cadence."""
+    absolute step indices with the uninterrupted run's cadence.
+
+    ``telemetry`` is an optional duck-typed recorder (see
+    ``repro.telemetry.TelemetryRecorder``): on-cadence steps
+    (``telemetry.wants(i)``) run the telemetry-collecting step trace, and
+    each step's metrics pass through ``telemetry.consume(step, metrics)``,
+    which strips the ``tm.``-prefixed collector outputs into the recorder's
+    sink and returns the user-facing remainder — ``history`` keys are
+    identical with or without it, and off-cadence steps run the exact
+    telemetry-free graph."""
     rng = jax.random.PRNGKey(0) if rng is None else rng
     history = []
     total = step_offset + steps
     for i, batch in zip(range(step_offset, total), batch_iter):
         rng, sub = jax.random.split(rng)
         batch = jax.tree.map(jnp.asarray, batch)
-        state, metrics = trainer.step(state, batch, sub)
+        state, metrics = trainer.step(
+            state, batch, sub,
+            collect=telemetry is not None and telemetry.wants(i))
+        if telemetry is not None:
+            metrics = telemetry.consume(i, metrics)
         _record_step(history, i, total, log_every, log_fn,
                      lambda: {k: float(v) for k, v in metrics.items()})
         if checkpoint_fn and checkpoint_every \
@@ -230,7 +254,8 @@ def run_training_scanned(trainer: DecentralizedTrainer, state: TrainState,
                          batch_iter, steps: int, *, chunk: int = 16,
                          rng=None, log_every: int = 0, log_fn=print,
                          checkpoint_every: int = 0, checkpoint_fn=None,
-                         step_offset: int = 0) -> tuple[TrainState, list[dict]]:
+                         step_offset: int = 0,
+                         telemetry=None) -> tuple[TrainState, list[dict]]:
     """``run_training`` with ``chunk`` steps fused under one ``lax.scan``
     dispatch — same rng stream, same math, step-identical metrics, but the
     per-step Python/jit dispatch overhead is paid once per chunk (the `loop`
@@ -249,6 +274,15 @@ def run_training_scanned(trainer: DecentralizedTrainer, state: TrainState,
     any such save replays the identical stream, whatever the chunking.
     ``step_offset`` shifts logging/recording to absolute indices like
     ``run_training``.
+
+    ``telemetry`` (optional duck-typed recorder): a chunk containing an
+    on-cadence step (``telemetry.wants_chunk``) runs the telemetry-collecting
+    chunk trace — every step of THAT chunk collects, and
+    ``telemetry.consume_chunk(start_step, metrics)`` keeps the on-cadence
+    rows, strips the ``tm.``-prefixed outputs, and returns the user-facing
+    remainder (same history contract as ``run_training``).  Chunks with no
+    on-cadence step run the exact telemetry-free graph, so a cadence that is
+    a multiple of ``chunk`` amortizes best (see DESIGN.md §10).
     """
     rng = jax.random.PRNGKey(0) if rng is None else rng
     it = iter(batch_iter)
@@ -275,7 +309,12 @@ def run_training_scanned(trainer: DecentralizedTrainer, state: TrainState,
         # device commit per step per leaf
         stacked = jax.tree.map(
             lambda *xs: jnp.asarray(np.stack(xs)), *batches)
-        state, rng, metrics = trainer.step_chunk(state, stacked, rng)
+        state, rng, metrics = trainer.step_chunk(
+            state, stacked, rng,
+            collect=telemetry is not None
+            and telemetry.wants_chunk(step_offset + done, k))
+        if telemetry is not None:
+            metrics = telemetry.consume_chunk(step_offset + done, metrics)
 
         host: dict = {}  # chunk metrics, transferred once and only if needed
 

@@ -92,13 +92,13 @@ def test_lazy_compilation_no_jit_in_post_init():
     init_fn, loss_fn, batches = _tiny_task()
     tr = DecentralizedTrainer(loss_fn, optim.make_optimizer("dsgd", lr=0.1),
                               topology.ring(4))
-    assert tr._runtime._step_fn is None
-    assert tr._runtime._chunk_fn is None
+    assert tr._runtime._step_fns == {}
+    assert tr._runtime._chunk_fns == {}
     st = tr.init(jax.random.PRNGKey(0), init_fn)
-    assert tr._runtime._step_fn is None          # init still doesn't compile
+    assert tr._runtime._step_fns == {}           # init still doesn't compile
     b = jax.tree.map(jnp.asarray, next(batches(1)))
     tr.step(st, b, jax.random.PRNGKey(1))
-    assert tr._runtime._step_fn is not None
+    assert set(tr._runtime._step_fns) == {False}  # only the no-collect trace
 
 
 # ---------------------------------------------------------------------------
