@@ -22,6 +22,10 @@ runs; ``--only <name>`` selects a single table.
             sharded (whole step in one shard_map) at ring n in {8,16,32}:
             steps/s + peak per-device TrainState bytes (subprocess w/
             forced host devices; sharded bytes must be constant in n)
+  scenario  thousand-node engine (DESIGN.md §11): hybrid (node-batched
+            blocks) vs vmap steps/s at ring n in {256,1024}, QG vs DSGDm
+            eval loss at n=1024 / Dirichlet(0.1), churn-run determinism
+            (subprocess w/ 8 forced host devices)
   serving   batched prefill+decode throughput (reduced archs)
   kernels   Pallas kernel microbench vs jnp reference
   roofline  aggregate the dry-run artifacts into the §Roofline table
@@ -242,6 +246,44 @@ def runtime(quick=False):
                 f"loss={r['loss']:.4f}")
 
 
+def scenario(quick=False):
+    """Thousand-node scenario table (DESIGN.md §11): the node-batched hybrid
+    runtime vs vmap at ring n in {256, 1024} on 8 forced host devices
+    (steps/s + peak per-device TrainState bytes), QG-DSGDm-N vs DSGDm-N
+    held-out eval loss at n=1024 under Dirichlet(0.1), and the n1024_churn
+    preset (sampling + churn + stragglers) run twice — bit-identical params
+    under the same scenario seed.  CI gates (BENCH_scenario.json): hybrid
+    steps/s >= vmap at n=256 and >= 1.8x vmap at n=1024 (the sparse-vs-dense
+    gossip win; with physical cores behind the 8 devices the n=256 ratio
+    rises toward the device count), eval_loss(QG) < eval_loss(DSGDm), and
+    max_abs_param_diff == 0."""
+    import subprocess
+    import sys
+
+    spec = {"devices": 8, "perf_ns": [256, 1024],
+            "perf_steps": 16 if quick else 32, "perf_chunk": 8,
+            "big_steps": 25 if quick else 50, "big_chunk": 5,
+            "det_steps": 6 if quick else 12, "timed_reps": 2}
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src" + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    res = subprocess.run(
+        [sys.executable, "-m", "benchmarks.scenario_worker",
+         json.dumps(spec)],
+        capture_output=True, text=True, timeout=3600, env=env,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+    lines = [ln for ln in res.stdout.splitlines()
+             if ln.startswith("SCENARIO_ROWS ")]
+    if not lines:
+        raise RuntimeError(f"scenario_worker failed: {res.stderr[-2000:]}")
+    for r in json.loads(lines[0][len("SCENARIO_ROWS "):]):
+        derived = ",".join(f"{k}={v:.6g}" if isinstance(v, float)
+                           else f"{k}={v}"
+                           for k, v in r.items()
+                           if k not in ("tag", "us_per_step"))
+        csv_row(f"scenario/{r['tag']}", r["us_per_step"], derived)
+
+
 def loop(quick=False):
     """Training-loop dispatch: python per-step loop vs ``lax.scan``-fused
     chunks (run_training_scanned).  Same math, same rng stream — the delta
@@ -393,7 +435,7 @@ TABLES = {
     "table1": table1, "table2": table2, "table4": table4, "table5": table5,
     "table6": table6, "fig3": fig3, "fig6": fig6, "comm": comm,
     "topology": topology, "loop": loop, "telemetry": telemetry,
-    "runtime": runtime, "serving": serving,
+    "runtime": runtime, "scenario": scenario, "serving": serving,
     "kernels": kernels, "roofline": roofline,
 }
 

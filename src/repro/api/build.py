@@ -58,6 +58,9 @@ class Result:
     telemetry: Optional[dict] = None   # recorder summary (sink path, row
                                        # count, step-time percentiles) when
                                        # spec.telemetry.enabled
+    heterogeneity: Optional[dict] = None  # partition stats from the task
+                                       # (mean pairwise TV distance +
+                                       # client-size extremes)
 
     def to_dict(self) -> dict:
         return dataclasses.asdict(self)
@@ -99,6 +102,15 @@ def build(spec: ExperimentSpec, *, mesh: Any = None) -> Experiment:
         telemetry_cfg = resolve_config(spec.telemetry.metrics,
                                        spec.telemetry.every)
 
+    scenario = None
+    sc = spec.scenario
+    if sc.enabled:
+        from repro.scenario import ScenarioContext
+        scenario = ScenarioContext(
+            n=topo.n, seed=sc.seed, participation=sc.participation,
+            dropout=sc.dropout, churn_window=sc.churn_window,
+            straggler=sc.straggler)
+
     trainer = DecentralizedTrainer(
         bundle.loss_fn, _make_opt(spec), topo, lr_fn=lr_fn,
         comm=make_comm(spec.comm.compressor, gamma=spec.comm.gamma,
@@ -106,7 +118,7 @@ def build(spec: ExperimentSpec, *, mesh: Any = None) -> Experiment:
                        backend=spec.comm.backend),
         mesh=mesh, node_axis=spec.gossip.node_axis,
         gossip_schedule=spec.gossip.schedule, runtime=spec.runtime,
-        telemetry=telemetry_cfg)
+        scenario=scenario, telemetry=telemetry_cfg)
     state = trainer.init(jax.random.PRNGKey(spec.seed), bundle.init_fn)
     if telemetry_cfg is not None:
         # build-time constants for the 'wire'/'mixing' collectors — resolved
@@ -120,6 +132,9 @@ def build(spec: ExperimentSpec, *, mesh: Any = None) -> Experiment:
             "rho": float(np.sqrt(max(1.0 - gap, 0.0))),
             "wire_bits_per_node_per_step": ws["bits_per_node_per_step"],
         })
+        het = task.meta.get("heterogeneity")
+        if het:
+            telemetry_cfg.static["data_mean_tv"] = float(het["mean_tv"])
         if "messages_per_step" in ws:
             telemetry_cfg.static["wire_messages_per_step"] = (
                 ws["messages_per_step"])
@@ -316,7 +331,8 @@ def run(spec: ExperimentSpec, *, mesh: Any = None, log_fn=print,
     telemetry_summary = recorder.close() if recorder is not None else None
     result = Result(spec=spec.to_dict(), history=history, final=final,
                     steps_run=steps_run, wall_time_s=wall, wire=wire,
-                    telemetry=telemetry_summary)
+                    telemetry=telemetry_summary,
+                    heterogeneity=ex.task.meta.get("heterogeneity"))
     if with_state:
         return result, state
     return result

@@ -12,7 +12,8 @@ from typing import Callable, Optional
 
 import numpy as np
 
-from repro.data import ClientDataset, dirichlet_partition, make_classification
+from repro.data import (ClientDataset, dirichlet_partition,
+                        heterogeneity_stats, make_classification)
 from repro.data.synthetic import make_lm_domains
 
 __all__ = ["Task", "build_task"]
@@ -53,7 +54,9 @@ def build_task(spec, n_nodes: int) -> Task:
         x_tr, y_tr = x[:n_train], y[:n_train]
         x_te, y_te = x[n_train:], y[n_train:]
         parts = dirichlet_partition(y_tr, n_nodes, d.alpha, seed=seed,
-                                    min_per_client=d.min_per_client)
+                                    min_per_client=d.min_per_client,
+                                    ensure_min=d.ensure_min)
+        het = heterogeneity_stats(y_tr, parts)
 
         def make_iter():
             ds = ClientDataset((x_tr, y_tr), parts, batch=d.batch, seed=seed)
@@ -62,7 +65,11 @@ def build_task(spec, n_nodes: int) -> Task:
         return Task(n_nodes=n_nodes, seed=seed, make_iter=make_iter,
                     eval_batches=_eval_split((x_te, y_te), spec.eval.batch),
                     d_in=int(np.prod(x.shape[1:])), n_classes=d.n_classes,
-                    meta={"n_train": n_train, "n_eval": len(y_te)})
+                    meta={"n_train": n_train, "n_eval": len(y_te),
+                          "heterogeneity": {
+                              "mean_tv": float(het["mean_tv"]),
+                              "min_client_size": int(min(het["sizes"])),
+                              "max_client_size": int(max(het["sizes"]))}})
 
     if d.dataset == "lm_domains":
         vocab = d.vocab
@@ -75,7 +82,9 @@ def build_task(spec, n_nodes: int) -> Task:
             n_domains=n_domains, vocab=vocab, seq_len=d.seq_len,
             n_seq_per_domain=n_seq, seed=seed)
         parts = dirichlet_partition(domain, n_nodes, d.alpha, seed=seed,
-                                    min_per_client=d.min_per_client)
+                                    min_per_client=d.min_per_client,
+                                    ensure_min=d.ensure_min)
+        het = heterogeneity_stats(domain, parts)
 
         def make_iter():
             ds = ClientDataset((tokens,), parts, batch=d.batch, seed=seed)
@@ -83,6 +92,10 @@ def build_task(spec, n_nodes: int) -> Task:
 
         return Task(n_nodes=n_nodes, seed=seed, make_iter=make_iter,
                     meta={"vocab": vocab, "n_domains": n_domains,
-                          "n_seq_per_domain": n_seq})
+                          "n_seq_per_domain": n_seq,
+                          "heterogeneity": {
+                              "mean_tv": float(het["mean_tv"]),
+                              "min_client_size": int(min(het["sizes"])),
+                              "max_client_size": int(max(het["sizes"]))}})
 
     raise ValueError(f"unknown dataset {d.dataset!r}")

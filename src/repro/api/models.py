@@ -108,8 +108,12 @@ def _mlp(spec, task) -> ModelBundle:
 
     def eval_fn(p, _ms, batch):
         xb, yb = batch
-        pred = jnp.argmax(apply(p, xb), -1)
-        return {"acc": jnp.sum(pred == yb.astype(jnp.int32)),
+        logits = apply(p, xb)
+        yi = yb.astype(jnp.int32)
+        logp = jax.nn.log_softmax(logits)
+        nll = -jnp.take_along_axis(logp, yi[:, None], axis=1)[:, 0]
+        return {"acc": jnp.sum(jnp.argmax(logits, -1) == yi),
+                "eval_loss": jnp.sum(nll),
                 "count": jnp.asarray(len(yb), jnp.float32)}
 
     return ModelBundle(init_fn, loss_fn, eval_fn)

@@ -15,13 +15,16 @@ and the CI ``specs`` job.
 | choco_topk0.01_ring16_qg          | CHOCO compressed gossip @1% (§4)      |
 | ef_signnorm_ring16_qg             | EF14 sign+norm value exchange (§4)    |
 | lm100m_ring8_alpha0.1_qg          | ~100M-param LM, 8 nodes (train_100m)  |
+| n1024_ring                        | 1024-node ring, hybrid-ready (§11)    |
+| n1024_powerlaw                    | 1024-node power-law social graph      |
+| n1024_churn                       | 1024 nodes + sampling/churn scenario  |
 """
 from __future__ import annotations
 
 from typing import Callable
 
 from .spec import (CommSpec, DataSpec, EvalSpec, ExperimentSpec, LoopSpec,
-                   ModelSpec, OptimSpec, TopologySpec)
+                   ModelSpec, OptimSpec, ScenarioSpec, TopologySpec)
 
 __all__ = ["PRESETS", "register_preset", "get", "names"]
 
@@ -135,6 +138,47 @@ def _ef():
         "qg_dsgdm_n", "ef_signnorm_ring16_qg",
         comm=CommSpec(compressor="signnorm", gamma=0.3,
                       error_feedback=True))
+
+
+# ---------------------------------------------------------------------------
+# thousand-node scenarios (DESIGN.md §11, examples/thousand_node_demo.py)
+# ---------------------------------------------------------------------------
+
+def _n1024(name: str, topo_name: str, **kw) -> ExperimentSpec:
+    """1024-node base: Dirichlet(0.1) over 20 classes is unsatisfiable by
+    resampling at this scale, so the partition uses deterministic
+    redistribution; ``runtime='auto'`` picks hybrid blocks when a mesh axis
+    divides n (vmap otherwise)."""
+    steps = kw.pop("steps", 40)
+    return ExperimentSpec(
+        name=name, seed=0,
+        data=DataSpec(dataset="classification", alpha=0.1, batch=4,
+                      n_data=8192, n_classes=20, hw=8, noise=2.5,
+                      train_frac=0.75, ensure_min="redistribute"),
+        topology=TopologySpec(name=topo_name, n=1024),
+        optim=OptimSpec(name="qg_dsgdm_n", lr=0.1, weight_decay=1e-4),
+        loop=LoopSpec(steps=steps, log_every=10),
+        eval=EvalSpec(batch=1024),
+        model=ModelSpec(name="mlp"),
+        **kw)
+
+
+@register_preset("n1024_ring")
+def _n1024_ring():
+    return _n1024("n1024_ring", "ring")
+
+
+@register_preset("n1024_powerlaw")
+def _n1024_powerlaw():
+    return _n1024("n1024_powerlaw", "powerlaw:2.5")
+
+
+@register_preset("n1024_churn")
+def _n1024_churn():
+    return _n1024(
+        "n1024_churn", "powerlaw:2.5",
+        scenario=ScenarioSpec(enabled=True, seed=7, participation=0.8,
+                              dropout=0.1, churn_window=5, straggler=0.05))
 
 
 # ---------------------------------------------------------------------------

@@ -27,8 +27,8 @@ from typing import Any
 
 __all__ = [
     "DataSpec", "TopologySpec", "OptimSpec", "CommSpec", "GossipSpec",
-    "LoopSpec", "EvalSpec", "ModelSpec", "TelemetrySpec", "ExperimentSpec",
-    "apply_overrides",
+    "LoopSpec", "EvalSpec", "ModelSpec", "TelemetrySpec", "ScenarioSpec",
+    "ExperimentSpec", "apply_overrides",
 ]
 
 
@@ -41,6 +41,12 @@ class DataSpec:
     batch: int = 16                   # per-node batch size
     seed: int | None = None           # None -> experiment seed
     min_per_client: int = 2
+    ensure_min: str = "retry"         # 'retry' (reject + reseed draws) |
+                                      # 'redistribute' (deterministic top-up
+                                      # from the largest clients — REQUIRED
+                                      # at n≈10³ under low alpha, where
+                                      # retrying can never cover every
+                                      # client; see data/partition.py)
     # classification (synthetic CIFAR-shaped; data/synthetic.py)
     n_data: int = 4096
     n_classes: int = 20
@@ -156,10 +162,34 @@ class TelemetrySpec:
                                       # sinks); run(telemetry_path=) overrides
 
 
+@dataclasses.dataclass(frozen=True)
+class ScenarioSpec:
+    """Thousand-node scenario engine: participation/fault model
+    (DESIGN.md §11, ``repro.scenario``).
+
+    Disabled (the default) leaves the compiled step graph untouched.
+    Enabled, each round draws deterministic masks from ``seed``: every node
+    participates with probability ``participation``, drops out (holds state,
+    mixing renormalizes around it) with probability ``dropout`` per
+    ``churn_window`` steps, and straggles (updates locally but misses the
+    round's gossip) with probability ``straggler``.  Runs on
+    ``runtime='hybrid'`` (block-sparse masked gossip) or ``'vmap'`` with
+    dense gossip, uncompressed comm, symmetric mixing matrices only —
+    ``validate``/build raise on other combinations."""
+
+    enabled: bool = False
+    seed: int = 0
+    participation: float = 1.0        # P(node sampled into a round)
+    dropout: float = 0.0              # P(node down for a churn window)
+    churn_window: int = 1             # steps between alive-set redraws
+    straggler: float = 0.0            # P(alive node misses the gossip)
+
+
 _NESTED = {
     "data": DataSpec, "topology": TopologySpec, "optim": OptimSpec,
     "comm": CommSpec, "gossip": GossipSpec, "loop": LoopSpec,
     "eval": EvalSpec, "model": ModelSpec, "telemetry": TelemetrySpec,
+    "scenario": ScenarioSpec,
 }
 
 
@@ -170,9 +200,11 @@ class ExperimentSpec:
     name: str = ""
     seed: int = 0                     # init + data/partition seed
     runtime: str = "auto"             # execution backend (DESIGN.md §9):
-                                      # auto | vmap | sharded; 'sharded'
-                                      # needs build(spec, mesh=...) whose
-                                      # gossip.node_axis carries n
+                                      # auto | vmap | sharded | hybrid;
+                                      # 'sharded'/'hybrid' need
+                                      # build(spec, mesh=...) whose
+                                      # gossip.node_axis carries n (sharded)
+                                      # or a divisor of n (hybrid blocks)
     data: DataSpec = dataclasses.field(default_factory=DataSpec)
     topology: TopologySpec = dataclasses.field(default_factory=TopologySpec)
     optim: OptimSpec = dataclasses.field(default_factory=OptimSpec)
@@ -183,6 +215,8 @@ class ExperimentSpec:
     model: ModelSpec = dataclasses.field(default_factory=ModelSpec)
     telemetry: TelemetrySpec = dataclasses.field(
         default_factory=TelemetrySpec)
+    scenario: ScenarioSpec = dataclasses.field(
+        default_factory=ScenarioSpec)
 
     # -- serialization -------------------------------------------------------
     def to_dict(self) -> dict:
@@ -288,6 +322,9 @@ class ExperimentSpec:
             err("data.alpha", f"Dirichlet alpha must be > 0, got {d.alpha}")
         if d.batch < 1:
             err("data.batch", f"must be >= 1, got {d.batch}")
+        if d.ensure_min not in ("retry", "redistribute"):
+            err("data.ensure_min", f"must be 'retry' | 'redistribute', got "
+                f"{d.ensure_min!r}")
         if d.dataset == "classification":
             if not 0.0 < d.train_frac < 1.0:
                 err("data.train_frac", f"must be in (0, 1), got "
@@ -331,6 +368,30 @@ class ExperimentSpec:
         if tl.sink not in SINKS:
             err("telemetry.sink", f"unknown sink {tl.sink!r}; have "
                 f"{sorted(SINKS)}")
+        # scenario (DESIGN.md §11): field ranges here; the runtime/gossip/
+        # comm/topology cross-checks live in DecentralizedTrainer so direct
+        # trainer users hit the identical rules
+        sc = self.scenario
+        if not 0.0 < sc.participation <= 1.0:
+            err("scenario.participation", f"must be in (0, 1], got "
+                f"{sc.participation}")
+        if not 0.0 <= sc.dropout < 1.0:
+            err("scenario.dropout", f"must be in [0, 1), got {sc.dropout}")
+        if not 0.0 <= sc.straggler < 1.0:
+            err("scenario.straggler", f"must be in [0, 1), got "
+                f"{sc.straggler}")
+        if sc.churn_window < 1:
+            err("scenario.churn_window", f"must be >= 1, got "
+                f"{sc.churn_window}")
+        if sc.enabled and (sc.participation < 1.0 or sc.dropout > 0.0
+                           or sc.straggler > 0.0):
+            if self.comm.compressor != "dense":
+                err("scenario", "fault injection with compressed comm is "
+                    "not supported (CHOCO/EF replicas assume full "
+                    "participation); set comm.compressor='dense'")
+            if self.runtime == "sharded":
+                err("scenario", "fault injection runs on runtime='hybrid' "
+                    "or 'vmap', not 'sharded'")
         # model (+ model x dataset compatibility)
         from repro.api.models import MODEL_DATASETS, MODELS
         if self.model.name not in MODELS:

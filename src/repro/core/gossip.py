@@ -62,6 +62,12 @@ __all__ = [
     "schedule_matrix",
     "consensus_distance",
     "node_mean",
+    "mask_renormalize",
+    "BlockSchedule",
+    "compile_block_schedule",
+    "apply_block_schedule_local",
+    "mix_leaf_dense_block",
+    "make_block_mix_fn",
 ]
 
 
@@ -539,12 +545,17 @@ def node_mean(tree: PyTree, *, axis_name: str | None = None) -> PyTree:
 
     ``axis_name=None`` reduces the stacked leading axis (keepdims, so the
     result broadcasts back against ``[n, ...]`` leaves); with an axis name
-    the node axis is a mesh axis and the caller is inside a manual region —
-    the same average is a ``lax.pmean`` that keeps the local ``[1, ...]``
-    shape, so the two forms are drop-in interchangeable.
+    the node axis is (block-)sharded over a mesh axis and the caller is
+    inside a manual region — the local block mean (a no-op for the sharded
+    runtime's ``[1, ...]`` shards) followed by ``lax.pmean`` gives the same
+    average with a local ``[1, ...]`` shape that broadcasts against both
+    ``[1, ...]`` shards and ``[b, ...]`` hybrid blocks, so the forms are
+    drop-in interchangeable.
     """
     if axis_name is not None:
-        return jax.tree.map(lambda x: jax.lax.pmean(x, axis_name), tree)
+        return jax.tree.map(
+            lambda x: jax.lax.pmean(jnp.mean(x, axis=0, keepdims=True),
+                                    axis_name), tree)
     return jax.tree.map(lambda x: jnp.mean(x, axis=0, keepdims=True), tree)
 
 
@@ -553,15 +564,301 @@ def consensus_distance(tree: PyTree, *,
     """sqrt( mean_i || x_i - x_bar ||^2 / n ) aggregated over all leaves —
     the quantity plotted in Fig. 3 / Kong et al. 2021.  Axis-context rule as
     :func:`node_mean`: per-node squared distances reduce over the stacked
-    leading axis, or over the named mesh axis (``lax.pmean`` of the local
-    sums == sum/n) when called from inside a sharded step."""
+    leading axis, or over the named mesh axis when called from inside a
+    sharded/hybrid step (``lax.pmean`` of the per-device block means — the
+    local block may hold 1 node per device or ``b = n / n_devices``)."""
     sq, cnt = 0.0, 0.0
     for leaf in jax.tree.leaves(tree):
         if axis_name is not None:
-            mean = jax.lax.pmean(leaf, axis_name)
-            sq = sq + jax.lax.pmean(jnp.sum((leaf - mean) ** 2), axis_name)
+            mean = jax.lax.pmean(jnp.mean(leaf, axis=0, keepdims=True),
+                                 axis_name)
+            sq = sq + jax.lax.pmean(
+                jnp.sum((leaf - mean) ** 2) / leaf.shape[0], axis_name)
         else:
             mean = jnp.mean(leaf, axis=0, keepdims=True)
             sq = sq + jnp.sum((leaf - mean) ** 2) / leaf.shape[0]
         cnt = cnt + np.prod(leaf.shape[1:])
     return jnp.sqrt(sq / cnt)
+
+
+# ---------------------------------------------------------------------------
+# fault-model mixing: renormalize W onto the alive subgraph (DESIGN.md §11)
+# ---------------------------------------------------------------------------
+
+
+def mask_renormalize(w: jax.Array | np.ndarray,
+                     m: jax.Array | np.ndarray) -> jax.Array:
+    """Effective mixing matrix when only nodes with ``m_i = 1`` gossip.
+
+    Off-diagonal mass flows only over edges whose BOTH endpoints are alive
+    (``w_ij m_i m_j``); each alive node folds the mass of its dead
+    neighbours back into its own diagonal (row sums stay 1), and a dead node
+    keeps its state exactly (identity row).  For symmetric ``W`` (Metropolis
+    weights — every generated/registry graph used with scenarios) the result
+    is again symmetric, hence doubly stochastic on the alive subgraph; its
+    ``spectral_gap`` measures how much the outage slows consensus (tested in
+    test_scenario.py).
+    """
+    w = jnp.asarray(w)
+    m = jnp.asarray(m, w.dtype)
+    eye = jnp.eye(w.shape[0], dtype=w.dtype)
+    offd = w * (m[:, None] * m[None, :]) * (1.0 - eye)
+    diag = m * (1.0 - offd.sum(axis=1)) + (1.0 - m)
+    return offd + eye * diag
+
+
+# ---------------------------------------------------------------------------
+# block-compiled schedules: n nodes on d devices, b = n/d nodes per device
+# ---------------------------------------------------------------------------
+#
+# The hybrid runtime keeps node g's state at slot g % b on device g // b
+# (block-major — a global [n, ...] array sharded P(axis) over d devices lands
+# exactly in this layout).  A compiled PhaseSchedule round is a partial
+# permutation of NODES; at block granularity each edge (src -> dst) becomes a
+# whole-block ppermute by the DEVICE offset ((dst//b - src//b) mod d) plus a
+# per-slot gather on the receiving device.  Grouping a round's edges by that
+# offset turns each round into <= d ppermutes of full blocks, with [d, b]
+# constant index/weight tables selected by ``axis_index`` — the same
+# "per-node constants" trick as _apply_phase_local, one level up.
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockGroup:
+    """Edges of one round sharing one device offset.  ``recv_w[dev, slot]``
+    is 0 for dst slots this group does not feed (their ``src_local`` /
+    ``src_node`` default to the slot itself, so masked gathers stay benign).
+    """
+
+    offset: int              # recv block comes from device (i - offset) % d
+    src_local: np.ndarray    # [d, b] slot within the received block
+    src_node: np.ndarray     # [d, b] global src node id (for fault masks)
+    recv_w: np.ndarray       # [d, b] edge weight into each dst slot
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockRound:
+    groups: tuple[BlockGroup, ...]
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockPhase:
+    dense: bool
+    w: np.ndarray            # [n, n] the phase matrix
+    self_weight: np.ndarray  # [d, b] diagonal of W, block-major
+    rounds: tuple[BlockRound, ...]
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockSchedule:
+    """A :class:`GossipSchedule` re-compiled for block-sharded execution."""
+
+    name: str
+    n: int
+    d: int                   # devices (mesh axis size)
+    b: int                   # nodes per device, n // d
+    phases: tuple[BlockPhase, ...]
+
+    @property
+    def max_ppermutes(self) -> int:
+        """Worst-case whole-block ppermutes for one gossip step."""
+        return max((sum(sum(1 for g in r.groups if g.offset != 0)
+                        for r in p.rounds)
+                    for p in self.phases if not p.dense), default=0)
+
+
+def compile_block_schedule(schedule: GossipSchedule, n_devices: int, *,
+                           dense_threshold: float = 1.0) -> BlockSchedule:
+    """Regroup a compiled node-granular schedule into device-offset blocks.
+
+    Pure numpy, runs once at runtime setup.  Dense phases stay dense (one
+    all-gather of blocks + row contraction); sparse phases keep their round
+    structure — weights are carried verbatim and each round still sums its
+    edges, so the phase matrix is reproduced exactly.
+
+    The DESIGN.md §7 cost model is re-applied at BLOCK granularity: a round
+    now costs one whole-block ppermute per nonzero device offset, while the
+    all-gather fallback costs ``d - 1`` link-block times regardless of n —
+    so a phase the node-granular compiler kept sparse (e.g. a power-law
+    graph: R ~ max-degree rounds << n) can still lose once blocked (R
+    rounds x up to d offsets >> d - 1).  Such phases flip to dense here;
+    rings/tori (offsets stay within +-1 device) stay sparse.
+    """
+    n = schedule.n
+    if n_devices < 1 or n % n_devices:
+        raise ValueError(
+            f"block schedule needs n_devices dividing n={n}, got "
+            f"{n_devices}")
+    d, b = n_devices, n // n_devices
+    phases = []
+    for ph in schedule.phases:
+        sw = ph.self_weight.reshape(d, b).copy()
+        if ph.dense:
+            phases.append(BlockPhase(dense=True, w=ph.w, self_weight=sw,
+                                     rounds=()))
+            continue
+        n_ppermutes = sum(
+            len({((dst // b) - (src // b)) % d for src, dst in pairs} - {0})
+            for pairs, _ in ph.rounds)
+        n_messages = sum(len(pairs) for pairs, _ in ph.rounds)
+        budget = dense_threshold * (d - 1)
+        sparse_wins = n_ppermutes < budget or (
+            n_ppermutes <= budget and n_messages * 2 <= n * (n - 1))
+        if d > 1 and not sparse_wins:
+            phases.append(BlockPhase(dense=True, w=ph.w, self_weight=sw,
+                                     rounds=()))
+            continue
+        rounds = []
+        for pairs, recv_w in ph.rounds:
+            groups: dict[int, dict[str, np.ndarray]] = {}
+            for src, dst in pairs:
+                o = ((dst // b) - (src // b)) % d
+                g = groups.get(o)
+                if g is None:
+                    g = groups[o] = {
+                        "src_local": np.tile(np.arange(b), (d, 1)),
+                        "src_node": np.arange(n).reshape(d, b).copy(),
+                        "recv_w": np.zeros((d, b)),
+                    }
+                g["src_local"][dst // b, dst % b] = src % b
+                g["src_node"][dst // b, dst % b] = src
+                g["recv_w"][dst // b, dst % b] = recv_w[dst]
+            rounds.append(BlockRound(groups=tuple(
+                BlockGroup(offset=o, **groups[o]) for o in sorted(groups))))
+        phases.append(BlockPhase(dense=False, w=ph.w, self_weight=sw,
+                                 rounds=tuple(rounds)))
+    return BlockSchedule(name=schedule.name, n=n, d=d, b=b,
+                         phases=tuple(phases))
+
+
+def _dense_block_contract(w, x: jax.Array, *, axis_name: str, d: int, b: int,
+                          mask=None) -> jax.Array:
+    """``out_i = sum_j w[i, j] x_j`` for block-sharded ``x[b, ...]``: one
+    all-gather of blocks, then the device's [b, n] row slab contracts the
+    global [n, ...] stack.  With a fault ``mask`` the rows are renormalized
+    onto the alive subgraph first (same math as :func:`mask_renormalize`,
+    restricted to this device's rows)."""
+    i = jax.lax.axis_index(axis_name)
+    cdt = jnp.promote_types(x.dtype, jnp.float32)
+    n = d * b
+    with jax.named_scope("tm/gossip/allgather"):
+        g = jax.lax.all_gather(x, axis_name)            # [d, b, ...local]
+    g = g.reshape((n,) + x.shape[1:])
+    rows = jnp.asarray(w, cdt).reshape(d, b, n)[i]      # [b, n]
+    if mask is not None:
+        m = jnp.asarray(mask, cdt)
+        m_loc = jax.lax.dynamic_slice_in_dim(m, i * b, b, axis=0)
+        eye = jnp.asarray(np.eye(n).reshape(d, b, n), cdt)[i]
+        offd = rows * (m_loc[:, None] * m[None, :]) * (1.0 - eye)
+        diag = m_loc * (1.0 - offd.sum(axis=-1)) + (1.0 - m_loc)
+        rows = offd + eye * diag[:, None]
+    out = jnp.einsum("bn,nf->bf", rows, g.reshape(n, -1).astype(cdt),
+                     preferred_element_type=cdt)
+    return out.astype(x.dtype).reshape(x.shape)
+
+
+def _apply_block_phase_local(x: jax.Array, phase: BlockPhase, *,
+                             axis_name: str, d: int, b: int,
+                             mask=None) -> jax.Array:
+    """One compiled phase on a local [b, ...] block inside shard_map.
+
+    Sparse phases run each round's offset groups as whole-block ppermutes
+    (offset 0 is the device-local group — no collective) with a per-slot
+    gather + weight on the receiving side.  With a fault ``mask`` the edge
+    weights become ``w_ij m_i m_j`` and each alive dst's self-weight absorbs
+    its dead neighbours' mass (``+ sum_j w_ij (1 - m_j)``); dead nodes get
+    an identity row — exactly :func:`mask_renormalize` evaluated edge-wise,
+    so sparse and dense paths agree under faults.
+    """
+    if phase.dense:
+        return _dense_block_contract(phase.w, x, axis_name=axis_name, d=d,
+                                     b=b, mask=mask)
+    i = jax.lax.axis_index(axis_name)
+    cdt = jnp.promote_types(x.dtype, jnp.float32)
+    bshape = (b,) + (1,) * (x.ndim - 1)
+    m = m_loc = None
+    if mask is not None:
+        m = jnp.asarray(mask, cdt)
+        m_loc = jax.lax.dynamic_slice_in_dim(m, i * b, b, axis=0)
+    sw = jnp.asarray(phase.self_weight, cdt)[i]          # [b]
+    if mask is not None:
+        lost = jnp.zeros((b,), cdt)
+        for rnd in phase.rounds:
+            for grp in rnd.groups:
+                w_g = jnp.asarray(grp.recv_w, cdt)[i]
+                m_src = m[jnp.asarray(grp.src_node)[i]]
+                lost = lost + w_g * (1.0 - m_src)
+        sw = m_loc * (sw + lost) + (1.0 - m_loc)
+    out = x.astype(cdt) * sw.reshape(bshape)
+    for rnd in phase.rounds:
+        acc = None
+        for grp in rnd.groups:
+            if grp.offset == 0:
+                recv = x
+            else:
+                perm = [(j, (j + grp.offset) % d) for j in range(d)]
+                with jax.named_scope("tm/gossip/ppermute"):
+                    recv = jax.lax.ppermute(x, axis_name, perm=perm)
+            w_g = jnp.asarray(grp.recv_w, cdt)[i]        # [b]
+            if mask is not None:
+                w_g = w_g * m_loc * m[jnp.asarray(grp.src_node)[i]]
+            contrib = jnp.take(recv, jnp.asarray(grp.src_local)[i],
+                               axis=0).astype(cdt) * w_g.reshape(bshape)
+            acc = contrib if acc is None else acc + contrib
+        out = out + acc
+    return out.astype(x.dtype)
+
+
+def apply_block_schedule_local(x: jax.Array, bsched: BlockSchedule,
+                               t: jax.Array | int, *, axis_name: str,
+                               mask=None) -> jax.Array:
+    """Block-granular counterpart of :func:`apply_schedule_local` — one
+    gossip round on a local ``[b, ...]`` block, caller already inside a
+    manual region over ``axis_name``.  Phase selection rules are identical
+    (static python ``t`` resolves now, a traced counter pays a
+    ``lax.switch``); ``mask`` is an optional traced ``[n]`` alive mask
+    applied via the edge-wise renormalization above."""
+    n_phases = len(bsched.phases)
+    kw = dict(axis_name=axis_name, d=bsched.d, b=bsched.b, mask=mask)
+    if n_phases == 1:
+        return _apply_block_phase_local(x, bsched.phases[0], **kw)
+    if isinstance(t, int):
+        return _apply_block_phase_local(x, bsched.phases[t % n_phases], **kw)
+    branches = [functools.partial(_apply_block_phase_local, phase=ph, **kw)
+                for ph in bsched.phases]
+    return jax.lax.switch(t % n_phases, branches, x)
+
+
+def mix_leaf_dense_block(w, x: jax.Array, *, axis_name: str, d: int, b: int,
+                         mask=None) -> jax.Array:
+    """Dense contraction of an EXPLICIT [n, n] matrix against block-sharded
+    leaves — the block analogue of :func:`mix_leaf_dense_local`, for mix
+    sites that pass a matrix other than the compiled topology W and for the
+    forced-dense schedule."""
+    return _dense_block_contract(w, x, axis_name=axis_name, d=d, b=b,
+                                 mask=mask)
+
+
+def make_block_mix_fn(bsched: BlockSchedule | None, *, axis_name: str,
+                      w_ref, t: jax.Array | int = 0, d: int | None = None,
+                      b: int | None = None, mask=None):
+    """``mix_fn(w, tree)`` for callers inside a shard_map whose local leaves
+    are ``[b, ...]`` node blocks — the hybrid runtime's counterpart of
+    :func:`make_local_mix_fn`, same w-operand identity dispatch.  ``d``/``b``
+    are only needed when ``bsched`` is None (forced-dense gossip)."""
+    if bsched is not None:
+        d, b = bsched.d, bsched.b
+    if d is None or b is None:
+        raise ValueError("make_block_mix_fn needs bsched= or explicit d=, b=")
+
+    def mix_fn(w, tree):
+        if bsched is None or w is not w_ref:
+            return jax.tree.map(
+                functools.partial(mix_leaf_dense_block, w,
+                                  axis_name=axis_name, d=d, b=b, mask=mask),
+                tree)
+        return jax.tree.map(
+            lambda x: apply_block_schedule_local(x, bsched, t,
+                                                 axis_name=axis_name,
+                                                 mask=mask), tree)
+
+    return mix_fn

@@ -27,6 +27,8 @@ __all__ = [
     "metropolis_weights",
     "spectral_gap",
     "is_doubly_stochastic",
+    "TOPOLOGIES",
+    "get_topology",
 ]
 
 
@@ -99,15 +101,16 @@ def spectral_gap(w: np.ndarray) -> float:
 
 
 def metropolis_weights(adj: np.ndarray) -> np.ndarray:
-    """Metropolis-Hastings doubly-stochastic weights from a 0/1 adjacency."""
+    """Metropolis-Hastings doubly-stochastic weights from a 0/1 adjacency.
+    Fully vectorized — generated graphs call this at n=1024+."""
+    adj = np.asarray(adj)
     n = adj.shape[0]
     deg = adj.sum(axis=1)
-    w = np.zeros((n, n), dtype=np.float64)
-    for i in range(n):
-        for j in range(n):
-            if i != j and adj[i, j]:
-                w[i, j] = 1.0 / (1.0 + max(deg[i], deg[j]))
-        w[i, i] = 1.0 - w[i].sum()
+    off = np.where(adj != 0,
+                   1.0 / (1.0 + np.maximum(deg[:, None], deg[None, :])),
+                   0.0)
+    np.fill_diagonal(off, 0.0)
+    w = off + np.diag(1.0 - off.sum(axis=1))
     return w
 
 
@@ -239,24 +242,68 @@ def one_peer_exponential(n: int) -> Topology:
     )
 
 
+def _torus_for(n: int) -> Topology:
+    r = int(np.sqrt(n))
+    while n % r:
+        r -= 1
+    return torus(r, n // r)
+
+
+def _social_for(n: int) -> Topology:
+    topo = social_network()
+    if n not in (0, topo.n):
+        raise ValueError(f"social topology has fixed n=32, got {n}")
+    return topo
+
+
+def _powerlaw_for(n: int, param: float | None) -> Topology:
+    from repro.scenario.graphs import powerlaw  # core <-> scenario layering
+    return powerlaw(n, param if param is not None else 2.5)
+
+
+def _smallworld_for(n: int, param: float | None) -> Topology:
+    from repro.scenario.graphs import smallworld
+    return smallworld(n, param if param is not None else 0.1)
+
+
+#: name -> (builder(n, param), takes_param).  Builders without a parameter
+#: reject ``name:param`` forms; parameterized ones default when bare.
+TOPOLOGIES: dict = {
+    "ring": (lambda n, _p: ring(n), False),
+    "complete": (lambda n, _p: complete(n), False),
+    "star": (lambda n, _p: star(n), False),
+    "social": (lambda n, _p: _social_for(n), False),
+    "exp": (lambda n, _p: one_peer_exponential(n), False),
+    "torus": (lambda n, _p: _torus_for(n), False),
+    "powerlaw": (_powerlaw_for, True),     # param = degree exponent gamma
+    "smallworld": (_smallworld_for, True),  # param = rewiring probability p
+}
+
+
 def get_topology(name: str, n: int) -> Topology:
-    """Registry-style accessor used by configs/CLI."""
-    if name == "ring":
-        return ring(n)
-    if name == "complete":
-        return complete(n)
-    if name == "star":
-        return star(n)
-    if name == "social":
-        topo = social_network()
-        if n not in (0, topo.n):
-            raise ValueError(f"social topology has fixed n=32, got {n}")
-        return topo
-    if name == "exp":
-        return one_peer_exponential(n)
-    if name == "torus":
-        r = int(np.sqrt(n))
-        while n % r:
-            r -= 1
-        return torus(r, n // r)
-    raise ValueError(f"unknown topology {name!r}")
+    """Registry accessor used by configs/CLI.  Accepts ``name:param`` forms
+    for the parameterized generated graphs — ``powerlaw:2.5`` (degree
+    exponent), ``smallworld:0.1`` (rewiring probability) — parsed like
+    compressor specs (``comm/compressors.make_compressor``).  Unknown names
+    raise ``ValueError`` listing every valid form."""
+    kind, sep, arg = name.partition(":")
+
+    def bad(why: str):
+        forms = ", ".join(
+            f"'{k}:<param>'" if takes else f"'{k}'"
+            for k, (_, takes) in sorted(TOPOLOGIES.items()))
+        raise ValueError(f"topology spec {name!r}: {why}; valid forms: "
+                         f"{forms}")
+
+    if kind not in TOPOLOGIES:
+        bad(f"unknown topology {kind!r}")
+    builder, takes_param = TOPOLOGIES[kind]
+    param = None
+    if sep:
+        if not takes_param:
+            bad(f"{kind!r} takes no parameter")
+        try:
+            param = float(arg)
+        except ValueError:
+            bad(f"parameter {arg!r} is not a number")
+    return builder(n, param)

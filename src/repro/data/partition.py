@@ -21,6 +21,7 @@ def dirichlet_partition(
     seed: int = 0,
     min_per_client: int = 2,
     max_retries: int = 100,
+    ensure_min: str = "retry",
 ) -> list[np.ndarray]:
     """Return a list of disjoint index arrays, one per client.
 
@@ -32,7 +33,20 @@ def dirichlet_partition(
     reports the best minimum achieved instead of looping forever (the old
     ``while True`` hung whenever the constraint was unsatisfiable — small
     dataset, low alpha, many clients).
+
+    ``ensure_min='redistribute'`` replaces the rejection loop with a
+    deterministic top-up: the Dirichlet assignment stands, then under-full
+    clients take trailing samples from whichever client is currently
+    largest (no extra rng draws, so the underlying draw keeps the seed
+    stream of attempt 0).  This is the ONLY way to satisfy
+    ``min_per_client`` at scenario scale — with 1024 clients under
+    Dir(0.1), most clients draw ~zero mass from every class and no amount
+    of retrying ever covers them (expected empty-client count stays in the
+    dozens for any realistic dataset size).
     """
+    if ensure_min not in ("retry", "redistribute"):
+        raise ValueError(f"ensure_min must be 'retry' | 'redistribute', "
+                         f"got {ensure_min!r}")
     if n_clients * min_per_client > len(labels):
         raise ValueError(
             f"min_per_client={min_per_client} unsatisfiable: {n_clients} "
@@ -43,28 +57,43 @@ def dirichlet_partition(
     for attempt in range(max_retries):
         # attempt 0 replays the historical default_rng(seed) stream exactly
         # (partitions baked into benchmarks/tests stay put); retries reseed.
+        # The rng call order (per-class shuffles, then one dirichlet per
+        # class) is the ONLY stream consumer — the vectorized assignment
+        # below is pure numpy bookkeeping, so the partitions are
+        # bit-identical to the old per-sample python-loop version.
         rng = np.random.default_rng(seed if attempt == 0 else (seed, attempt))
         idx_by_class = [np.nonzero(labels == c)[0] for c in range(n_classes)]
         for idx in idx_by_class:
             rng.shuffle(idx)
-        client_idx: list[list[int]] = [[] for _ in range(n_clients)]
+        counts = np.zeros(n_clients, dtype=np.int64)
+        owner_parts: list[np.ndarray] = []   # per class: owner client of each sample
         for c in range(n_classes):
             props = rng.dirichlet(np.full(n_clients, alpha))
             # balance: zero out clients already over-full (standard trick)
-            counts = np.array([len(ci) for ci in client_idx])
             props = props * (counts < len(labels) / n_clients)
             s = props.sum()
             if s <= 0:
                 props = np.full(n_clients, 1.0 / n_clients)
             else:
                 props = props / s
-            cuts = (np.cumsum(props) * len(idx_by_class[c])).astype(int)[:-1]
-            for i, part in enumerate(np.split(idx_by_class[c], cuts)):
-                client_idx[i].extend(part.tolist())
-        sizes = [len(ci) for ci in client_idx]
-        best_min = max(best_min, min(sizes))
-        if min(sizes) >= min_per_client:
-            out = [np.array(sorted(ci), dtype=np.int64) for ci in client_idx]
+            n_c = len(idx_by_class[c])
+            cuts = (np.cumsum(props) * n_c).astype(int)[:-1]
+            # np.split(idx, cuts) section sizes, as one repeat instead of a
+            # per-client python loop
+            bounds = np.concatenate(([0], cuts, [n_c]))
+            sizes_c = np.maximum(np.diff(bounds), 0)
+            owner_parts.append(np.repeat(np.arange(n_clients), sizes_c))
+            counts += sizes_c
+        best_min = max(best_min, int(counts.min()))
+        if counts.min() >= min_per_client or ensure_min == "redistribute":
+            owners = np.concatenate(owner_parts)
+            samples = np.concatenate(idx_by_class)
+            order = np.lexsort((samples, owners))  # by client, then index
+            out = list(np.split(samples[order].astype(np.int64),
+                                np.cumsum(counts)[:-1]))
+            if counts.min() < min_per_client:
+                _redistribute_min(out, min_per_client)
+                out = [np.sort(o) for o in out]
             assert sum(len(o) for o in out) == len(labels)
             return out
     raise ValueError(
@@ -72,6 +101,27 @@ def dirichlet_partition(
         f">= {min_per_client} samples in {max_retries} attempts "
         f"(best achieved minimum: {best_min}); relax min_per_client, raise "
         f"alpha, or use fewer clients")
+
+
+def _redistribute_min(parts: list[np.ndarray], min_per_client: int) -> None:
+    """Deterministic top-up (in place): every client below ``min_per_client``
+    takes trailing samples from the currently largest client.  No rng; the
+    donor order is a pure function of the assignment, so the result is as
+    reproducible as the Dirichlet draw itself."""
+    sizes = np.array([len(p) for p in parts])
+    for i in np.nonzero(sizes < min_per_client)[0]:
+        while sizes[i] < min_per_client:
+            donor = int(np.argmax(sizes))
+            if sizes[donor] <= min_per_client:
+                raise ValueError(
+                    f"redistribute: not enough samples to give every client "
+                    f">= {min_per_client}")
+            take = min(int(sizes[donor]) - min_per_client,
+                       min_per_client - int(sizes[i]))
+            parts[i] = np.concatenate([parts[i], parts[donor][-take:]])
+            parts[donor] = parts[donor][:-take]
+            sizes[i] += take
+            sizes[donor] -= take
 
 
 def heterogeneity_stats(labels: np.ndarray,
@@ -83,11 +133,14 @@ def heterogeneity_stats(labels: np.ndarray,
         np.bincount(labels[p], minlength=n_classes) / max(1, len(p))
         for p in parts])
     n = len(parts)
+    # all-pairs TV in row chunks (n=1024 would need a 1024^2 x classes
+    # broadcast at once; chunking keeps it a few MB)
     tv = 0.0
-    cnt = 0
-    for i in range(n):
-        for j in range(i + 1, n):
-            tv += 0.5 * np.abs(hists[i] - hists[j]).sum()
-            cnt += 1
-    return {"hists": hists, "mean_tv": tv / max(1, cnt),
+    chunk = max(1, 2**22 // max(1, n * n_classes))
+    for i in range(0, n, chunk):
+        d = np.abs(hists[i:i + chunk, None, :] - hists[None, :, :])
+        tv += 0.5 * d.sum()
+    cnt = n * (n - 1) // 2
+    # the chunked sum counts each unordered pair twice (diagonal adds 0)
+    return {"hists": hists, "mean_tv": tv / 2.0 / max(1, cnt),
             "sizes": [len(p) for p in parts]}

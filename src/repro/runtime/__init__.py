@@ -7,42 +7,52 @@ One interface, two interchangeable backends behind it:
   * ``'sharded'`` — the whole step inside one ``shard_map`` over the mesh
                     node axis: O(1) per-device state in n, one dispatch per
                     step/chunk;
+  * ``'hybrid'``  — node-batched blocks: n nodes on d devices, b = n/d per
+                    device, same single-shard_map step with block-compiled
+                    gossip (the thousand-node scenario backend);
   * ``'auto'``    — sharded when the trainer carries a mesh whose
-                    ``node_axis`` matches the topology's n, vmap otherwise
-                    (mirrors the gossip resolver's 'auto').
+                    ``node_axis`` matches the topology's n; hybrid when the
+                    axis size properly divides n (that combination was
+                    previously a resolve-time error); vmap otherwise.
 
-Trajectories are backend-identical (pinned in tests/test_runtime.py for the
-registry optimizers, compressed comm included; stochastic compressors —
-randk/qsgd — draw per-node randomness differently across layouts and are
-the one documented exception).
+Trajectories are backend-identical (pinned in tests/test_runtime.py and
+tests/test_scenario.py for the registry optimizers, compressed comm
+included; stochastic compressors — randk/qsgd — draw per-node randomness
+differently across layouts and are the one documented exception).
 """
 from __future__ import annotations
 
 from typing import Any
 
 from .base import Runtime
+from .hybrid import HybridRuntime
 from .sharded import ShardedRuntime
 from .vmap import VmapRuntime
 
-__all__ = ["Runtime", "VmapRuntime", "ShardedRuntime", "RUNTIMES",
-           "resolve_runtime", "make_runtime"]
+__all__ = ["Runtime", "VmapRuntime", "ShardedRuntime", "HybridRuntime",
+           "RUNTIMES", "resolve_runtime", "make_runtime"]
 
-RUNTIMES = ("auto", "vmap", "sharded")
+RUNTIMES = ("auto", "vmap", "sharded", "hybrid")
 
 
 def resolve_runtime(name: str, *, mesh: Any = None,
                     node_axis: str | None = None, n: int = 1) -> str:
-    """THE backend selection rules: 'vmap' / 'sharded' verbatim ('sharded'
-    validated against the mesh at runtime construction); 'auto' picks
-    'sharded' iff a mesh carries ``node_axis`` with size ``n``."""
+    """THE backend selection rules: 'vmap' / 'sharded' / 'hybrid' verbatim
+    (validated against the mesh at runtime construction); 'auto' picks
+    'sharded' iff a mesh carries ``node_axis`` with size ``n``, 'hybrid'
+    iff that axis size properly divides ``n`` (more nodes than devices),
+    'vmap' otherwise."""
     if name not in RUNTIMES:
         raise ValueError(f"unknown runtime {name!r}; valid: "
                          f"{' | '.join(RUNTIMES)}")
     if name != "auto":
         return name
-    if mesh is not None and node_axis is not None \
-            and dict(mesh.shape).get(node_axis) == n:
-        return "sharded"
+    if mesh is not None and node_axis is not None:
+        size = dict(mesh.shape).get(node_axis)
+        if size == n:
+            return "sharded"
+        if size and size > 1 and n % size == 0:
+            return "hybrid"
     return "vmap"
 
 
@@ -54,4 +64,6 @@ def make_runtime(trainer) -> Runtime:
                            n=trainer.topology.n)
     if kind == "sharded":
         return ShardedRuntime(trainer)
+    if kind == "hybrid":
+        return HybridRuntime(trainer)
     return VmapRuntime(trainer)

@@ -42,6 +42,23 @@ from repro.telemetry.metrics import TM_PREFIX, CollectorCtx
 PyTree = Any
 
 
+def _hold_nodes(mask, new: PyTree, old: PyTree) -> PyTree:
+    """Per-node old-vs-new select for the scenario hold semantics: leaves
+    whose leading axis matches the local mask length are node-stacked — pick
+    ``new`` where ``mask`` is 1, keep ``old`` where 0.  Non-node leaves
+    (replicated scalars) take ``new`` unconditionally."""
+    mb = mask.astype(bool)
+
+    def sel(a, b):
+        shape = getattr(a, "shape", ())
+        if len(shape) >= 1 and shape[0] == mb.shape[0]:
+            return jnp.where(mb.reshape((shape[0],) + (1,) *
+                                        (len(shape) - 1)), a, b)
+        return a
+
+    return jax.tree.map(sel, new, old)
+
+
 @dataclasses.dataclass
 class Runtime:
     """Base execution backend.  ``trainer`` is the owning
@@ -78,12 +95,27 @@ class Runtime:
         """Global max of a per-node quantity -> replicated scalar."""
         return jnp.max(x)
 
-    def _mix_impl(self, w, t):
+    def _local_update_mask(self, u):
+        """This backend's slice of the global ``[n]`` scenario update mask,
+        aligned with the local node leading axis (identity for vmap; the
+        sharded/hybrid overrides slice their device's rows)."""
+        return u
+
+    def _mix_impl(self, w, t, mix_mask=None):
         """The mix hook to install for this backend (None keeps the
-        optimizer's dense default)."""
+        optimizer's dense default).  ``mix_mask`` is the scenario's [n]
+        alive mask for this round's gossip (None = no scenario): the dense
+        path renormalizes every mixing matrix onto the alive subgraph."""
         r = self.trainer._resolved
         if r.kind == "dense":
-            return None
+            if mix_mask is None:
+                return None
+            return lambda w_, tree: gossip.mix_dense(
+                gossip.mask_renormalize(jnp.asarray(w_), mix_mask), tree)
+        if mix_mask is not None:
+            raise ValueError(
+                "scenario fault injection needs runtime='vmap' (dense "
+                "gossip) or runtime='hybrid'")  # trainer validates earlier
         return r.mix_fn(w_ref=w, t=t)
 
     # -- the step math (shared by every backend) -----------------------------
@@ -108,8 +140,19 @@ class Runtime:
         w = tr._mixing[state.t % tr._mixing.shape[0]]
         lr = tr.lr_fn(state.t)
 
+        # scenario masks (DESIGN.md §11): who updates / who gossips this
+        # round, pure in-graph functions of (scenario seed, t) — identical
+        # across backends.  A trivial scenario compiles the exact
+        # no-scenario graph.
+        sc = getattr(tr, "scenario", None)
+        if sc is not None and sc.trivial:
+            sc = None
+        u_mask = mix_mask = None
+        if sc is not None:
+            u_mask, mix_mask = sc.masks(state.t)
+
         opt = tr.optimizer
-        mix_impl = self._mix_impl(w, state.t)
+        mix_impl = self._mix_impl(w, state.t, mix_mask=mix_mask)
         if mix_impl is not None:
             opt = dataclasses.replace(opt, mix_fn=mix_impl)
         new_comm = state.comm_state
@@ -129,6 +172,16 @@ class Runtime:
                 state.params, grads, state.opt_state, w=w, lr=lr, t=state.t,
                 axis_name=self.axis_name, n_nodes=n)
 
+        u_loc = None
+        if sc is not None:
+            # dropped/unsampled nodes hold state exactly: select old-vs-new
+            # per node.  Their mixing rows were identity (mask_renormalize),
+            # so alive nodes never read the discarded intermediate values.
+            u_loc = self._local_update_mask(u_mask)
+            new_params = _hold_nodes(u_loc, new_params, state.params)
+            new_opt = _hold_nodes(u_loc, new_opt, state.opt_state)
+            new_ms = _hold_nodes(u_loc, new_ms, state.model_state)
+
         out_metrics = {
             "loss": self._node_mean_scalar(loss),
             "lr": lr,
@@ -146,14 +199,20 @@ class Runtime:
                 tr._dense_bits / max(tr._comm_bits, 1e-9), jnp.float32)
         for k, v in metrics.items():
             out_metrics[k] = self._node_mean_scalar(v)
+        if sc is not None:
+            # masks are replicated [n] in every backend, so these means are
+            # bit-identical across vmap/hybrid (determinism pin)
+            out_metrics["alive_frac"] = jnp.mean(u_mask)
+            out_metrics["mix_frac"] = jnp.mean(mix_mask)
         if collect:
             out_metrics.update(self._telemetry_metrics(
-                state, grads, new_params, new_opt, new_comm, lr, n))
+                state, grads, new_params, new_opt, new_comm, lr, n,
+                alive=u_loc))
         return TrainState(new_params, new_opt, new_ms, state.t + 1,
                           new_comm), out_metrics
 
     def _telemetry_metrics(self, state, grads, new_params, new_opt,
-                           new_comm, lr, n) -> dict:
+                           new_comm, lr, n, alive=None) -> dict:
         """In-graph telemetry collection (DESIGN.md §10): when the trainer
         carries a resolved :class:`~repro.telemetry.metrics.TelemetryConfig`,
         run its collectors on this step and return their scalars under the
@@ -180,7 +239,7 @@ class Runtime:
             node_mean=self._node_mean_scalar,
             node_sum=self._node_sum_scalar,
             node_max=self._node_max_scalar,
-            static=tel.static)
+            static=tel.static, alive=alive)
         with jax.named_scope("tm/collect"):
             vals = tel.collect(ctx)
         return {TM_PREFIX + k: v for k, v in vals.items()}

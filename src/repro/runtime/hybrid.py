@@ -1,0 +1,89 @@
+"""HybridRuntime — node-batched blocks: n nodes on d devices, b = n/d each.
+
+The sharded backend puts ONE node per device; populations of 10³+ nodes
+have no such mesh.  This backend keeps the sharded backend's structure —
+the COMPLETE step inside a single ``shard_map`` over the mesh node axis,
+one dispatch per step/chunk — but each device carries a contiguous BLOCK of
+``b = n / n_devices`` nodes: node ``g`` lives at slot ``g % b`` on device
+``g // b``.  Per-device state is O(n/devices); per-node work is the same
+``jax.vmap`` the vmap backend uses, just over the local block.
+
+That layout is exactly what sharding a node-stacked ``[n, ...]`` leaf
+``P(node_axis)`` over d devices produces, so the sharded backend's layout
+contract (:func:`~repro.runtime.sharded.node_leaf_spec`), state placement,
+and eval path are inherited unchanged.  What changes:
+
+* gossip runs the BLOCK-compiled schedule
+  (:func:`~repro.core.gossip.compile_block_schedule`): each compiled round's
+  edges group by device offset into whole-block ppermutes + per-slot
+  gathers, so bytes-on-wire stay proportional to actual graph edges;
+* per-node rng keys are the device's b-row block of the same
+  ``jax.random.split(rng, n)`` — streams stay bit-identical to vmap/sharded;
+* node reductions average the local block before the mesh collective.
+
+This is also the scenario engine's execution backend (DESIGN.md §11): the
+round's mix mask threads into the block executors (edge-wise
+mask-renormalization) and the update mask drives per-node hold semantics in
+the shared step math.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+
+from repro.core import gossip
+
+from .base import Runtime
+from .sharded import ShardedRuntime
+
+
+@dataclasses.dataclass
+class HybridRuntime(ShardedRuntime):
+    name: str = "hybrid"
+
+    def __post_init__(self):
+        Runtime.__post_init__(self)   # skip ShardedRuntime's n == axis check
+        tr = self.trainer
+        n = tr.topology.n
+        if tr.mesh is None:
+            raise ValueError(
+                "runtime='hybrid' needs a mesh whose node axis carries the "
+                "device blocks; pass DecentralizedTrainer(mesh=, node_axis=)"
+                " or use runtime='vmap'")
+        axes = dict(tr.mesh.shape)
+        d = axes.get(tr.node_axis)
+        if not d or n % d:
+            raise ValueError(
+                f"runtime='hybrid': mesh axis {tr.node_axis!r} has size "
+                f"{d}, which must divide the topology's n={n}")
+        self.axis_name = tr.node_axis
+        self.mesh = tr.mesh
+        self._d, self._b = d, n // d
+        # block-compile the gossip schedule; 'dense' (forced) keeps every
+        # mix site an all-gather row contraction over blocks
+        r = tr._resolved
+        if getattr(r, "schedule", None) is not None:
+            self._bsched = gossip.compile_block_schedule(r.schedule, d)
+        elif tr.gossip_schedule == "dense" or n == 1:
+            self._bsched = None
+        else:
+            self._bsched = gossip.compile_block_schedule(
+                gossip.compile_gossip_schedule(tr.topology), d)
+
+    # -- node-axis hooks ------------------------------------------------------
+    def _node_rngs(self, rng, n: int):
+        # rows [i*b, (i+1)*b) of the SAME split every backend uses
+        rngs = jax.random.split(rng, n)
+        i = jax.lax.axis_index(self.axis_name)
+        return jax.lax.dynamic_slice_in_dim(rngs, i * self._b, self._b,
+                                            axis=0)
+
+    def _local_update_mask(self, u):
+        i = jax.lax.axis_index(self.axis_name)
+        return jax.lax.dynamic_slice_in_dim(u, i * self._b, self._b, axis=0)
+
+    def _mix_impl(self, w, t, mix_mask=None):
+        return gossip.make_block_mix_fn(
+            self._bsched, axis_name=self.axis_name, w_ref=w, t=t,
+            d=self._d, b=self._b, mask=mix_mask)

@@ -109,9 +109,18 @@ class ShardedRuntime(Runtime):
     def _node_max_scalar(self, x):
         return jax.lax.pmax(jnp.max(x), self.axis_name)
 
-    def _mix_impl(self, w, t):
+    def _local_update_mask(self, u):
+        i = jax.lax.axis_index(self.axis_name)
+        return jax.lax.dynamic_slice_in_dim(u, i, 1, axis=0)
+
+    def _mix_impl(self, w, t, mix_mask=None):
         # always installed: the optimizer's dense-einsum default would
         # contract the LOCAL leading axis (size 1), not the node axis
+        if mix_mask is not None:
+            raise ValueError(
+                "scenario fault injection is not supported on "
+                "runtime='sharded'; use runtime='hybrid' (one node per "
+                "device is hybrid with n_devices == n) or 'vmap'")
         return gossip.make_local_mix_fn(
             self._schedule, axis_name=self.axis_name, w_ref=w, t=t)
 

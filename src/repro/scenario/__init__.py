@@ -1,0 +1,88 @@
+"""Thousand-node scenario engine (DESIGN.md §11).
+
+The paper evaluates n <= 32 fully-participating nodes on fixed topologies;
+this package supplies everything needed to push the same training engine to
+n = 10³ populations with realistic failure modes:
+
+* :mod:`~repro.scenario.graphs` — generated power-law / small-world gossip
+  graphs with Metropolis weights (``get_topology('powerlaw:2.5', n)``);
+* :mod:`~repro.scenario.sampling` — per-round client sampling;
+* :mod:`~repro.scenario.faults` — churn (windowed dropout) + stragglers,
+  with mixing-weight renormalization onto the alive subgraph;
+* :class:`ScenarioContext` — the resolved per-run object the runtimes
+  consult: ``masks(t)`` returns the round's ``(update_mask, mix_mask)``
+  pair, both deterministic in-graph functions of ``(seed, t)``.
+
+Execution lives in :mod:`repro.runtime.hybrid` (node-batched blocks: n
+nodes on d devices, ``b = n/d`` per device) — the vmap backend supports
+scenarios too (dense masked mixing), so every scenario is testable on one
+host device and scales out unchanged.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from . import faults, graphs, sampling
+from .faults import churn_mask, effective_mixing, straggler_mask
+from .graphs import powerlaw, smallworld
+from .sampling import participation_mask
+
+__all__ = [
+    "ScenarioContext",
+    "faults", "graphs", "sampling",
+    "churn_mask", "straggler_mask", "effective_mixing",
+    "participation_mask", "powerlaw", "smallworld",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class ScenarioContext:
+    """Resolved participation/fault model for one run.
+
+    ``masks(t)`` -> ``(update_mask, mix_mask)``, both ``[n]`` float32:
+
+    * ``update_mask`` — 1 where the node computes and applies its local
+      update this round (sampled AND not dropped by churn).  Nodes at 0
+      hold params/opt state exactly (the runtimes select old-vs-new
+      per node after the step).
+    * ``mix_mask`` — 1 where the node participates in this round's gossip:
+      ``update_mask`` minus stragglers.  The gossip executors renormalize
+      the mixing matrix onto this alive subgraph
+      (:func:`repro.core.gossip.mask_renormalize`).
+
+    Both are pure functions of ``(seed, t)`` — identical across backends
+    and across reruns; ``t`` may be a traced step counter.
+    """
+
+    n: int
+    seed: int = 0
+    participation: float = 1.0
+    dropout: float = 0.0
+    churn_window: int = 1
+    straggler: float = 0.0
+
+    @property
+    def trivial(self) -> bool:
+        """True when every mask is all-ones (no faults configured) — the
+        runtimes then skip masking entirely, keeping the no-scenario graph
+        byte-identical."""
+        return (self.participation >= 1.0 and self.dropout <= 0.0
+                and self.straggler <= 0.0)
+
+    def masks(self, t):
+        key = jax.random.PRNGKey(self.seed)
+        u = jnp.ones((self.n,), jnp.float32)
+        if self.participation < 1.0:
+            u = u * sampling.participation_mask(key, t, self.n,
+                                                self.participation)
+        if self.dropout > 0.0:
+            u = u * faults.churn_mask(key, t, self.n, self.dropout,
+                                      self.churn_window)
+        m = u
+        if self.straggler > 0.0:
+            m = m * (1.0 - faults.straggler_mask(key, t, self.n,
+                                                 self.straggler))
+        return u, m

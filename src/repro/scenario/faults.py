@@ -1,0 +1,62 @@
+"""Fault injection for scenario runs: churn (correlated dropout) and
+straggler delay.
+
+Semantics (DESIGN.md §11):
+
+* a **dropped** node neither computes an update nor gossips this round — it
+  holds params/momentum exactly and its mixing row becomes the identity;
+* a **straggler** computes its local update but its gossip exchange does not
+  complete in time — it steps, but is excluded from this round's mixing
+  (both directions: nobody reads it, it reads nobody);
+* alive nodes renormalize their mixing weights onto the alive subgraph
+  (``gossip.mask_renormalize``): dead-neighbour mass folds back into the
+  diagonal, so the effective matrix stays doubly stochastic for symmetric
+  ``W`` and its :func:`~repro.core.topology.Topology` spectral gap measures
+  the consensus slowdown the outage causes.
+
+Like :mod:`repro.scenario.sampling`, every mask is a pure in-graph function
+of ``(scenario seed, step)`` — deterministic, backend-identical, no host
+state.  Churn differs from i.i.d. dropout by its ``window``: the alive set
+is redrawn once per ``window`` steps (``t // window``), so outages persist
+— the regime where momentum staleness actually bites.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import gossip
+
+__all__ = ["churn_mask", "straggler_mask", "effective_mixing"]
+
+_TAG_CHURN = 0xC4A2
+_TAG_STRAG = 0x57A6
+
+
+def churn_mask(key: jax.Array, t, n: int, dropout: float,
+               window: int = 1) -> jax.Array:
+    """``[n]`` float mask, 1 = node alive during the window containing
+    ``t``.  Each node drops with probability ``dropout`` per window;
+    ``window=1`` is i.i.d. per-round dropout, larger windows give the
+    correlated multi-step outages characteristic of real churn."""
+    epoch = jnp.asarray(t, jnp.int32) // max(1, int(window))
+    k = jax.random.fold_in(jax.random.fold_in(key, _TAG_CHURN), epoch)
+    return 1.0 - jax.random.bernoulli(k, dropout, (n,)).astype(jnp.float32)
+
+
+def straggler_mask(key: jax.Array, t, n: int, prob: float) -> jax.Array:
+    """``[n]`` float mask, 1 = node straggles in round ``t`` (its gossip
+    misses the round; its local step still happens).  Redrawn per round."""
+    k = jax.random.fold_in(jax.random.fold_in(key, _TAG_STRAG),
+                           jnp.asarray(t, jnp.int32))
+    return jax.random.bernoulli(k, prob, (n,)).astype(jnp.float32)
+
+
+def effective_mixing(w: np.ndarray, m: np.ndarray) -> np.ndarray:
+    """Host-side effective mixing matrix under mix-mask ``m`` — the matrix
+    the masked gossip executors implement, as numpy, for validation:
+    ``Topology.spectral_gap`` of ``[effective_mixing(w, m)]`` quantifies the
+    alive-subgraph connectivity (tested in tests/test_scenario.py)."""
+    return np.asarray(gossip.mask_renormalize(np.asarray(w, np.float64),
+                                              np.asarray(m, np.float64)))

@@ -1,0 +1,32 @@
+"""Per-round client sampling (partial participation) for scenario runs.
+
+Cross-device federated/decentralized deployments never see all clients in a
+round; each node participates with probability ``p`` independently per
+round.  The mask is a pure function of ``(scenario seed, step)`` computed
+IN-GRAPH via ``jax.random.fold_in`` — no host state, no rng stream threaded
+through the training loop — so the same seed reproduces the same
+participation pattern bit-for-bit on every backend (vmap and hybrid compute
+the identical ``[n]`` mask from the identical replicated ``t``; pinned in
+tests/test_scenario.py).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["participation_mask"]
+
+# stream tag: keeps the participation draw independent of the churn /
+# straggler draws that fold the same scenario key (see faults.py)
+_TAG = 0x5A3B
+
+
+def participation_mask(key: jax.Array, t, n: int, p: float) -> jax.Array:
+    """``[n]`` float mask, 1 = node sampled into round ``t``.
+
+    ``t`` may be a traced step counter (``fold_in`` accepts traced data);
+    every round redraws independently.
+    """
+    k = jax.random.fold_in(jax.random.fold_in(key, _TAG),
+                           jnp.asarray(t, jnp.int32))
+    return jax.random.bernoulli(k, p, (n,)).astype(jnp.float32)

@@ -81,6 +81,9 @@ class CollectorCtx:
     node_sum: Callable             # local accumulation -> global sum ()
     node_max: Callable             # per-node scalar array -> global max ()
     static: dict                   # build-time constants (may be empty)
+    alive: Any = None              # scenario update mask for the LOCAL nodes
+                                   # ([n_local] floats, 1 = participated) —
+                                   # None when no scenario is active
 
     # -- shared per-node helpers ---------------------------------------------
     def per_node_sq_norm(self, tree: PyTree) -> jax.Array:
@@ -128,12 +131,27 @@ def _consensus(ctx: CollectorCtx) -> dict:
 
 def _grad_norms(ctx: CollectorCtx) -> dict:
     """Per-node gradient-norm spread — large std/max vs mean is the
-    heterogeneity signature (each node's Dirichlet shard pulls elsewhere)."""
+    heterogeneity signature (each node's Dirichlet shard pulls elsewhere).
+
+    Under an active scenario the statistics cover PARTICIPATING nodes only
+    (alive-node masking): a dropped node's gradient is computed but
+    discarded by the hold semantics, so including it would report spread
+    that never touched the trajectory."""
     norms = jnp.sqrt(ctx.per_node_sq_norm(ctx.grads))
+    if ctx.alive is None:
+        return {
+            "grad_norm_mean": ctx.node_mean(norms),
+            "grad_norm_std": ctx.node_std(norms),
+            "grad_norm_max": ctx.node_max(norms),
+        }
+    a = ctx.alive.astype(jnp.float32)
+    cnt = jnp.maximum(ctx.node_sum(jnp.sum(a)), 1.0)
+    mean = ctx.node_sum(jnp.sum(a * norms)) / cnt
+    m2 = ctx.node_sum(jnp.sum(a * norms**2)) / cnt
     return {
-        "grad_norm_mean": ctx.node_mean(norms),
-        "grad_norm_std": ctx.node_std(norms),
-        "grad_norm_max": ctx.node_max(norms),
+        "grad_norm_mean": mean,
+        "grad_norm_std": jnp.sqrt(jnp.maximum(m2 - mean**2, 0.0)),
+        "grad_norm_max": ctx.node_max(jnp.where(a > 0, norms, 0.0)),
     }
 
 
@@ -223,6 +241,21 @@ def _mixing(ctx: CollectorCtx) -> dict:
     }
 
 
+def _scenario(ctx: CollectorCtx) -> dict:
+    """Scenario-engine diagnostics (DESIGN.md §11): the realized
+    participation fraction this round plus the run's data-heterogeneity
+    level (mean pairwise TV distance of the Dirichlet partition, a
+    build-time static replayed into every row like the wire stats).  Emits
+    nothing for runs without a scenario or heterogeneity static."""
+    out = {}
+    if "data_mean_tv" in ctx.static:
+        out["data_mean_tv"] = jnp.asarray(ctx.static["data_mean_tv"],
+                                          jnp.float32)
+    if ctx.alive is not None:
+        out["alive_frac"] = ctx.node_mean(ctx.alive.astype(jnp.float32))
+    return out
+
+
 METRICS: dict[str, Callable[[CollectorCtx], dict]] = {
     "consensus": _consensus,
     "grad_norms": _grad_norms,
@@ -230,6 +263,7 @@ METRICS: dict[str, Callable[[CollectorCtx], dict]] = {
     "comm_buffers": _comm_buffers,
     "wire": _wire,
     "mixing": _mixing,
+    "scenario": _scenario,
 }
 
 DEFAULT_METRICS = tuple(sorted(METRICS))

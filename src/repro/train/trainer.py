@@ -14,7 +14,12 @@ by the ``runtime`` field:
                     over the mesh node axis: each device holds only its own
                     node's state (O(1) per-device memory in n), one dispatch
                     per step/chunk, buffers donated.
-  * ``'auto'``    — sharded when a mesh carries the node axis, else vmap.
+  * ``'hybrid'``  — node-batched blocks: n nodes on d devices, b = n/d per
+                    device, same single-shard_map structure with the
+                    block-compiled gossip schedule (the thousand-node
+                    scenario backend, DESIGN.md §11).
+  * ``'auto'``    — sharded when a mesh carries the node axis at size n,
+                    hybrid when its size properly divides n, else vmap.
 
 Trajectories are backend-identical (pinned in tests/test_runtime.py).
 
@@ -109,24 +114,79 @@ class DecentralizedTrainer:
                                    # set, the jitted step emits 'tm.'-prefixed
                                    # collector scalars (DESIGN.md §10).  None
                                    # (default) leaves the graph untouched.
+    scenario: Any = None           # scenario.ScenarioContext: per-round
+                                   # client sampling / churn / stragglers
+                                   # (DESIGN.md §11).  None = full
+                                   # participation, the exact default graph.
 
     def __post_init__(self):
         if self.lr_fn is None:
             lr = self.optimizer.lr
             self.lr_fn = lambda t: jnp.asarray(lr, jnp.float32)
         self._mixing = jnp.asarray(self.topology.mixing, jnp.float32)
-        # one resolver for every assembly path (shared with launch/steps.py);
-        # raises eagerly on mesh/topology/schedule mismatches
-        self._resolved = gossip.resolve_gossip(
-            self.topology, schedule=self.gossip_schedule, mesh=self.mesh,
-            node_axis=self.node_axis if self.mesh is not None else None)
+        from repro.runtime import make_runtime, resolve_runtime
+        kind = resolve_runtime(self.runtime, mesh=self.mesh,
+                               node_axis=self.node_axis, n=self.topology.n)
+        if kind == "hybrid":
+            # the node-granular resolver would reject the mesh (axis size
+            # != n by construction); the hybrid backend block-compiles its
+            # own schedule.  _resolved still carries the compiled
+            # node-granular schedule so wire accounting sees the real
+            # per-edge message counts.
+            if self.gossip_schedule == "ring_ppermute":
+                raise ValueError(
+                    "gossip_schedule='ring_ppermute' is the one-node-per-"
+                    "device special case; runtime='hybrid' uses 'auto' | "
+                    "'sparse_ppermute' | 'dense'")
+            if self.gossip_schedule == "dense" or self.topology.n == 1:
+                self._resolved = gossip.ResolvedGossip("dense")
+            else:
+                self._resolved = gossip.ResolvedGossip(
+                    "sparse", gossip.compile_gossip_schedule(self.topology),
+                    self.mesh, self.node_axis)
+        else:
+            # one resolver for every assembly path (shared with
+            # launch/steps.py); raises eagerly on mismatches
+            self._resolved = gossip.resolve_gossip(
+                self.topology, schedule=self.gossip_schedule, mesh=self.mesh,
+                node_axis=self.node_axis if self.mesh is not None else None)
+        self._validate_scenario(kind)
         self._comm_gamma = None   # resolved on first sight of params
         self._comm_bits = None    # wire bits per site per node per step
         # the execution backend owns compilation (LAZY, with buffer
         # donation) — jitting here would bake options in before the
         # runtime/mesh could influence them
-        from repro.runtime import make_runtime
         self._runtime = make_runtime(self)
+
+    def _validate_scenario(self, kind: str) -> None:
+        """Eager checks for the participation/fault model (DESIGN.md §11) —
+        every unsupported combination raises here with an actionable
+        message, not from inside a jitted step."""
+        sc = self.scenario
+        if sc is None or getattr(sc, "trivial", False):
+            return
+        if sc.n != self.topology.n:
+            raise ValueError(
+                f"scenario is configured for n={sc.n} nodes, topology has "
+                f"n={self.topology.n}")
+        if self.comm is not None:
+            raise ValueError(
+                "scenario fault injection with compressed comm is not "
+                "supported: CHOCO/EF replica states assume every node "
+                "completes every round; run uncompressed (comm=None)")
+        if kind == "sharded" or (kind == "vmap"
+                                 and self._resolved.kind != "dense"):
+            raise ValueError(
+                "scenario fault injection runs on runtime='hybrid' (block-"
+                "sparse masked gossip) or runtime='vmap' with dense gossip;"
+                f" got runtime={kind!r}, gossip={self._resolved.kind!r}")
+        mix = np.asarray(self.topology.mixing)
+        if not np.allclose(mix, np.swapaxes(mix, 1, 2), atol=1e-8):
+            raise ValueError(
+                "scenario fault injection requires symmetric mixing "
+                "(Metropolis weights) so the alive-subgraph renormalization "
+                f"stays doubly stochastic; topology {self.topology.name!r} "
+                "is asymmetric (e.g. one-peer exponential)")
 
     def _comm_setup(self, params):
         if self.comm is not None and self._comm_gamma is None:

@@ -167,6 +167,8 @@ def _smoke_spec(name):
                                    "loop.log_every=0")
     if s.model.name == "mlp":
         s = s.replace(data={"n_data": 512})
+        if s.topology.n > 64:     # thousand-node presets: smoke at n=64
+            s = s.replace(topology={"n": 64})
     elif s.model.name == "resnet20":
         s = s.replace(data={"n_data": 256, "batch": 4},
                       topology={"n": 4})

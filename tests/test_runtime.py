@@ -44,9 +44,10 @@ def _tiny_task(n=4, d=6, c=5):
 # ---------------------------------------------------------------------------
 
 def test_resolve_runtime_rules():
-    assert RUNTIMES == ("auto", "vmap", "sharded")
+    assert RUNTIMES == ("auto", "vmap", "sharded", "hybrid")
     assert resolve_runtime("vmap") == "vmap"
     assert resolve_runtime("sharded") == "sharded"
+    assert resolve_runtime("hybrid") == "hybrid"
     assert resolve_runtime("auto") == "vmap"              # no mesh -> vmap
     with pytest.raises(ValueError, match="unknown runtime"):
         resolve_runtime("pmap")

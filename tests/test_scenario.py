@@ -1,0 +1,394 @@
+"""Thousand-node scenario engine (DESIGN.md §11): generated graphs, the
+participation/fault model, and the node-batched hybrid runtime.
+
+In-process: spectral-gap monotonicity of the generated graphs, the
+``name:param`` topology forms, mask renormalization (doubly stochastic on
+the alive subgraph), scenario determinism, validation errors, and the
+n=1024 partition timing smoke.  Subprocess (forced host devices): hybrid
+trajectory parity with vmap — BIT-identical on the forced-dense path, tight
+allclose on the default block-sparse schedule — plus scenario-seed
+determinism across backends and O(n/devices) per-device state at n=1024.
+"""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro import api
+from repro.core import gossip, optim, topology
+from repro.data import dirichlet_partition
+from repro.scenario import (ScenarioContext, effective_mixing, powerlaw,
+                            smallworld)
+from repro.train import DecentralizedTrainer
+
+
+# ---------------------------------------------------------------------------
+# generated graphs
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n", [64, 256])
+def test_generated_graphs_beat_ring_spectral_gap(n):
+    """The whole point of social-graph topologies at scale: much better
+    connectivity than a ring at matched n (ISSUE satellite)."""
+    gap_ring = topology.ring(n).spectral_gap()
+    for topo in (powerlaw(n, 2.5), smallworld(n, 0.1)):
+        topo.validate()                       # doubly stochastic every phase
+        assert topo.n == n
+        assert topo.spectral_gap() > 2 * gap_ring, (
+            topo.name, topo.spectral_gap(), gap_ring)
+
+
+def test_generated_graphs_deterministic():
+    a, b = powerlaw(128, 2.5), powerlaw(128, 2.5)
+    assert np.array_equal(a.mixing, b.mixing)
+    c = powerlaw(128, 2.5, seed=1)
+    assert not np.array_equal(a.mixing, c.mixing)
+
+
+def test_get_topology_param_forms():
+    assert topology.get_topology("powerlaw:2.5", 64).n == 64
+    assert topology.get_topology("smallworld:0.1", 64).n == 64
+    # bare parameterized names use the documented defaults
+    assert np.array_equal(topology.get_topology("powerlaw", 64).mixing,
+                          topology.get_topology("powerlaw:2.5", 64).mixing)
+
+
+def test_get_topology_errors_list_valid_forms():
+    with pytest.raises(ValueError, match=r"powerlaw:<param>"):
+        topology.get_topology("nope", 8)
+    with pytest.raises(ValueError, match="takes no parameter"):
+        topology.get_topology("ring:0.5", 8)
+    with pytest.raises(ValueError, match="not a number"):
+        topology.get_topology("powerlaw:abc", 8)
+
+
+# ---------------------------------------------------------------------------
+# mask renormalization math
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("topo_fn", [
+    lambda: topology.ring(12),
+    lambda: smallworld(12, 0.3),
+    lambda: topology.get_topology("powerlaw:2.5", 16),
+], ids=["ring", "smallworld", "powerlaw"])
+def test_effective_mixing_doubly_stochastic(topo_fn):
+    """Dropping nodes keeps the renormalized matrix doubly stochastic on the
+    alive subgraph, with exact identity rows for the dropped nodes."""
+    topo = topo_fn()
+    rng = np.random.default_rng(0)
+    for trial in range(4):
+        m = (rng.random(topo.n) > 0.3).astype(np.float64)
+        w_eff = effective_mixing(topo.w(0), m)
+        assert topology.is_doubly_stochastic(w_eff)
+        for i in np.nonzero(m == 0)[0]:
+            ref = np.zeros(topo.n)
+            ref[i] = 1.0
+            np.testing.assert_allclose(w_eff[i], ref, atol=1e-12)
+            np.testing.assert_allclose(w_eff[:, i], ref, atol=1e-12)
+        # alive subgraph still mixes: gap well-defined (>= 0) and positive
+        # whenever >1 alive node remains connected through kept edges
+        assert topology.spectral_gap(w_eff) >= 0.0
+
+
+def test_effective_mixing_all_alive_is_identity_transform():
+    topo = topology.ring(8)
+    np.testing.assert_allclose(effective_mixing(topo.w(0), np.ones(8)),
+                               topo.w(0), atol=1e-12)
+
+
+# ---------------------------------------------------------------------------
+# scenario masks: deterministic, seed-keyed
+# ---------------------------------------------------------------------------
+
+def test_scenario_masks_deterministic():
+    sc = ScenarioContext(n=32, seed=5, participation=0.7, dropout=0.2,
+                         churn_window=3, straggler=0.1)
+    u1, m1 = jax.tree.map(np.asarray, sc.masks(4))
+    u2, m2 = jax.tree.map(np.asarray, sc.masks(4))
+    assert np.array_equal(u1, u2) and np.array_equal(m1, m2)
+    assert set(np.unique(u1)) <= {0.0, 1.0}
+    assert np.all(m1 <= u1)                   # stragglers still update
+    u3, _ = sc.masks(5)
+    assert not np.array_equal(u1, np.asarray(u3))
+    other = ScenarioContext(n=32, seed=6, participation=0.7, dropout=0.2,
+                            churn_window=3, straggler=0.1)
+    assert not np.array_equal(u1, np.asarray(other.masks(4)[0]))
+
+
+def test_scenario_churn_window_holds_membership():
+    sc = ScenarioContext(n=64, seed=0, dropout=0.3, churn_window=4)
+    masks = [np.asarray(sc.masks(t)[0]) for t in range(8)]
+    for t in range(1, 4):                     # same epoch -> same membership
+        assert np.array_equal(masks[0], masks[t])
+    assert not np.array_equal(masks[0], masks[4])   # epoch rolls over
+
+
+def test_trivial_scenario_is_skipped():
+    sc = ScenarioContext(n=8)
+    assert sc.trivial
+    assert not ScenarioContext(n=8, dropout=0.1).trivial
+
+
+# ---------------------------------------------------------------------------
+# validation: unsupported combinations raise eagerly
+# ---------------------------------------------------------------------------
+
+def _mini(loss=True):
+    def init_fn(key):
+        return ({"w": jax.random.normal(key, (4, 3))}, {})
+
+    def loss_fn(p, ms, batch, rng):
+        import jax.numpy as jnp
+        return jnp.sum(p["w"] ** 2), ({}, {})
+
+    return init_fn, loss_fn
+
+
+def test_scenario_rejects_compressed_comm():
+    from repro.comm import make_comm
+    _, loss_fn = _mini()
+    with pytest.raises(ValueError, match="compressed comm"):
+        DecentralizedTrainer(
+            loss_fn, optim.make_optimizer("dsgd", lr=0.1), topology.ring(8),
+            comm=make_comm("topk:0.5"),
+            scenario=ScenarioContext(n=8, dropout=0.1))
+
+
+def test_scenario_rejects_asymmetric_mixing():
+    _, loss_fn = _mini()
+    with pytest.raises(ValueError, match="symmetric"):
+        DecentralizedTrainer(
+            loss_fn, optim.make_optimizer("dsgd", lr=0.1),
+            topology.one_peer_exponential(8),
+            scenario=ScenarioContext(n=8, dropout=0.1))
+
+
+def test_scenario_rejects_n_mismatch():
+    _, loss_fn = _mini()
+    with pytest.raises(ValueError, match="n=16"):
+        DecentralizedTrainer(
+            loss_fn, optim.make_optimizer("dsgd", lr=0.1), topology.ring(8),
+            scenario=ScenarioContext(n=16, dropout=0.1))
+
+
+def test_scenario_spec_validation():
+    spec = api.presets.get("n1024_churn")     # validates on get()
+    assert spec.scenario.enabled
+    spec.override("scenario.dropout=0.2").validate()   # --set-able
+    with pytest.raises(ValueError):
+        spec.override("scenario.participation=0.0").validate()
+    with pytest.raises(ValueError, match="runtime"):
+        spec.override("runtime=sharded").validate()
+    with pytest.raises(ValueError, match="comm"):
+        spec.override("comm.compressor=topk:0.1").validate()
+
+
+# ---------------------------------------------------------------------------
+# partition at n=1024: the timing smoke (ISSUE satellite)
+# ---------------------------------------------------------------------------
+
+def test_dirichlet_partition_n1024_fast():
+    rng = np.random.default_rng(0)
+    y = rng.integers(0, 20, size=100_000)
+    t0 = time.time()
+    parts = dirichlet_partition(y, 1024, 0.1, seed=0, min_per_client=2,
+                                ensure_min="redistribute")
+    elapsed = time.time() - t0
+    assert elapsed < 2.0, f"n=1024 partition took {elapsed:.2f}s"
+    assert len(parts) == 1024
+    sizes = np.array([len(p) for p in parts])
+    assert sizes.min() >= 2 and sizes.sum() == len(y)
+    assert len(np.unique(np.concatenate(parts))) == len(y)   # a partition
+
+
+# ---------------------------------------------------------------------------
+# spec path: scenario metrics + heterogeneity surface in Result
+# ---------------------------------------------------------------------------
+
+def test_run_surfaces_heterogeneity_and_alive_metrics():
+    spec = api.presets.get("n1024_churn").override(
+        "topology.n=32", "data.n_data=512", "loop.steps=2",
+        "eval.enabled=False", "telemetry.enabled=True",
+        "telemetry.sink=memory")
+    res = api.run(spec, log_fn=lambda *_: None)
+    assert res.heterogeneity is not None
+    assert 0.0 < res.heterogeneity["mean_tv"] <= 1.0
+    assert "heterogeneity" in res.to_dict()
+    h = res.history[-1]
+    assert 0.0 < h["alive_frac"] <= 1.0
+    assert h["mix_frac"] <= h["alive_frac"]
+    # the scenario telemetry collector replays the partition TV per row
+    assert res.telemetry is not None
+
+
+# ---------------------------------------------------------------------------
+# hybrid runtime: block compilation sanity (in-process, single device)
+# ---------------------------------------------------------------------------
+
+def test_compile_block_schedule_shapes():
+    topo = topology.ring(16)
+    sched = gossip.compile_gossip_schedule(topo)
+    bs = gossip.compile_block_schedule(sched, 4)
+    assert (bs.n, bs.d, bs.b) == (16, 4, 4)
+    for phase in bs.phases:
+        if phase.dense:
+            continue
+        assert phase.self_weight.shape == (4, 4)
+        for rnd in phase.rounds:
+            for grp in rnd.groups:
+                assert grp.src_local.shape == (4, 4)
+                assert grp.recv_w.shape == (4, 4)
+    with pytest.raises(ValueError, match="dividing"):
+        gossip.compile_block_schedule(sched, 3)
+
+
+# ---------------------------------------------------------------------------
+# hybrid <-> vmap parity + scenario determinism (subprocess: host devices)
+# ---------------------------------------------------------------------------
+
+def _run_sub(script: str) -> subprocess.CompletedProcess:
+    return subprocess.run(
+        [sys.executable, "-c", script], capture_output=True, text=True,
+        timeout=900, env={**os.environ, "PYTHONPATH": "src"},
+        cwd=os.path.dirname(os.path.dirname(__file__)))
+
+
+_HYBRID_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import numpy as np
+import jax, jax.numpy as jnp
+from repro.core import optim, topology
+from repro.launch.mesh import make_debug_mesh
+from repro.runtime import HybridRuntime
+from repro.scenario import ScenarioContext
+from repro.train import DecentralizedTrainer, run_training
+
+
+def init_fn(key):
+    k1, _ = jax.random.split(key)
+    return ({"w": jax.random.normal(k1, (6, 5)) * 0.3,
+             "b": jnp.zeros(5)}, {})
+
+
+def loss_fn(p, ms, batch, rng):
+    xb, yb = batch
+    logits = xb @ p["w"] + p["b"]
+    ce = jnp.mean(jax.nn.logsumexp(logits, -1) - jnp.take_along_axis(
+        logits, yb[:, None].astype(jnp.int32), -1)[:, 0])
+    return ce, ({}, {})
+
+
+def batches(n, steps, seed=0):
+    rng = np.random.default_rng(seed)
+    return [(rng.normal(size=(n, 4, 6)).astype(np.float32),
+             rng.integers(0, 5, size=(n, 4))) for _ in range(steps)]
+
+
+mesh = make_debug_mesh(shape=(4,), axes=("data",))
+
+
+def run(topo, *, use_mesh=False, runtime="auto", gossip_schedule="auto",
+        scenario=None, method="qg_dsgdm_n", steps=6):
+    tr = DecentralizedTrainer(
+        loss_fn, optim.make_optimizer(method, lr=0.1), topo,
+        mesh=mesh if use_mesh else None, node_axis="data", runtime=runtime,
+        gossip_schedule=gossip_schedule, scenario=scenario)
+    st = tr.init(jax.random.PRNGKey(0), init_fn)
+    st, hist = run_training(tr, st, iter(batches(topo.n, steps)), steps,
+                            rng=jax.random.PRNGKey(1), log_every=1,
+                            log_fn=lambda *_: None)
+    return tr, st, hist
+
+
+def leaves(st):
+    return [np.asarray(l) for l in jax.tree.leaves(st.params)]
+
+
+topo = topology.ring(16)
+
+# 1) THE acceptance criterion: hybrid on the forced-dense gossip path is
+#    BIT-identical to vmap at n=16 on 4 host devices (no faults)
+_, st_v, h_v = run(topo)
+tr_h, st_h, _ = run(topo, use_mesh=True, runtime="hybrid",
+                    gossip_schedule="dense")
+assert isinstance(tr_h._runtime, HybridRuntime)
+for a, b in zip(leaves(st_v), leaves(st_h)):
+    assert np.array_equal(a, b), "hybrid(dense) != vmap bitwise"
+print("BITWISE_OK")
+
+# 2) default block-sparse schedule: tight allclose (fp reassociation only)
+_, st_s, h_s = run(topo, use_mesh=True, runtime="hybrid")
+for hv, hs in zip(h_v, h_s):
+    for k in hv:
+        np.testing.assert_allclose(hv[k], hs[k], rtol=2e-4, atol=1e-5,
+                                   err_msg=f"{k} @ {hv['step']}")
+for a, b in zip(leaves(st_v), leaves(st_s)):
+    np.testing.assert_allclose(a, b, atol=1e-5)
+print("SPARSE_OK")
+
+# 3) generated graph through the block executors
+topo_sw = topology.get_topology("smallworld:0.3", 16)
+_, st_vw, _ = run(topo_sw)
+_, st_sw, _ = run(topo_sw, use_mesh=True, runtime="hybrid")
+for a, b in zip(leaves(st_vw), leaves(st_sw)):
+    np.testing.assert_allclose(a, b, atol=1e-5)
+print("GRAPH_OK")
+
+# 4) scenario determinism: same scenario seed -> identical alive masks and
+#    trajectories, per-backend bitwise, cross-backend tight
+sc = ScenarioContext(n=16, seed=11, participation=0.8, dropout=0.2,
+                     churn_window=2, straggler=0.1)
+_, st_v1, h_v1 = run(topo, scenario=sc)
+_, st_v2, _ = run(topo, scenario=sc)
+for a, b in zip(leaves(st_v1), leaves(st_v2)):
+    assert np.array_equal(a, b), "vmap scenario rerun not bitwise"
+_, st_h1, h_h1 = run(topo, use_mesh=True, runtime="hybrid", scenario=sc)
+_, st_h2, _ = run(topo, use_mesh=True, runtime="hybrid", scenario=sc)
+for a, b in zip(leaves(st_h1), leaves(st_h2)):
+    assert np.array_equal(a, b), "hybrid scenario rerun not bitwise"
+for hv, hh in zip(h_v1, h_h1):
+    assert hv["alive_frac"] == hh["alive_frac"], (hv, hh)
+    assert hv["mix_frac"] == hh["mix_frac"], (hv, hh)
+    np.testing.assert_allclose(hv["loss"], hh["loss"], rtol=2e-4, atol=1e-5)
+for a, b in zip(leaves(st_v1), leaves(st_h1)):
+    np.testing.assert_allclose(a, b, atol=1e-5)
+alive = [h["alive_frac"] for h in h_h1]
+assert min(alive) < 1.0, "faults never fired"
+_, st_h3, _ = run(topo, use_mesh=True, runtime="hybrid",
+                  scenario=ScenarioContext(n=16, seed=12, participation=0.8,
+                                           dropout=0.2, churn_window=2,
+                                           straggler=0.1))
+assert any(not np.array_equal(a, b)
+           for a, b in zip(leaves(st_h1), leaves(st_h3))), \
+    "scenario seed had no effect"
+print("SCENARIO_OK")
+
+# 5) n=1024 on 4 devices: runs, and per-device state is exactly total/4
+tr_n, st_n, _ = run(topology.ring(1024), use_mesh=True, runtime="hybrid",
+                    steps=2)
+per_dev = {}
+for leaf in jax.tree.leaves(st_n.params):
+    for sh in leaf.addressable_shards:
+        per_dev[sh.device] = per_dev.get(sh.device, 0) + sh.data.nbytes
+total = sum(l.nbytes for l in jax.tree.leaves(st_n.params))
+assert set(per_dev.values()) == {total // 4}, (per_dev, total)
+print("N1024_OK")
+print("SCENARIO_PARITY_OK")
+"""
+
+
+def test_hybrid_parity_and_scenario_determinism():
+    """Subprocess acceptance: hybrid == vmap bitwise on forced-dense gossip
+    at n=16 / 4 host devices; tight allclose on block-sparse; scenario-seed
+    determinism per backend (bitwise) and across backends (exact masks);
+    n=1024 hybrid with per-device state exactly total/n_devices."""
+    res = _run_sub(_HYBRID_SCRIPT)
+    assert "SCENARIO_PARITY_OK" in res.stdout, \
+        res.stdout[-2000:] + res.stderr[-3000:]
