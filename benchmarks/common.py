@@ -27,7 +27,7 @@ def bench_spec(
     n_data: int = 4096, noise: float = 2.5, n_classes: int = 20,
     opt_kwargs: dict | None = None, comm: str | None = None,
     comm_gamma: float | None = None, comm_ef: bool = False,
-    runtime: str = "auto",
+    runtime: str = "auto", overlap: str = "none",
 ) -> api.ExperimentSpec:
     """The calibrated benchmark grid point as a spec.
 
@@ -40,6 +40,7 @@ def bench_spec(
         name=f"bench/{method}/{topo_name}{n_nodes}/alpha{alpha}",
         seed=seed,
         runtime=runtime,
+        overlap=overlap,
         data=api.DataSpec(dataset="classification", alpha=alpha, batch=batch,
                           n_data=n_data, n_classes=n_classes, hw=8,
                           noise=noise, train_frac=0.5),

@@ -216,15 +216,17 @@ def runtime(quick=False):
     """Execution-backend table (DESIGN.md §9): vmap (node-stacked, no mesh),
     vmap_mesh (node-stacked + per-mix shard_map — the PR-3 boundary-crossing
     path) and sharded (whole step inside ONE shard_map) on the calibrated
-    qg_dsgdm_n grid point at ring n in {8, 16, 32}.  ``state_bytes`` is the
-    peak per-device TrainState footprint — O(n) for the vmap rows, O(1) for
-    sharded; the CI gate holds sharded <= vmap_mesh us/step at ring-16 and
-    sharded state bytes constant in n.  Runs in a subprocess because the
-    forced host-device count must precede jax init."""
+    qg_dsgdm_n grid point at ring n in {8, 16, 32}, plus the overlap row
+    (sharded with ``overlap='delayed_1'`` — DESIGN.md §12).  ``state_bytes``
+    is the peak per-device TrainState footprint — O(n) for the vmap rows,
+    O(1) for sharded; the CI gates hold sharded <= vmap_mesh us/step at
+    ring-16, sharded state bytes constant in n, and overlap steps/s >=
+    sharded at ring-16/32.  Runs in a subprocess because the forced
+    host-device count must precede jax init."""
     import subprocess
     import sys
 
-    ns = [8, 16] if quick else [8, 16, 32]
+    ns = [8, 16, 32]      # ring-32 also feeds the overlap>=sharded CI gate
     spec = {"devices": max(ns), "ns": ns,
             "steps": 16 if quick else 32, "chunk": 8,
             "batch": 8, "n_data": 1024 if quick else 2048}

@@ -205,6 +205,11 @@ class ExperimentSpec:
                                       # build(spec, mesh=...) whose
                                       # gossip.node_axis carries n (sharded)
                                       # or a divisor of n (hybrid blocks)
+    overlap: str = "none"             # step pipelining (DESIGN.md §12):
+                                      # none | delayed_1 (one-step-stale
+                                      # gossip issued before the next
+                                      # round's grad; a DIFFERENT
+                                      # trajectory — see runtime/overlap.py)
     data: DataSpec = dataclasses.field(default_factory=DataSpec)
     topology: TopologySpec = dataclasses.field(default_factory=TopologySpec)
     optim: OptimSpec = dataclasses.field(default_factory=OptimSpec)
@@ -299,10 +304,28 @@ class ExperimentSpec:
                 f"{self.comm.backend!r}")
         # runtime (the mesh itself is a build(..., mesh=) argument; the
         # sharded backend re-validates axis x n against the actual mesh)
-        from repro.runtime import RUNTIMES
+        from repro.runtime import OVERLAPS, RUNTIMES
         if self.runtime not in RUNTIMES:
             err("runtime", f"unknown runtime {self.runtime!r}; valid: "
                 f"{' | '.join(RUNTIMES)}")
+        # overlap (DESIGN.md §12): trainer re-checks, but fire here so a
+        # spec review catches the invalid combination before any build
+        if self.overlap not in OVERLAPS:
+            err("overlap", f"unknown overlap {self.overlap!r}; valid: "
+                f"{' | '.join(OVERLAPS)}")
+        if self.overlap != "none":
+            if self.comm.compressor != "dense":
+                err("overlap", "delayed gossip with compressed comm is not "
+                    "supported (the CHOCO replica exchange defines its own "
+                    "buffer protocol); set comm.compressor='dense'")
+            if self.scenario.enabled and (
+                    self.scenario.participation < 1.0
+                    or self.scenario.dropout > 0.0
+                    or self.scenario.straggler > 0.0):
+                err("overlap", "delayed gossip with scenario fault "
+                    "injection is not supported (stale buffers of dropped "
+                    "nodes would re-inject discarded state); disable the "
+                    "scenario")
         # gossip schedule (mesh-dependent checks re-run at build with the
         # actual mesh; the mesh-independent ones fire here)
         if self.gossip.schedule not in GOSSIP_SCHEDULES:

@@ -63,6 +63,7 @@ __all__ = [
     "consensus_distance",
     "node_mean",
     "mask_renormalize",
+    "BlockMask",
     "BlockSchedule",
     "compile_block_schedule",
     "apply_block_schedule_local",
@@ -623,6 +624,23 @@ def mask_renormalize(w: jax.Array | np.ndarray,
 
 
 @dataclasses.dataclass(frozen=True)
+class BlockMask:
+    """Block-local view of a scenario alive mask (DESIGN.md §11): the hybrid
+    runtime derives only its device's rows, so the executors never require a
+    materialized ``[n]`` mask.  ``local`` is this device's ``[b]`` slice;
+    ``of(ids)`` derives the mask rows for arbitrary global node ids (the
+    per-node fold_in keying in ``repro.scenario`` makes any subset
+    computable); ``full()`` materializes the whole ``[n]`` mask — only the
+    dense all-gather fallback, which contracts global rows anyway, pays
+    for it.  A plain traced ``[n]`` array is still accepted everywhere a
+    ``BlockMask`` is (the vmap path and older callers)."""
+
+    local: Any                    # [b] this device's alive rows (traced)
+    of: Any                       # ids [k] -> [k] mask rows (traced fn)
+    full: Any                     # () -> [n] global mask (dense fallback)
+
+
+@dataclasses.dataclass(frozen=True)
 class BlockGroup:
     """Edges of one round sharing one device offset.  ``recv_w[dev, slot]``
     is 0 for dst slots this group does not feed (their ``src_local`` /
@@ -745,8 +763,12 @@ def _dense_block_contract(w, x: jax.Array, *, axis_name: str, d: int, b: int,
     g = g.reshape((n,) + x.shape[1:])
     rows = jnp.asarray(w, cdt).reshape(d, b, n)[i]      # [b, n]
     if mask is not None:
-        m = jnp.asarray(mask, cdt)
-        m_loc = jax.lax.dynamic_slice_in_dim(m, i * b, b, axis=0)
+        if isinstance(mask, BlockMask):
+            m = jnp.asarray(mask.full(), cdt)
+            m_loc = jnp.asarray(mask.local, cdt)
+        else:
+            m = jnp.asarray(mask, cdt)
+            m_loc = jax.lax.dynamic_slice_in_dim(m, i * b, b, axis=0)
         eye = jnp.asarray(np.eye(n).reshape(d, b, n), cdt)[i]
         offd = rows * (m_loc[:, None] * m[None, :]) * (1.0 - eye)
         diag = m_loc * (1.0 - offd.sum(axis=-1)) + (1.0 - m_loc)
@@ -775,17 +797,24 @@ def _apply_block_phase_local(x: jax.Array, phase: BlockPhase, *,
     i = jax.lax.axis_index(axis_name)
     cdt = jnp.promote_types(x.dtype, jnp.float32)
     bshape = (b,) + (1,) * (x.ndim - 1)
-    m = m_loc = None
+    m_loc = mask_of = None
     if mask is not None:
-        m = jnp.asarray(mask, cdt)
-        m_loc = jax.lax.dynamic_slice_in_dim(m, i * b, b, axis=0)
+        if isinstance(mask, BlockMask):
+            # block-local: this device's rows plus on-demand peer rows —
+            # never a materialized [n] mask
+            m_loc = jnp.asarray(mask.local, cdt)
+            mask_of = lambda ids: jnp.asarray(mask.of(ids), cdt)
+        else:
+            m = jnp.asarray(mask, cdt)
+            m_loc = jax.lax.dynamic_slice_in_dim(m, i * b, b, axis=0)
+            mask_of = lambda ids: m[ids]
     sw = jnp.asarray(phase.self_weight, cdt)[i]          # [b]
     if mask is not None:
         lost = jnp.zeros((b,), cdt)
         for rnd in phase.rounds:
             for grp in rnd.groups:
                 w_g = jnp.asarray(grp.recv_w, cdt)[i]
-                m_src = m[jnp.asarray(grp.src_node)[i]]
+                m_src = mask_of(jnp.asarray(grp.src_node)[i])
                 lost = lost + w_g * (1.0 - m_src)
         sw = m_loc * (sw + lost) + (1.0 - m_loc)
     out = x.astype(cdt) * sw.reshape(bshape)
@@ -800,7 +829,7 @@ def _apply_block_phase_local(x: jax.Array, phase: BlockPhase, *,
                     recv = jax.lax.ppermute(x, axis_name, perm=perm)
             w_g = jnp.asarray(grp.recv_w, cdt)[i]        # [b]
             if mask is not None:
-                w_g = w_g * m_loc * m[jnp.asarray(grp.src_node)[i]]
+                w_g = w_g * m_loc * mask_of(jnp.asarray(grp.src_node)[i])
             contrib = jnp.take(recv, jnp.asarray(grp.src_local)[i],
                                axis=0).astype(cdt) * w_g.reshape(bshape)
             acc = contrib if acc is None else acc + contrib

@@ -1,0 +1,44 @@
+"""Multi-process (multi-host) launch helper (DESIGN.md §12).
+
+One call per process, BEFORE any computation touches devices:
+
+    from repro.launch import distributed
+    distributed.initialize(coordinator="10.0.0.1:8476",
+                           num_processes=4, process_id=rank)
+
+After it returns, ``jax.devices()`` is the global device list,
+``repro.launch.mesh`` builds process-major meshes over it, and the sharded/
+hybrid runtimes assemble global arrays from per-host data
+(``ShardedRuntime.put_batch``).
+
+On the CPU backend jax refuses multi-process computations unless a
+cross-host collectives implementation is configured; we select ``gloo``
+(bundled with jaxlib) before ``jax.distributed.initialize`` so localhost
+smoke runs and CPU clusters work out of the box.  TPU/GPU backends ignore
+the setting and use their native interconnect.
+"""
+from __future__ import annotations
+
+__all__ = ["initialize"]
+
+
+def initialize(coordinator: str, num_processes: int, process_id: int,
+               *, cpu_collectives: str = "gloo") -> None:
+    """Wire this process into a ``jax.distributed`` service.
+
+    ``coordinator`` is ``host:port`` of process 0; every process (including
+    the coordinator itself) calls with the same address and its own
+    ``process_id``.  Call before creating arrays; pair with
+    ``jax.distributed.shutdown()`` at exit for a clean teardown."""
+    import jax
+
+    if cpu_collectives:
+        # must be set after `import jax` but before the backend client is
+        # instantiated (probing jax.default_backend() here would itself
+        # instantiate it, pre-gloo — so set unconditionally: non-CPU
+        # backends ignore the flag)
+        jax.config.update("jax_cpu_collectives_implementation",
+                          cpu_collectives)
+    jax.distributed.initialize(coordinator_address=coordinator,
+                               num_processes=num_processes,
+                               process_id=process_id)

@@ -3,12 +3,66 @@ import time).
 
 Target hardware: TPU v5e, 256 chips/pod (16x16), 2 pods = 512 chips.
 On this CPU container the dry-run forces 512 host platform devices before any
-jax import (see launch/dryrun.py lines 1-2)."""
+jax import (see launch/dryrun.py lines 1-2).
+
+Multi-process correctness (DESIGN.md §12): under ``jax.distributed`` every
+process sees the GLOBAL device list, but a mesh that shards host-fed data
+must be laid out PROCESS-MAJOR — each process's addressable devices occupy a
+contiguous block of the node axis, so the per-host rows a process feeds
+(``jax.make_array_from_callback``) land on its own devices.  ``jax.devices()``
+already interleaves by process on some backends; :func:`_device_grid` builds
+the grid explicitly from each process's local device list instead of trusting
+that order.
+"""
 from __future__ import annotations
 
 import math
 
 import numpy as np
+
+
+def _device_grid(n: int, what: str):
+    """The first ``n`` global devices in PROCESS-MAJOR order, as a flat
+    numpy object array — the canonical device layout both mesh builders
+    reshape.  Raises actionable errors when the process/device arithmetic
+    cannot work."""
+    import jax
+
+    procs = jax.process_count()
+    devices = jax.devices()
+    if len(devices) < n:
+        hint = (
+            "the dry-run entry point must set "
+            "XLA_FLAGS=--xla_force_host_platform_device_count=<count> "
+            "before any jax import" if procs == 1 else
+            "each process must be started with jax.distributed.initialize("
+            "coordinator_address=, num_processes=, process_id=) and enough "
+            "local devices (XLA_FLAGS=--xla_force_host_platform_device_"
+            "count=<count> per host) that the processes together cover the "
+            "mesh")
+        raise RuntimeError(
+            f"need {n} devices for {what}, have {len(devices)} "
+            f"across {procs} process(es) — {hint}")
+    if procs == 1:
+        return np.array(devices[:n])
+    if n % procs:
+        raise RuntimeError(
+            f"{what} needs {n} devices split over {procs} processes, but "
+            f"{n} % {procs} != 0 — launch a process count that divides the "
+            "mesh size (jax.distributed.initialize(num_processes=...))")
+    per = n // procs
+    grid = []
+    for p in range(procs):
+        local = [d for d in devices if d.process_index == p]
+        if len(local) < per:
+            raise RuntimeError(
+                f"{what} needs {per} devices from process {p}, which has "
+                f"{len(local)} — every process must expose the same local "
+                "device count (set XLA_FLAGS=--xla_force_host_platform_"
+                f"device_count={per} on each host before jax.distributed."
+                "initialize)")
+        grid.extend(local[:per])
+    return np.array(grid)
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -17,25 +71,16 @@ def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
     n = math.prod(shape)
-    devices = jax.devices()
-    if len(devices) == n:
-        return jax.make_mesh(shape, axes)
-    if len(devices) < n:
-        raise RuntimeError(
-            f"need {n} devices for mesh {shape}, have {len(devices)} — "
-            "the dry-run entry point must set "
-            "XLA_FLAGS=--xla_force_host_platform_device_count=512 before "
-            "any jax import")
-    # more devices than needed (e.g. single-pod mesh on the 512-device
-    # dry-run host): take a contiguous prefix
-    sub = np.array(devices[:n]).reshape(shape)
-    return jax.sharding.Mesh(sub, axes)
+    grid = _device_grid(n, f"mesh {shape}")
+    return jax.sharding.Mesh(grid.reshape(shape), axes)
 
 
 def make_debug_mesh(shape=(2, 2), axes=("data", "model")):
-    """Small mesh for tests (run in a subprocess with forced host devices)."""
+    """Small mesh for tests (run in a subprocess with forced host devices).
+    Works under ``jax.distributed`` too: the grid is process-major, so a
+    2-process launch puts the first half of the node axis on process 0."""
     import jax
 
     n = math.prod(shape)
-    sub = np.array(jax.devices()[:n]).reshape(shape)
-    return jax.sharding.Mesh(sub, axes)
+    grid = _device_grid(n, f"mesh {shape}")
+    return jax.sharding.Mesh(grid.reshape(shape), axes)

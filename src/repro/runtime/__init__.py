@@ -26,11 +26,12 @@ from typing import Any
 
 from .base import Runtime
 from .hybrid import HybridRuntime
+from .overlap import OVERLAPS
 from .sharded import ShardedRuntime
 from .vmap import VmapRuntime
 
 __all__ = ["Runtime", "VmapRuntime", "ShardedRuntime", "HybridRuntime",
-           "RUNTIMES", "resolve_runtime", "make_runtime"]
+           "RUNTIMES", "OVERLAPS", "resolve_runtime", "make_runtime"]
 
 RUNTIMES = ("auto", "vmap", "sharded", "hybrid")
 
@@ -62,8 +63,9 @@ def make_runtime(trainer) -> Runtime:
     kind = resolve_runtime(trainer.runtime, mesh=trainer.mesh,
                            node_axis=trainer.node_axis,
                            n=trainer.topology.n)
+    overlap = getattr(trainer, "overlap", "none")
     if kind == "sharded":
-        return ShardedRuntime(trainer)
+        return ShardedRuntime(trainer, overlap=overlap)
     if kind == "hybrid":
-        return HybridRuntime(trainer)
-    return VmapRuntime(trainer)
+        return HybridRuntime(trainer, overlap=overlap)
+    return VmapRuntime(trainer, overlap=overlap)

@@ -20,6 +20,22 @@ a handful of node-axis hooks (``_node_rngs``, ``_node_mean_scalar``,
 shared verbatim, which is what makes the cross-backend trajectory-parity
 pins in tests/test_runtime.py hold.
 
+The step is an explicit three-stage PIPELINE (DESIGN.md §12):
+
+    launch_mix  — issue the gossip of the one-step-stale exchange buffers
+                  (``overlap='delayed_1'`` only; a no-op synchronously);
+    compute     — per-node loss/grad;
+    finish_mix  — the transform-stage chain: local update + mix.  Under
+                  overlap the topology mix sites consume the in-flight
+                  trees from launch_mix instead of gossiping fresh values.
+
+Synchronously the stages compose to the exact pre-refactor graph (the
+trajectory pins hold bit-for-bit).  With ``overlap='delayed_1'`` the
+launch-stage collectives have no data dependency on the round's gradients,
+so the compiled ppermute schedule overlaps the backward pass — the
+``repro.runtime.overlap`` module holds the delayed-mix math and buffer
+capture.
+
 Compilation is LAZY and owned by the runtime: the trainer never jits in
 ``__post_init__`` anymore, so backends control jit options — in particular
 ``donate_argnums=0``: the incoming :class:`TrainState` buffers are donated
@@ -68,6 +84,7 @@ class Runtime:
     trainer: Any
     name: str = "base"
     axis_name: str | None = None    # mesh node axis (sharded backend only)
+    overlap: str = "none"           # 'none' | 'delayed_1' (DESIGN.md §12)
 
     def __post_init__(self):
         # one compiled fn per (step|chunk) x (plain|telemetry) — the
@@ -75,6 +92,10 @@ class Runtime:
         # default path compiles exactly what it always did
         self._step_fns = {}
         self._chunk_fns = {}
+        # non-donating probe fns for tm.gossip_wait_ms (built on first use)
+        self._probe_fns = None
+        from repro.telemetry.trace import StepTimer
+        self.gossip_timer = StepTimer()
 
     # -- node-axis hooks (vmap semantics by default) -------------------------
     def _node_rngs(self, rng, n: int):
@@ -118,11 +139,105 @@ class Runtime:
                 "gossip) or runtime='hybrid'")  # trainer validates earlier
         return r.mix_fn(w_ref=w, t=t)
 
+    def _scenario_masks(self, sc, t):
+        """This round's scenario masks in this backend's carve-up:
+        ``(update mask for the LOCAL nodes, mix-mask object for the mix
+        executors, exact (alive_frac, mix_frac) scalars)``.
+
+        Base/vmap derives the full ``[n]`` masks; the hybrid override
+        derives only its device's ``b = n/d`` block (the per-node fold_in
+        keying in ``repro.scenario`` makes any id subset computable without
+        materializing ``[n]``).  The fractions are exact sums of 0/1 floats
+        divided by n — bit-identical whichever carve-up computed them (the
+        vmap-vs-hybrid equality pin in tests/test_scenario.py)."""
+        u, m = sc.masks(t)
+        n = sc.n
+        fracs = (jnp.sum(u) / n, jnp.sum(m) / n)
+        return self._local_update_mask(u), m, fracs
+
+    def _gossip_tree(self, tree, w, t):
+        """One synchronous application of the topology gossip to an
+        arbitrary tree, in this backend's layout — the launch-stage
+        primitive the overlap mode issues against the stale buffers."""
+        mi = self._mix_impl(w, t)
+        if mi is None:      # vmap dense: the optimizer-default contraction
+            return gossip.mix_dense(w, tree)
+        return mi(w, tree)
+
+    # -- the step pipeline (shared by every backend) --------------------------
+    def _stage_launch_mix(self, state, w):
+        """Pipeline stage 1 — issue the mix.  Synchronous mode returns None
+        (the mix rides finish_mix on fresh values).  Overlap mode gossips
+        the one-step-stale exchange buffers ``state.mix_buf`` NOW: these
+        collectives depend only on the previous step's output, never on
+        this round's gradients, so the schedule can run under compute."""
+        if self.overlap == "none" or state.mix_buf is None:
+            return None
+        with jax.named_scope("tm/launch_mix"):
+            return [self._gossip_tree(s, w, state.t) for s in state.mix_buf]
+
+    def _stage_compute(self, state, batch, rng, n):
+        """Pipeline stage 2 — per-node loss/grad on this backend's layout:
+        node-stacked ``[n, ...]`` leaves (vmap) or local blocks inside
+        shard_map (sharded/hybrid)."""
+        rngs = self._node_rngs(rng, n)
+        grad_fn = jax.value_and_grad(self.trainer.loss_fn, has_aux=True)
+        with jax.named_scope("tm/grad"):
+            (loss, (new_ms, metrics)), grads = jax.vmap(grad_fn)(
+                state.params, state.model_state, batch, rngs)
+        return loss, new_ms, metrics, grads
+
+    def _stage_finish_mix(self, state, grads, w, lr, rng, mix_mask, inflight,
+                          n):
+        """Pipeline stage 3 — the transform-stage chain (local update + mix)
+        with the right mix hook installed: the backend's synchronous mix, a
+        CHOCO compressed round, or — when ``inflight`` carries launch-stage
+        results — the delayed consumer that applies ``tree + (W s - s)`` and
+        re-arms the exchange buffers.  Returns
+        ``(new_params, new_opt, new_comm, new_mix_buf)``."""
+        tr = self.trainer
+        opt = tr.optimizer
+        new_comm = state.comm_state
+        new_buf = state.mix_buf
+        if inflight is not None:
+            # overlap: topology sites consume the in-flight stale mixes and
+            # deposit this round's trees as the next exchange (validation
+            # forbids combining with compressed comm / scenarios)
+            from repro.runtime.overlap import make_delayed_mix_fn
+            new_buf = list(state.mix_buf)
+            opt = dataclasses.replace(opt, mix_fn=make_delayed_mix_fn(
+                state.mix_buf, inflight, new_buf, w_ref=w,
+                fallback=self._mix_impl(w, state.t)))
+        else:
+            mix_impl = self._mix_impl(w, state.t, mix_mask=mix_mask)
+            if mix_impl is not None:
+                opt = dataclasses.replace(opt, mix_fn=mix_impl)
+            if tr.comm is not None and state.comm_state is not None:
+                # compressed gossip: swap the mix hook for a CHOCO round
+                # against this step's replica states (one site per mix call;
+                # DESIGN.md §4)
+                sites_in = list(state.comm_state)
+                sites_out = list(sites_in)
+                comm_key = jax.random.fold_in(rng, 0x0C0)
+                opt = dataclasses.replace(opt, mix_fn=tr.comm.make_mix_fn(
+                    sites_in, sites_out, comm_key, tr._comm_gamma,
+                    mix_impl=mix_impl))
+                new_comm = sites_out
+
+        with jax.named_scope("tm/finish_mix"), jax.named_scope("tm/opt_step"):
+            new_params, new_opt = opt.step(
+                state.params, grads, state.opt_state, w=w, lr=lr, t=state.t,
+                axis_name=self.axis_name, n_nodes=n)
+        return new_params, new_opt, new_comm, new_buf
+
     # -- the step math (shared by every backend) -----------------------------
     def _step_math(self, state, batch, rng, collect: bool = False):
         """One decentralized step on whatever layout the backend presents:
-        node-stacked ``[n, ...]`` leaves (vmap) or local ``[1, ...]`` shards
-        inside shard_map (sharded).  Returns (new TrainState, metrics).
+        node-stacked ``[n, ...]`` leaves (vmap) or local ``[b, ...]`` shards
+        inside shard_map (sharded/hybrid).  Returns (new TrainState,
+        metrics).  Orchestrates the launch_mix → compute → finish_mix
+        pipeline above; the overlap mode's launch-stage collectives are
+        emitted BEFORE the gradient computation in the trace.
 
         ``collect`` is a TRACE-TIME flag: True adds the telemetry collectors
         (DESIGN.md §10) to this trace; False is the exact pre-telemetry
@@ -131,53 +246,30 @@ class Runtime:
 
         tr = self.trainer
         n = tr.topology.n
-        rngs = self._node_rngs(rng, n)
-        grad_fn = jax.value_and_grad(tr.loss_fn, has_aux=True)
-        with jax.named_scope("tm/grad"):
-            (loss, (new_ms, metrics)), grads = jax.vmap(grad_fn)(
-                state.params, state.model_state, batch, rngs)
-
         w = tr._mixing[state.t % tr._mixing.shape[0]]
         lr = tr.lr_fn(state.t)
 
         # scenario masks (DESIGN.md §11): who updates / who gossips this
-        # round, pure in-graph functions of (scenario seed, t) — identical
-        # across backends.  A trivial scenario compiles the exact
-        # no-scenario graph.
+        # round, pure in-graph functions of (scenario seed, t, node id) —
+        # identical per node across backends.  A trivial scenario compiles
+        # the exact no-scenario graph.
         sc = getattr(tr, "scenario", None)
         if sc is not None and sc.trivial:
             sc = None
-        u_mask = mix_mask = None
+        u_loc = mix_mask = fracs = None
         if sc is not None:
-            u_mask, mix_mask = sc.masks(state.t)
+            u_loc, mix_mask, fracs = self._scenario_masks(sc, state.t)
 
-        opt = tr.optimizer
-        mix_impl = self._mix_impl(w, state.t, mix_mask=mix_mask)
-        if mix_impl is not None:
-            opt = dataclasses.replace(opt, mix_fn=mix_impl)
-        new_comm = state.comm_state
-        if tr.comm is not None and state.comm_state is not None:
-            # compressed gossip: swap the mix hook for a CHOCO round against
-            # this step's replica states (one site per mix call; DESIGN.md §4)
-            sites_in = list(state.comm_state)
-            sites_out = list(sites_in)
-            comm_key = jax.random.fold_in(rng, 0x0C0)
-            opt = dataclasses.replace(opt, mix_fn=tr.comm.make_mix_fn(
-                sites_in, sites_out, comm_key, tr._comm_gamma,
-                mix_impl=mix_impl))
-            new_comm = sites_out
+        inflight = self._stage_launch_mix(state, w)
+        loss, new_ms, metrics, grads = self._stage_compute(
+            state, batch, rng, n)
+        new_params, new_opt, new_comm, new_buf = self._stage_finish_mix(
+            state, grads, w, lr, rng, mix_mask, inflight, n)
 
-        with jax.named_scope("tm/opt_step"):
-            new_params, new_opt = opt.step(
-                state.params, grads, state.opt_state, w=w, lr=lr, t=state.t,
-                axis_name=self.axis_name, n_nodes=n)
-
-        u_loc = None
         if sc is not None:
             # dropped/unsampled nodes hold state exactly: select old-vs-new
             # per node.  Their mixing rows were identity (mask_renormalize),
             # so alive nodes never read the discarded intermediate values.
-            u_loc = self._local_update_mask(u_mask)
             new_params = _hold_nodes(u_loc, new_params, state.params)
             new_opt = _hold_nodes(u_loc, new_opt, state.opt_state)
             new_ms = _hold_nodes(u_loc, new_ms, state.model_state)
@@ -200,19 +292,20 @@ class Runtime:
         for k, v in metrics.items():
             out_metrics[k] = self._node_mean_scalar(v)
         if sc is not None:
-            # masks are replicated [n] in every backend, so these means are
-            # bit-identical across vmap/hybrid (determinism pin)
-            out_metrics["alive_frac"] = jnp.mean(u_mask)
-            out_metrics["mix_frac"] = jnp.mean(mix_mask)
+            # exact 0/1 sums (ints <= n, exact in f32), so the fractions are
+            # bit-identical across vmap/hybrid (determinism pin) even though
+            # hybrid only ever materializes its own block of the masks
+            out_metrics["alive_frac"], out_metrics["mix_frac"] = fracs
         if collect:
             out_metrics.update(self._telemetry_metrics(
                 state, grads, new_params, new_opt, new_comm, lr, n,
-                alive=u_loc))
+                alive=u_loc, mix_buf_new=new_buf))
         return TrainState(new_params, new_opt, new_ms, state.t + 1,
-                          new_comm), out_metrics
+                          new_comm, new_buf), out_metrics
 
     def _telemetry_metrics(self, state, grads, new_params, new_opt,
-                           new_comm, lr, n, alive=None) -> dict:
+                           new_comm, lr, n, alive=None,
+                           mix_buf_new=None) -> dict:
         """In-graph telemetry collection (DESIGN.md §10): when the trainer
         carries a resolved :class:`~repro.telemetry.metrics.TelemetryConfig`,
         run its collectors on this step and return their scalars under the
@@ -239,7 +332,8 @@ class Runtime:
             node_mean=self._node_mean_scalar,
             node_sum=self._node_sum_scalar,
             node_max=self._node_max_scalar,
-            static=tel.static, alive=alive)
+            static=tel.static, alive=alive,
+            mix_buf_old=state.mix_buf, mix_buf_new=mix_buf_new)
         with jax.named_scope("tm/collect"):
             vals = tel.collect(ctx)
         return {TM_PREFIX + k: v for k, v in vals.items()}
@@ -289,6 +383,55 @@ class Runtime:
         this backend wants it.  Identity for vmap; the sharded backend
         device_puts every node-stacked leaf sharded over the node axis."""
         return state
+
+    def put_batch(self, batch, lead: int = 0):
+        """Place one host batch (node-stacked at axis ``lead``; ``lead=1``
+        for a chunked ``[k, n, ...]`` stack) where this backend wants it.
+        Base/vmap just converts to device arrays; the sharded override
+        assembles multi-process global arrays from each host's local data
+        (per-host data feeding, DESIGN.md §12)."""
+        del lead
+        return jax.tree.map(jnp.asarray, batch)
+
+    # -- overlap probe (tm.gossip_wait_ms) ------------------------------------
+    def _build_probe(self, state, chunked: bool = False):
+        """(launch_fn, compute_fn) pair for the gossip-wait probe: the
+        launch stage and compute stage of ONE step compiled as separate
+        non-donating dispatches, so the host can time how long finish_mix
+        would block on the in-flight collectives after compute drains.
+        Backends override to apply their shard_map wrapping."""
+        def launch(st):
+            w = self.trainer._mixing[st.t % self.trainer._mixing.shape[0]]
+            return self._stage_launch_mix(st, w)
+
+        def compute(st, batch, rng):
+            if chunked:
+                batch = jax.tree.map(lambda x: x[0], batch)
+            return self._stage_compute(st, batch, rng,
+                                       self.trainer.topology.n)[0]
+
+        return jax.jit(launch), jax.jit(compute)
+
+    def probe_metrics(self, state, batch, rng, chunked: bool = False) -> dict:
+        """Host-side overlap telemetry for this step: dispatch the launch
+        stage, dispatch + drain the compute stage, then measure how long the
+        in-flight mix takes to finish beyond that — the residual gossip wait
+        the pipeline could not hide (``tm.gossip_wait_ms``).  Runs on its
+        own non-donating traces on collect steps only; returns {} when the
+        overlap pipeline is inactive."""
+        if self.overlap == "none" or getattr(state, "mix_buf", None) is None:
+            return {}
+        if self._probe_fns is None or self._probe_fns[0] != chunked:
+            self._probe_fns = (chunked, self._build_probe(state, chunked))
+        launch_fn, compute_fn = self._probe_fns[1]
+        inflight = launch_fn(state)
+        loss = compute_fn(state, batch, rng)
+        jax.block_until_ready(loss)
+        self.gossip_timer.arm()
+        jax.block_until_ready(inflight)
+        self.gossip_timer.lap(1)
+        return {TM_PREFIX + "gossip_wait_ms":
+                float(self.gossip_timer.last_s * 1e3)}
 
     # -- evaluation -----------------------------------------------------------
     def _eval_batch(self, state, eval_fn, batch):

@@ -31,6 +31,7 @@ from __future__ import annotations
 import dataclasses
 
 import jax
+import jax.numpy as jnp
 
 from repro.core import gossip
 
@@ -82,6 +83,26 @@ class HybridRuntime(ShardedRuntime):
     def _local_update_mask(self, u):
         i = jax.lax.axis_index(self.axis_name)
         return jax.lax.dynamic_slice_in_dim(u, i * self._b, self._b, axis=0)
+
+    def _scenario_masks(self, sc, t):
+        """Block-local scenario masks: each device derives ONLY its own
+        b-row slice of the round's masks (per-node fold_in keying in
+        ``repro.scenario`` — O(n/d) per device instead of materializing the
+        full [n] masks everywhere).  The mix executors get a
+        :class:`~repro.core.gossip.BlockMask` so they can derive peer-block
+        slices on demand; the alive/mix fractions are exact 0/1 psums,
+        bit-identical to the vmap backend's full-mask means."""
+        n = sc.n
+        i = jax.lax.axis_index(self.axis_name)
+        ids = i * self._b + jnp.arange(self._b)
+        u_loc, m_loc = sc.masks(t, ids=ids)
+        alive = jax.lax.psum(jnp.sum(u_loc), self.axis_name) / n
+        mixf = jax.lax.psum(jnp.sum(m_loc), self.axis_name) / n
+        mask = gossip.BlockMask(
+            local=m_loc,
+            of=lambda ids_: sc.masks(t, ids=ids_)[1],
+            full=lambda: sc.masks(t, ids=jnp.arange(n))[1])
+        return u_loc, mask, (alive, mixf)
 
     def _mix_impl(self, w, t, mix_mask=None):
         return gossip.make_block_mix_fn(

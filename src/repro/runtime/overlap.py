@@ -1,0 +1,136 @@
+"""Delayed (one-step-stale) gossip — the ``overlap='delayed_1'`` execution
+mode (DESIGN.md §12).
+
+The synchronous step serializes mix after compute: gossip reads the
+half-updated tree of THIS round, so the collective cannot be issued until
+the round's gradients exist.  The delayed-consensus relaxation (Balu et al.
+2020, PAPERS.md) breaks that dependency by exchanging the PREVIOUS round's
+values:
+
+    mixed_i   = (W_t @ sent)_i               # gossip of the STALE buffer —
+                                             # issued before this round's grad
+    out_i     = tree_i + 1/2 (mixed_i - sent_i)
+    sent'_i   = tree_i                       # becomes next round's exchange
+
+``tree_i`` is the value a synchronous mix site would have contracted (the
+half-updated params / tracker buffer), ``sent_i`` the value the site held
+one step earlier.  The correction ``(W sent - sent)_i / 2`` is the
+consensus displacement computed on stale data; at t=0 every node carries
+the same broadcast x^0, so the correction is exactly zero and the first
+step is a pure local update.
+
+The 1/2 damping is a STABILITY requirement, not a tuning knob: the undamped
+delayed recurrence ``x_{t+1} = x_t + (W - I) x_{t-1}`` has per-eigenmode
+companion matrix ``[[1, lam - 1], [1, 0]]`` whose complex roots satisfy
+``|mu|^2 = 1 - lam`` — any NEGATIVE eigenvalue of ``W`` (ring-4 Metropolis
+already has lam = -1/3) makes the consensus error grow geometrically, and
+momentum methods that read the mix displacement (QG's ``d = (x_pre -
+x_post) / eta``) amplify the oscillation into divergence.  Damping by 1/2
+mixes with the LAZY matrix ``(I + W) / 2`` instead, whose spectrum is
+nonnegative for every doubly stochastic ``W``, giving ``|mu|^2 =
+(1 - lam) / 2 <= 1`` on every mode — unconditionally stable, at the price
+of one extra factor ~sqrt(2) in the consensus contraction rate (the
+convergence caveat in DESIGN.md §12).
+
+This is a DIFFERENT trajectory from the synchronous path (staleness + lazy
+damping show up as extra consensus-error terms in the convergence bound) —
+parity is therefore pinned against a delayed-reference vmap oracle, never
+against the synchronous run (tests/test_overlap.py).
+
+In the step pipeline (``Runtime._step_math``: compute → launch_mix →
+finish_mix) the gossip of ``sent`` is emitted in ``launch_mix`` BEFORE the
+gradient computation appears in the trace, so the compiled ppermute
+schedule has no data dependency on the round's backward pass and the XLA
+scheduler is free to overlap the exchange with compute — on a real
+multi-host mesh the wire time hides behind the gradients
+(``tm.gossip_wait_ms`` measures the residual wait).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+__all__ = ["OVERLAPS", "capture_topology_mix_sites", "make_delayed_mix_fn"]
+
+#: valid ``overlap=`` trainer/spec values: 'none' is the synchronous step,
+#: 'delayed_1' the one-step-stale pipelined mix above.
+OVERLAPS = ("none", "delayed_1")
+
+
+def capture_topology_mix_sites(optimizer, params: PyTree, w, *,
+                               lr: float = 0.1) -> list[PyTree]:
+    """The t=0 exchange buffers for ``overlap='delayed_1'``: one tree per mix
+    call site that contracts the TOPOLOGY matrix (``w`` by object identity —
+    the same dispatch rule every runtime mix hook uses).  Sites that mix a
+    derived matrix (e.g. ``buffer_sync('complete')``'s uniform average) stay
+    synchronous and are skipped.
+
+    Same probe as :func:`repro.comm.choco.capture_mix_targets`: one jitted
+    zero-gradient step whose mix hook records each site's tree.  Every node
+    starts from the same broadcast x^0, so gossiping these captures on the
+    real first step is an exact no-op — the delayed correction starts at
+    zero instead of injecting a bogus first exchange."""
+    def run(p, g, s):
+        targets: list[PyTree] = []
+        w_obj = jnp.asarray(w, jnp.float32)
+
+        def capturing_mix(w_, tree):
+            if w_ is w_obj:
+                targets.append(tree)
+            return tree
+
+        opt = dataclasses.replace(optimizer, mix_fn=capturing_mix)
+        opt.step(p, g, s, w=w_obj, lr=lr, t=0)
+        return targets
+
+    grads = jax.tree.map(jnp.zeros_like, params)
+    targets = jax.jit(run)(params, grads, optimizer.init(params))
+    if not targets:
+        raise ValueError(
+            "overlap='delayed_1' needs at least one topology mix site in "
+            "the optimizer's transform chain (a gossip_mix / grad_track "
+            "stage contracting the topology matrix); this chain has none")
+    return list(targets)
+
+
+#: delayed corrections apply through the lazy matrix (I + W) / 2 — see the
+#: module docstring's stability analysis (undamped delayed consensus
+#: diverges on any W with a negative eigenvalue).
+DAMPING = 0.5
+
+
+def make_delayed_mix_fn(sent_in: list, mixed: list, sent_out: list, *,
+                        w_ref, fallback=None):
+    """The ``mix_fn`` closure for the finish_mix stage of a delayed step.
+
+    Topology sites (``w is w_ref``) consume, in call order, the in-flight
+    ``mixed[i] = W @ sent_in[i]`` the launch stage issued, apply
+    ``tree + (mixed - sent) / 2`` (the lazy-damped stale correction — see
+    module docstring) and deposit ``tree`` into ``sent_out[i]`` as next
+    round's exchange (the same list-popping protocol as the CHOCO comm
+    closure — pure within one trace).  Non-topology matrices fall through to
+    ``fallback`` (the backend's synchronous mix hook) or, when the backend
+    had none installed (vmap dense), the optimizer-default dense contraction.
+    """
+    from repro.core import gossip
+
+    counter = [0]
+
+    def mix_fn(w, tree):
+        if w is not w_ref:
+            if fallback is not None:
+                return fallback(w, tree)
+            return gossip.mix_dense(w, tree)
+        i = counter[0]
+        counter[0] += 1
+        sent, mx = sent_in[i], mixed[i]
+        sent_out[i] = tree
+        return jax.tree.map(lambda p, m, s: p + DAMPING * (m - s),
+                            tree, mx, sent)
+
+    return mix_fn

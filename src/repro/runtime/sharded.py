@@ -31,6 +31,7 @@ import dataclasses
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core import gossip
@@ -133,12 +134,39 @@ class ShardedRuntime(Runtime):
         return node_specs(tree, n=self.trainer.topology.n,
                           axis_name=self.axis_name, lead=lead)
 
+    def _global_put(self, tree, lead: int = 0):
+        """Multi-process placement: assemble each leaf as a GLOBAL jax.Array
+        from this host's local rows (``jax.make_array_from_callback`` hands
+        every process exactly the index slices its own devices carry —
+        per-host data feeding, DESIGN.md §12).  Host values must be
+        process-identical, which every caller guarantees: broadcast x^0 at
+        init, the deterministic synthetic batch stream in the loops."""
+        def put(l):
+            sh = NamedSharding(self.mesh, self._leaf_spec(l, lead=lead))
+            a = np.asarray(l)
+            return jax.make_array_from_callback(
+                a.shape, sh, lambda idx, a=a: a[idx])
+
+        return jax.tree.map(put, tree)
+
     def finalize_state(self, state):
         """Shard a freshly initialized TrainState over the node axis — after
-        this, no device ever materializes the full node stack again."""
+        this, no device ever materializes the full node stack again.  On a
+        multi-process mesh the leaves become global arrays assembled from
+        each host's local slices."""
+        if jax.process_count() > 1:
+            return self._global_put(state)
         return jax.tree.map(
             lambda l: jax.device_put(
                 l, NamedSharding(self.mesh, self._leaf_spec(l))), state)
+
+    def put_batch(self, batch, lead: int = 0):
+        """Single-process: plain device arrays (the jit sharding-matches
+        against the in_specs).  Multi-process: global arrays built from this
+        host's local rows of the (process-identical) host batch."""
+        if jax.process_count() > 1:
+            return self._global_put(batch, lead=lead)
+        return jax.tree.map(jnp.asarray, batch)
 
     # -- compilation: ONE shard_map per step / per chunk ----------------------
     def _shard(self, fn, in_specs, out_specs):
@@ -169,7 +197,44 @@ class ShardedRuntime(Runtime):
 
         return jax.jit(sharded_chunk, donate_argnums=0)
 
+    def _build_probe(self, state, chunked: bool = False):
+        """Probe stages wrapped in the same single-shard_map structure as
+        the real step, but non-donating, so the gossip-wait timing reflects
+        the actual compiled collective schedule."""
+        tr = self.trainer
+
+        def launch_outer(st):
+            fn = self._shard(
+                lambda s: self._stage_launch_mix(
+                    s, tr._mixing[s.t % tr._mixing.shape[0]]),
+                in_specs=(self._specs(st),),
+                out_specs=self._specs(st.mix_buf))
+            return fn(st)
+
+        def compute_outer(st, batch, rng):
+            def inner(s, b, r):
+                if chunked:
+                    b = jax.tree.map(lambda x: x[0], b)
+                return self._stage_compute(s, b, r, tr.topology.n)[0]
+
+            fn = self._shard(
+                inner,
+                in_specs=(self._specs(st),
+                          self._specs(batch, lead=1 if chunked else 0), P()),
+                out_specs=P(self.axis_name))
+            return fn(st, batch, rng)
+
+        return jax.jit(launch_outer), jax.jit(compute_outer)
+
     # -- evaluation -----------------------------------------------------------
+    def evaluate(self, state, eval_fn, batches) -> dict:
+        if jax.process_count() > 1:
+            raise NotImplementedError(
+                "evaluation on a multi-process mesh is not supported: "
+                "checkpoint the run and evaluate in a single process "
+                "(the per-node eval protocol replicates the full eval set)")
+        return super().evaluate(state, eval_fn, batches)
+
     def _eval_batch(self, state, eval_fn, batch):
         """Each device evaluates its own node's model on the (replicated)
         batch; per-node sums come back as global [n] arrays, so the host

@@ -72,17 +72,22 @@ class ScenarioContext:
         return (self.participation >= 1.0 and self.dropout <= 0.0
                 and self.straggler <= 0.0)
 
-    def masks(self, t):
+    def masks(self, t, ids=None):
+        """Masks for round ``t`` — the full ``[n]`` pair, or, with ``ids``,
+        just those nodes' entries (per-node keying makes any subset
+        computable; the hybrid runtime asks for its own device block,
+        DESIGN.md §11).  Node ``g``'s draw is identical either way."""
         key = jax.random.PRNGKey(self.seed)
-        u = jnp.ones((self.n,), jnp.float32)
+        shape = (self.n,) if ids is None else jnp.shape(ids)
+        u = jnp.ones(shape, jnp.float32)
         if self.participation < 1.0:
             u = u * sampling.participation_mask(key, t, self.n,
-                                                self.participation)
+                                                self.participation, ids=ids)
         if self.dropout > 0.0:
             u = u * faults.churn_mask(key, t, self.n, self.dropout,
-                                      self.churn_window)
+                                      self.churn_window, ids=ids)
         m = u
         if self.straggler > 0.0:
             m = m * (1.0 - faults.straggler_mask(key, t, self.n,
-                                                 self.straggler))
+                                                 self.straggler, ids=ids))
         return u, m

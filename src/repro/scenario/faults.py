@@ -15,10 +15,12 @@ Semantics (DESIGN.md §11):
   the consensus slowdown the outage causes.
 
 Like :mod:`repro.scenario.sampling`, every mask is a pure in-graph function
-of ``(scenario seed, step)`` — deterministic, backend-identical, no host
-state.  Churn differs from i.i.d. dropout by its ``window``: the alive set
-is redrawn once per ``window`` steps (``t // window``), so outages persist
-— the regime where momentum staleness actually bites.
+of ``(scenario seed, step, node id)`` — deterministic, backend-identical, no
+host state, and computable for any node-id SUBSET (``ids=``; the hybrid
+runtime derives only its device block).  Churn differs from i.i.d. dropout
+by its ``window``: the alive set is redrawn once per ``window`` steps
+(``t // window``), so outages persist — the regime where momentum staleness
+actually bites.
 """
 from __future__ import annotations
 
@@ -28,6 +30,8 @@ import numpy as np
 
 from repro.core import gossip
 
+from .sampling import per_node_bernoulli
+
 __all__ = ["churn_mask", "straggler_mask", "effective_mixing"]
 
 _TAG_CHURN = 0xC4A2
@@ -35,22 +39,29 @@ _TAG_STRAG = 0x57A6
 
 
 def churn_mask(key: jax.Array, t, n: int, dropout: float,
-               window: int = 1) -> jax.Array:
-    """``[n]`` float mask, 1 = node alive during the window containing
-    ``t``.  Each node drops with probability ``dropout`` per window;
-    ``window=1`` is i.i.d. per-round dropout, larger windows give the
-    correlated multi-step outages characteristic of real churn."""
+               window: int = 1, ids=None) -> jax.Array:
+    """Float mask (``[n]``, or ``ids``' shape for a subset), 1 = node alive
+    during the window containing ``t``.  Each node drops with probability
+    ``dropout`` per window; ``window=1`` is i.i.d. per-round dropout, larger
+    windows give the correlated multi-step outages characteristic of real
+    churn."""
     epoch = jnp.asarray(t, jnp.int32) // max(1, int(window))
     k = jax.random.fold_in(jax.random.fold_in(key, _TAG_CHURN), epoch)
-    return 1.0 - jax.random.bernoulli(k, dropout, (n,)).astype(jnp.float32)
+    if ids is None:
+        ids = jnp.arange(n)
+    return 1.0 - per_node_bernoulli(k, ids, dropout)
 
 
-def straggler_mask(key: jax.Array, t, n: int, prob: float) -> jax.Array:
-    """``[n]`` float mask, 1 = node straggles in round ``t`` (its gossip
-    misses the round; its local step still happens).  Redrawn per round."""
+def straggler_mask(key: jax.Array, t, n: int, prob: float,
+                   ids=None) -> jax.Array:
+    """Float mask (``[n]``, or ``ids``' shape for a subset), 1 = node
+    straggles in round ``t`` (its gossip misses the round; its local step
+    still happens).  Redrawn per round."""
     k = jax.random.fold_in(jax.random.fold_in(key, _TAG_STRAG),
                            jnp.asarray(t, jnp.int32))
-    return jax.random.bernoulli(k, prob, (n,)).astype(jnp.float32)
+    if ids is None:
+        ids = jnp.arange(n)
+    return per_node_bernoulli(k, ids, prob)
 
 
 def effective_mixing(w: np.ndarray, m: np.ndarray) -> np.ndarray:

@@ -2,11 +2,16 @@
 
 Cross-device federated/decentralized deployments never see all clients in a
 round; each node participates with probability ``p`` independently per
-round.  The mask is a pure function of ``(scenario seed, step)`` computed
-IN-GRAPH via ``jax.random.fold_in`` — no host state, no rng stream threaded
-through the training loop — so the same seed reproduces the same
-participation pattern bit-for-bit on every backend (vmap and hybrid compute
-the identical ``[n]`` mask from the identical replicated ``t``; pinned in
+round.  The mask is a pure function of ``(scenario seed, step, node id)``
+computed IN-GRAPH via ``jax.random.fold_in`` — no host state, no rng stream
+threaded through the training loop — so the same seed reproduces the same
+participation pattern bit-for-bit on every backend.
+
+Keying is PER NODE: the round key folds each node's global id and draws one
+scalar Bernoulli from the resulting stream.  That makes any id SUBSET of the
+mask computable without materializing ``[n]`` — the hybrid runtime derives
+only its device's ``b = n/d`` block (``ids=``), and vmap derives the full
+``arange(n)``; node ``g`` sees the identical draw either way (pinned in
 tests/test_scenario.py).
 """
 from __future__ import annotations
@@ -14,19 +19,36 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-__all__ = ["participation_mask"]
+__all__ = ["participation_mask", "per_node_bernoulli"]
 
 # stream tag: keeps the participation draw independent of the churn /
 # straggler draws that fold the same scenario key (see faults.py)
 _TAG = 0x5A3B
 
 
-def participation_mask(key: jax.Array, t, n: int, p: float) -> jax.Array:
-    """``[n]`` float mask, 1 = node sampled into round ``t``.
+def per_node_bernoulli(k: jax.Array, ids, p: float) -> jax.Array:
+    """One Bernoulli(p) draw per node id from round key ``k``: fold each id
+    into the key, draw a scalar.  ``ids`` may be traced (the hybrid backend
+    computes its block's ids from ``axis_index``).  Returns float32 0/1 of
+    ``ids``' shape — the subset-consistency primitive every scenario mask
+    is built on."""
+    ids = jnp.asarray(ids, jnp.int32)
+    keys = jax.vmap(lambda i: jax.random.fold_in(k, i))(ids)
+    draw = jax.vmap(lambda kk: jax.random.bernoulli(kk, p, ()))(keys)
+    return draw.astype(jnp.float32)
+
+
+def participation_mask(key: jax.Array, t, n: int, p: float,
+                       ids=None) -> jax.Array:
+    """Float mask, 1 = node sampled into round ``t``; shape ``[n]``, or
+    ``ids``' shape when a node-id subset is given (same per-node draws
+    either way).
 
     ``t`` may be a traced step counter (``fold_in`` accepts traced data);
     every round redraws independently.
     """
     k = jax.random.fold_in(jax.random.fold_in(key, _TAG),
                            jnp.asarray(t, jnp.int32))
-    return jax.random.bernoulli(k, p, (n,)).astype(jnp.float32)
+    if ids is None:
+        ids = jnp.arange(n)
+    return per_node_bernoulli(k, ids, p)

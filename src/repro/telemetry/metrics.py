@@ -37,6 +37,7 @@ from typing import Any, Callable, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import gossip
 
@@ -84,6 +85,9 @@ class CollectorCtx:
     alive: Any = None              # scenario update mask for the LOCAL nodes
                                    # ([n_local] floats, 1 = participated) —
                                    # None when no scenario is active
+    mix_buf_old: Any = None        # overlap='delayed_1' exchange buffers
+    mix_buf_new: Any = None        # entering / leaving the step (list of
+                                   # trees, or None when overlap is off)
 
     # -- shared per-node helpers ---------------------------------------------
     def per_node_sq_norm(self, tree: PyTree) -> jax.Array:
@@ -256,6 +260,36 @@ def _scenario(ctx: CollectorCtx) -> dict:
     return out
 
 
+def _staleness(ctx: CollectorCtx) -> dict:
+    """Overlap-pipeline staleness (DESIGN.md §12): the RMS gap between the
+    params each node will EXCHANGE next round (its stale buffer) and the
+    fresh params it actually holds — the price of the one-step-delayed mix,
+    normalized like :func:`gossip.consensus_distance` so the two read on
+    the same scale.  Emits nothing when the overlap pipeline is off; sites
+    whose tree is not params-shaped (e.g. a tracker buffer) are skipped."""
+    sites = ctx.mix_buf_new
+    if not sites:
+        return {}
+    pdef = jax.tree.structure(ctx.params_new)
+    pleaves = jax.tree.leaves(ctx.params_new)
+    for site in sites:
+        if jax.tree.structure(site) != pdef:
+            continue
+        sleaves = jax.tree.leaves(site)
+        if any(getattr(a, "shape", None) != getattr(b, "shape", None)
+               for a, b in zip(sleaves, pleaves)):
+            continue
+        sq, cnt = 0.0, 0.0
+        for a, b in zip(sleaves, pleaves):
+            sq = sq + jnp.sum(
+                (a.astype(jnp.float32) - b.astype(jnp.float32)) ** 2)
+            cnt = cnt + float(np.prod(a.shape[1:]))
+        gap = jnp.sqrt(ctx.node_sum(sq)
+                       / (ctx.n_nodes * max(cnt, 1.0)))
+        return {"staleness_gap": gap}
+    return {}
+
+
 METRICS: dict[str, Callable[[CollectorCtx], dict]] = {
     "consensus": _consensus,
     "grad_norms": _grad_norms,
@@ -264,6 +298,7 @@ METRICS: dict[str, Callable[[CollectorCtx], dict]] = {
     "wire": _wire,
     "mixing": _mixing,
     "scenario": _scenario,
+    "staleness": _staleness,
 }
 
 DEFAULT_METRICS = tuple(sorted(METRICS))

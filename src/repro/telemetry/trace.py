@@ -63,6 +63,7 @@ class StepTimer:
         self._next = 0          # ring write cursor
         self._t0: float | None = None
         self.total_laps = 0
+        self.last_s = 0.0       # most recent per-step lap (read by probes)
 
     def arm(self) -> None:
         """Start (or restart) the clock; the next lap measures from here."""
@@ -76,6 +77,7 @@ class StepTimer:
             return
         per_step = (now - self._t0) / max(steps, 1)
         self._t0 = now
+        self.last_s = per_step
         for _ in range(steps):
             if len(self._buf) < self.capacity:
                 self._buf.append(per_step)

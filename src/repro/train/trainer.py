@@ -61,6 +61,8 @@ class TrainState:
     model_state: PyTree     # [n, ...] (BN stats etc.), not gossiped
     t: jnp.ndarray          # step counter
     comm_state: PyTree = None  # CHOCO replica/residual sites (DESIGN.md §4)
+    mix_buf: PyTree = None  # overlap='delayed_1' in-flight exchange buffers:
+                            # one tree per topology mix site (DESIGN.md §12)
 
 
 def lr_schedule(base_lr: float, *, total_steps: int, warmup: int = 0,
@@ -110,6 +112,9 @@ class DecentralizedTrainer:
     node_axis: str = "data"       # mesh axis carrying the node index
     gossip_schedule: str = "auto"  # gossip.GOSSIP_SCHEDULES
     runtime: str = "auto"          # repro.runtime.RUNTIMES (DESIGN.md §9)
+    overlap: str = "none"          # repro.runtime.OVERLAPS: 'delayed_1'
+                                   # pipelines one-step-stale gossip under
+                                   # the next round's compute (DESIGN.md §12)
     telemetry: Any = None          # resolved telemetry.TelemetryConfig; when
                                    # set, the jitted step emits 'tm.'-prefixed
                                    # collector scalars (DESIGN.md §10).  None
@@ -151,6 +156,7 @@ class DecentralizedTrainer:
                 self.topology, schedule=self.gossip_schedule, mesh=self.mesh,
                 node_axis=self.node_axis if self.mesh is not None else None)
         self._validate_scenario(kind)
+        self._validate_overlap()
         self._comm_gamma = None   # resolved on first sight of params
         self._comm_bits = None    # wire bits per site per node per step
         # the execution backend owns compilation (LAZY, with buffer
@@ -188,6 +194,26 @@ class DecentralizedTrainer:
                 f"stays doubly stochastic; topology {self.topology.name!r} "
                 "is asymmetric (e.g. one-peer exponential)")
 
+    def _validate_overlap(self) -> None:
+        """Eager checks for the delayed-gossip pipeline (DESIGN.md §12)."""
+        from repro.runtime import OVERLAPS
+        if self.overlap not in OVERLAPS:
+            raise ValueError(
+                f"overlap={self.overlap!r} is not one of {OVERLAPS}")
+        if self.overlap == "none":
+            return
+        if self.comm is not None:
+            raise ValueError(
+                "overlap='delayed_1' with compressed comm is not supported: "
+                "the CHOCO replica exchange already defines its own buffer "
+                "protocol; run uncompressed (comm=None)")
+        if self.scenario is not None and not getattr(
+                self.scenario, "trivial", False):
+            raise ValueError(
+                "overlap='delayed_1' with scenario fault injection is not "
+                "supported: the stale exchange buffers of dropped nodes "
+                "would re-inject discarded state; run scenario=None")
+
     def _comm_setup(self, params):
         if self.comm is not None and self._comm_gamma is None:
             self._comm_gamma = self.comm.resolved_gamma(params)
@@ -211,11 +237,20 @@ class DecentralizedTrainer:
         if self.comm is not None:
             comm_state = self.comm.init_state(
                 self.optimizer, params_n, self._mixing[0])
+        mix_buf = None
+        if self.overlap != "none":
+            # t=0 exchange buffers: the trees each topology mix site would
+            # have contracted on the first step.  All nodes share x^0, so
+            # the first delayed correction is exactly zero.
+            from repro.runtime.overlap import capture_topology_mix_sites
+            mix_buf = capture_topology_mix_sites(
+                self.optimizer, params_n, self._mixing[0])
         state = TrainState(params=params_n,
                            opt_state=self.optimizer.init(params_n),
                            model_state=mstate_n,
                            t=jnp.zeros((), jnp.int32),
-                           comm_state=comm_state)
+                           comm_state=comm_state,
+                           mix_buf=mix_buf)
         return self._runtime.finalize_state(state)
 
     # -- one jitted decentralized step ---------------------------------------
@@ -245,6 +280,23 @@ class DecentralizedTrainer:
         """
         self._comm_setup(state.params)
         return self._runtime.step_chunk(state, batches, rng, collect=collect)
+
+    # -- host-side batch placement / probes ------------------------------------
+    def put_batch(self, batch: PyTree, lead: int = 0):
+        """Place one host batch where the execution backend wants it:
+        device arrays for vmap, node-sharded (and, multi-process, globally
+        assembled from each host's local rows — per-host data feeding)
+        arrays for sharded/hybrid.  ``lead`` is the node axis position
+        (1 for a chunked ``[k, n, ...]`` stack)."""
+        return self._runtime.put_batch(batch, lead=lead)
+
+    def probe_metrics(self, state: TrainState, batch: PyTree, rng,
+                      chunked: bool = False) -> dict:
+        """Host-timed overlap telemetry (``tm.gossip_wait_ms``) for this
+        step; {} unless ``overlap`` is active.  Runs non-donating probe
+        traces, so call BEFORE the real (donating) step."""
+        return self._runtime.probe_metrics(state, batch, rng,
+                                           chunked=chunked)
 
     # -- evaluation -----------------------------------------------------------
     def evaluate(self, state: TrainState, eval_fn, batches) -> dict:
@@ -296,12 +348,12 @@ def run_training(trainer: DecentralizedTrainer, state: TrainState,
     total = step_offset + steps
     for i, batch in zip(range(step_offset, total), batch_iter):
         rng, sub = jax.random.split(rng)
-        batch = jax.tree.map(jnp.asarray, batch)
-        state, metrics = trainer.step(
-            state, batch, sub,
-            collect=telemetry is not None and telemetry.wants(i))
+        batch = trainer.put_batch(batch)
+        collect = telemetry is not None and telemetry.wants(i)
+        probe = trainer.probe_metrics(state, batch, sub) if collect else {}
+        state, metrics = trainer.step(state, batch, sub, collect=collect)
         if telemetry is not None:
-            metrics = telemetry.consume(i, metrics)
+            metrics = telemetry.consume(i, {**metrics, **probe})
         _record_step(history, i, total, log_every, log_fn,
                      lambda: {k: float(v) for k, v in metrics.items()})
         if checkpoint_fn and checkpoint_every \
@@ -367,14 +419,21 @@ def run_training_scanned(trainer: DecentralizedTrainer, state: TrainState,
         total = done + k if exhausted else steps
         # stack on host, ship once: one transfer per chunk instead of one
         # device commit per step per leaf
-        stacked = jax.tree.map(
-            lambda *xs: jnp.asarray(np.stack(xs)), *batches)
+        stacked = trainer.put_batch(
+            jax.tree.map(lambda *xs: np.stack(xs), *batches), lead=1)
+        collect = (telemetry is not None
+                   and telemetry.wants_chunk(step_offset + done, k))
+        probe = (trainer.probe_metrics(state, stacked, rng, chunked=True)
+                 if collect else {})
         state, rng, metrics = trainer.step_chunk(
-            state, stacked, rng,
-            collect=telemetry is not None
-            and telemetry.wants_chunk(step_offset + done, k))
+            state, stacked, rng, collect=collect)
         if telemetry is not None:
-            metrics = telemetry.consume_chunk(step_offset + done, metrics)
+            # host probe scalars broadcast [k] so the chunk consumer's
+            # per-step indexing sees them on every row
+            metrics = telemetry.consume_chunk(step_offset + done, {
+                **metrics,
+                **{mk: np.full((k,), mv, np.float32)
+                   for mk, mv in probe.items()}})
 
         host: dict = {}  # chunk metrics, transferred once and only if needed
 
