@@ -27,6 +27,11 @@ runs; ``--only <name>`` selects a single table.
             eval loss at n=1024 / Dirichlet(0.1), churn-run determinism
             (subprocess w/ 8 forced host devices)
   serving   batched prefill+decode throughput (reduced archs)
+  serve     continuous-batching engine vs sequential dense-cache baseline
+            on one seeded mixed-length request set: tokens/s, p50/p95
+            per-token latency, peak paged-cache bytes (subprocess; tokens
+            checked bit-identical before timing; the CI gate holds
+            engine tokens/s >= 1.5x sequential at n_slots=8)
   kernels   Pallas kernel microbench vs jnp reference
   roofline  aggregate the dry-run artifacts into the §Roofline table
 
@@ -346,6 +351,46 @@ def serving(quick=False):
                 f"tok_per_s={b * glen / dt:.1f},batch={b},gen={glen}")
 
 
+def serve(quick=False):
+    """Continuous-batching serve table (DESIGN.md §13): ``ServeEngine``
+    (paged KV cache, 8 in-flight slots) vs the sequential dense-cache
+    baseline over the same 30 seeded mixed-length requests.  The worker
+    refuses to report throughput unless the engine's greedy tokens are
+    bit-identical to the baseline; the CI gate holds
+    ``tokens_per_s(engine) >= 1.5 x tokens_per_s(sequential)``."""
+    import subprocess
+    import sys
+
+    spec = {"arch": "tinyllama-1.1b", "requests": 12 if quick else 30,
+            "max_new": 16, "n_slots": 8, "page_size": 16,
+            "prefill_chunk": 16, "max_len": 64}
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src" + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    res = subprocess.run(
+        [sys.executable, "-m", "benchmarks.serve_worker", json.dumps(spec)],
+        capture_output=True, text=True, timeout=3600, env=env,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+    lines = [ln for ln in res.stdout.splitlines()
+             if ln.startswith("SERVE_ROWS ")]
+    if not lines:
+        raise RuntimeError(f"serve_worker failed: {res.stderr[-2000:]}")
+    rows = json.loads(lines[0][len("SERVE_ROWS "):])
+    by_mode = {r["mode"]: r for r in rows}
+    ratio = (by_mode["engine"]["tokens_per_s"]
+             / by_mode["sequential"]["tokens_per_s"])
+    for r in rows:
+        extra = (f",p50_token_ms={r['p50_token_latency_s'] * 1e3:.3f},"
+                 f"p95_token_ms={r['p95_token_latency_s'] * 1e3:.3f},"
+                 f"mismatches={r['mismatches']}")
+        if r["mode"] == "engine":
+            extra += (f",peak_cache_bytes={r['peak_cache_bytes']},"
+                      f"speedup={ratio:.2f}")
+        csv_row(f"serve/{r['arch']}/{r['mode']}",
+                r["wall_s"] / r["tokens"] * 1e6,
+                f"tokens_per_s={r['tokens_per_s']:.1f}" + extra)
+
+
 def kernels(quick=False):
     import jax
     import jax.numpy as jnp
@@ -438,7 +483,7 @@ TABLES = {
     "table6": table6, "fig3": fig3, "fig6": fig6, "comm": comm,
     "topology": topology, "loop": loop, "telemetry": telemetry,
     "runtime": runtime, "scenario": scenario, "serving": serving,
-    "kernels": kernels, "roofline": roofline,
+    "serve": serve, "kernels": kernels, "roofline": roofline,
 }
 
 

@@ -40,6 +40,11 @@ def main(argv=None):
     ap.add_argument("--resume", default="", metavar="PATH",
                     help="restore a --checkpoint save and continue to "
                          "loop.steps")
+    ap.add_argument("--export-consensus", default="", metavar="PATH",
+                    help="after the run, consensus-average the node-stacked "
+                         "params and write a serving checkpoint here "
+                         "(serve it with `python -m repro.serve "
+                         "--checkpoint PATH`)")
     ap.add_argument("--list", action="store_true", help="list presets")
     args = ap.parse_args(argv)
 
@@ -63,7 +68,18 @@ def main(argv=None):
         telemetry_path = os.path.splitext(args.out)[0] + f".metrics.{ext}"
 
     result = run(spec, checkpoint_path=args.checkpoint, resume=args.resume,
-                 telemetry_path=telemetry_path)
+                 telemetry_path=telemetry_path,
+                 with_state=bool(args.export_consensus))
+    if args.export_consensus:
+        from repro.serve import export_consensus, save_serving_checkpoint
+        result, state = result
+        params, cfg = export_consensus(result, state=state)
+        if cfg is None:
+            raise SystemExit(
+                "--export-consensus: only transformer models can be "
+                "exported for serving")
+        save_serving_checkpoint(args.export_consensus, params, cfg)
+        print("consensus serving checkpoint ->", args.export_consensus)
     if result.telemetry and result.telemetry.get("path"):
         print(f"telemetry -> {result.telemetry['path']} "
               f"({result.telemetry['rows_emitted']} rows)")

@@ -133,3 +133,112 @@ def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
     )(qh, kh_arr, vh_arr)
     out = out[:, :s, :].reshape(b, h, s, d)
     return jnp.moveaxis(out, 1, 2)
+
+
+# ---------------------------------------------------------------------------
+# paged decode attention (serving) — gather-free, block-table indexed
+# ---------------------------------------------------------------------------
+
+def _paged_kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
+                  acc_ref, m_ref, l_ref, *, ps, p_max, window, softcap,
+                  scale):
+    b = pl.program_id(0)
+    j = pl.program_id(2)   # page index (innermost, sequential)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    length = len_ref[b]
+    q_pos = length - 1
+    # dead pages (unallocated / past the slot's length / outside the window)
+    # cost zero MXU work — the scalar-prefetched block table made the DMA
+    # fetch page 0, but the compute is skipped entirely
+    live = (bt_ref[b, j] >= 0) & (j * ps < length)
+    if window:
+        live &= (j + 1) * ps - 1 > q_pos - window
+
+    @pl.when(live)
+    def _body():
+        q = q_ref[0, 0].astype(jnp.float32) * scale     # [G, D]
+        k = k_ref[0, :, 0].astype(jnp.float32)          # [ps, D]
+        v = v_ref[0, :, 0].astype(jnp.float32)
+        sc = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)  # [G, ps]
+        if softcap:
+            sc = softcap * jnp.tanh(sc / softcap)
+        k_pos = j * ps + jax.lax.broadcasted_iota(jnp.int32, (1, ps), 1)
+        mask = k_pos <= q_pos
+        if window:
+            mask &= k_pos > q_pos - window
+        sc = jnp.where(mask, sc, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(sc, axis=-1, keepdims=True))
+        p = jnp.where(mask, jnp.exp(sc - m_new), 0.0)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(j == p_max - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0, ...] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "softcap", "interpret"))
+def paged_decode_attention(q, k_pages, v_pages, block_tables, lengths, *,
+                           window: int = 0, softcap: float = 0.0,
+                           interpret: bool = True):
+    """Single-token decode over a paged KV pool (DESIGN.md §13).
+
+    q [B,1,H,D]; k/v_pages [NP,ps,K,D]; block_tables [B,P] int32 page ids
+    (-1 = unallocated); lengths [B] int32 tokens written per slot (incl. the
+    current one).  Returns [B,1,H,D].
+
+    The block table and lengths ride in as scalar prefetch: the k/v
+    BlockSpec index maps read ``bt[b, j]`` to DMA exactly the slot's own
+    pages — no [B, T] gather materialization, bytes moved per step are
+    O(lengths), not O(pool).
+    """
+    b, one, h, d = q.shape
+    assert one == 1
+    n_p, ps, kh, _ = k_pages.shape
+    assert h % kh == 0
+    g = h // kh
+    p_max = block_tables.shape[1]
+    scale = 1.0 / float(d) ** 0.5
+    qr = q.reshape(b, kh, g, d)
+
+    kernel = functools.partial(_paged_kernel, ps=ps, p_max=p_max,
+                               window=window, softcap=softcap, scale=scale)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, kh, p_max),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, d), lambda bb, hh, j, bt, ln: (bb, hh, 0, 0)),
+            pl.BlockSpec((1, ps, 1, d),
+                         lambda bb, hh, j, bt, ln:
+                         (jnp.maximum(bt[bb, j], 0), 0, hh, 0)),
+            pl.BlockSpec((1, ps, 1, d),
+                         lambda bb, hh, j, bt, ln:
+                         (jnp.maximum(bt[bb, j], 0), 0, hh, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, d),
+                               lambda bb, hh, j, bt, ln: (bb, hh, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((g, d), jnp.float32),   # acc
+            pltpu.VMEM((g, 1), jnp.float32),   # running max
+            pltpu.VMEM((g, 1), jnp.float32),   # running sum
+        ],
+    )
+    out = pl.pallas_call(
+        kernel, grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, kh, g, d), q.dtype),
+        interpret=interpret,
+    )(block_tables, lengths, qr, k_pages, v_pages)
+    return out.reshape(b, 1, h, d)

@@ -53,6 +53,14 @@ def flash_attention(q, k, v, *, causal=True, window=0, softcap=0.0,
         interpret=_default_interpret() if interpret is None else interpret)
 
 
+def paged_decode_attention(q, k_pages, v_pages, block_tables, lengths, *,
+                           window=0, softcap=0.0, interpret=None):
+    return _fa.paged_decode_attention(
+        q, k_pages, v_pages, block_tables, lengths,
+        window=window, softcap=softcap,
+        interpret=_default_interpret() if interpret is None else interpret)
+
+
 def ssd_scan(x, dt, a, b, c, d_skip, *, chunk=128, interpret=None):
     """Model-layout entry: x [B,S,H,P], dt [B,S,H], a [H], b/c [B,S,N].
 

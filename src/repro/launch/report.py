@@ -76,23 +76,66 @@ def dryrun_table(recs: list[dict]) -> str:
          "memory analysis (per chip)"], rows)
 
 
+def serve_table(path: str) -> str:
+    """§Serve table from a ``BENCH_serve.json`` (benchmarks.run --only
+    serve): tokens/s + per-token latency percentiles for the continuous-
+    batching engine vs the sequential dense-cache baseline.  Tolerates an
+    absent/empty file (serving benches are optional artifacts)."""
+    if not os.path.exists(path):
+        return f"*no serve bench found at {path}*"
+    try:
+        rows = json.load(open(path))
+    except (OSError, json.JSONDecodeError):
+        return f"*unreadable serve bench at {path}*"
+    by_mode = {}
+    out = []
+    for r in rows:
+        mode = r.get("name", "").rsplit("/", 1)[-1] or r.get("mode", "?")
+        by_mode[mode] = r
+        out.append([
+            r.get("name", mode),
+            f"{r.get('tokens_per_s', 0.0):.1f}",
+            f"{r.get('p50_token_ms', 0.0):.3f}",
+            f"{r.get('p95_token_ms', 0.0):.3f}",
+            str(int(r["peak_cache_bytes"]))
+            if "peak_cache_bytes" in r else "-",
+            str(int(r.get("mismatches", 0) or 0))])
+    if not out:
+        return f"*no serve rows in {path}*"
+    table = markdown_table(
+        ["serve path", "tokens/s", "p50 token ms", "p95 token ms",
+         "peak cache bytes", "mismatches"], out)
+    if "engine" in by_mode and "sequential" in by_mode and \
+            by_mode["sequential"].get("tokens_per_s"):
+        ratio = (by_mode["engine"].get("tokens_per_s", 0.0)
+                 / by_mode["sequential"]["tokens_per_s"])
+        table += (f"\n\ncontinuous batching vs sequential: "
+                  f"**{ratio:.2f}x** tokens/s (gate: >= 1.5x)")
+    return table
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--dir", default="experiments/dryrun")
     ap.add_argument("--what", default="roofline",
-                    choices=["roofline", "dryrun", "both"])
+                    choices=["roofline", "dryrun", "serve", "both", "all"])
     ap.add_argument("--mesh", default="single")
     ap.add_argument("--gossip", default=None)
+    ap.add_argument("--bench-serve", default="BENCH_serve.json",
+                    metavar="PATH", help="serve bench JSON for --what "
+                    "serve/all (absent file renders a placeholder)")
     ap.add_argument("--out", default=None,
                     help="write the rendered markdown here instead of stdout")
     args = ap.parse_args(argv)
     recs = load(args.dir)
     parts = []
-    if args.what in ("roofline", "both"):
+    if args.what in ("roofline", "both", "all"):
         parts.append(roofline_table(recs, mesh=args.mesh,
                                     gossip=args.gossip))
-    if args.what in ("dryrun", "both"):
+    if args.what in ("dryrun", "both", "all"):
         parts.append(dryrun_table(recs))
+    if args.what in ("serve", "all"):
+        parts.append(serve_table(args.bench_serve))
     text = "\n\n".join(parts)
     if args.out:
         with open(args.out, "w") as fh:

@@ -1,12 +1,20 @@
-"""Batched serving launcher (CPU-runnable on reduced configs).
+"""Serving launcher (CPU-runnable on reduced configs).
 
-Drives the same prefill/decode step functions the dry-run lowers for the
-decode_32k / long_500k shapes: prefill a batch of prompts, then decode with
-batched KV caches + greedy/temperature sampling.
+Routes through the continuous-batching engine (``repro.serve``, DESIGN.md
+§13) by default: requests are admitted into in-flight decode slots over a
+paged KV cache.  ``--sequential`` runs the legacy one-batch dense-cache path
+(prefill + decode_step), which is also the engine's parity baseline.
 
-Example:
-  PYTHONPATH=src python -m repro.launch.serve --arch gemma2-27b --reduced \
+Examples:
+  PYTHONPATH=src python -m repro.launch.serve --arch gemma2-27b \
       --batch 4 --prompt-len 48 --gen-len 32
+  PYTHONPATH=src python -m repro.launch.serve --checkpoint model.npz \
+      --batch 8 --gen-len 16       # serve an exported consensus model
+  PYTHONPATH=src python -m repro.launch.serve --arch tinyllama-1.1b --full
+
+Flag note: ``--reduced`` used to be ``store_true`` with ``default=True`` —
+impossible to turn off.  It is now a ``BooleanOptionalAction``
+(``--no-reduced`` works), with ``--full`` as the readable alias.
 """
 from __future__ import annotations
 
@@ -19,70 +27,95 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.models import transformer as tf
+from repro.serve import (Request, ServeEngine, load_serving_checkpoint,
+                         sequential_generate)
 
 
 def generate(params, cfg, prompts, *, gen_len: int, cache_len: int,
              img=None, temperature: float = 0.0, seed: int = 0,
              chunk: int = 256):
-    """prompts [B, S] -> tokens [B, S+gen_len]."""
-    b, s = prompts.shape
-    logits, cache = tf.prefill(params, prompts, cfg, img=img,
-                               cache_len=cache_len, chunk=chunk)
-    decode = jax.jit(lambda p, t, pos, c: tf.decode_step(p, t, pos, c, cfg))
-    rng = jax.random.PRNGKey(seed)
-    out = [prompts]
-    if temperature > 0:
-        rng, sub = jax.random.split(rng)
-        tok = jax.random.categorical(sub, logits / temperature)[:, None]
-    else:
-        tok = jnp.argmax(logits, axis=-1)[:, None]
-    for i in range(gen_len):
-        out.append(tok)
-        if i == gen_len - 1:
-            break
-        logits, cache = decode(params, tok, jnp.asarray(s + i, jnp.int32),
-                               cache)
-        if temperature > 0:
-            rng, sub = jax.random.split(rng)
-            tok = jax.random.categorical(sub, logits / temperature)[:, None]
-        else:
-            tok = jnp.argmax(logits, axis=-1)[:, None]
-    return jnp.concatenate(out, axis=1)
+    """prompts [B, S] -> tokens [B, S+gen_len].  Kept as the stable launcher
+    API; the loop now lives in ``repro.serve.sequential_generate`` (token-
+    stream-identical to the old in-place implementation, pinned by
+    tests/test_serve.py)."""
+    return sequential_generate(params, cfg, prompts, gen_len=gen_len,
+                               cache_len=cache_len, img=img,
+                               temperature=temperature, seed=seed,
+                               chunk=chunk)
 
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="tinyllama-1.1b")
-    ap.add_argument("--reduced", action="store_true", default=True)
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--reduced", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="reduced (smoke-size) config; --no-reduced or "
+                         "--full for the real architecture")
+    ap.add_argument("--full", action="store_true",
+                    help="alias for --no-reduced")
+    ap.add_argument("--checkpoint", default="",
+                    help="serving checkpoint (.npz) from export_consensus; "
+                         "overrides --arch/--reduced")
+    ap.add_argument("--batch", type=int, default=4,
+                    help="requests (engine) / prompt rows (sequential)")
     ap.add_argument("--prompt-len", type=int, default=48)
     ap.add_argument("--gen-len", type=int, default=32)
-    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="sequential path only; the engine decodes greedily")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--sequential", action="store_true",
+                    help="legacy one-batch dense-cache path instead of the "
+                         "continuous-batching engine")
+    ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--prefill-chunk", type=int, default=32)
     args = ap.parse_args(argv)
 
-    cfg = get_config(args.arch, reduced=args.reduced)
+    if args.checkpoint:
+        params, cfg = load_serving_checkpoint(args.checkpoint)
+    else:
+        cfg = get_config(args.arch, reduced=args.reduced and not args.full)
+        params = tf.init_lm(jax.random.PRNGKey(args.seed), cfg)
     key = jax.random.PRNGKey(args.seed)
-    params = tf.init_lm(key, cfg)
     prompts = jax.random.randint(key, (args.batch, args.prompt_len), 0,
                                  cfg.vocab_size)
-    img = None
-    if cfg.n_image_tokens:
-        img = jax.random.normal(
-            key, (args.batch, cfg.n_image_tokens, cfg.d_model))
 
-    cache_len = args.prompt_len + args.gen_len
-    t0 = time.time()
-    toks = generate(params, cfg, prompts, gen_len=args.gen_len,
-                    cache_len=cache_len, img=img,
-                    temperature=args.temperature, seed=args.seed)
-    dt = time.time() - t0
-    n_new = args.batch * args.gen_len
     print(f"arch={cfg.name} batch={args.batch} prompt={args.prompt_len} "
           f"gen={args.gen_len}")
-    print(f"generated {n_new} tokens in {dt:.2f}s "
-          f"({n_new/dt:.1f} tok/s incl. compile)")
-    print("sample row:", np.asarray(toks[0, -args.gen_len:]).tolist())
+    if args.sequential or args.temperature > 0 or cfg.n_image_tokens:
+        # engine is greedy/text-only; temperature & VLM ride the legacy path
+        img = None
+        if cfg.n_image_tokens:
+            img = jax.random.normal(
+                key, (args.batch, cfg.n_image_tokens, cfg.d_model))
+        cache_len = args.prompt_len + args.gen_len
+        t0 = time.time()
+        toks = generate(params, cfg, prompts, gen_len=args.gen_len,
+                        cache_len=cache_len, img=img,
+                        temperature=args.temperature, seed=args.seed)
+        dt = time.time() - t0
+        n_new = args.batch * args.gen_len
+        print(f"[sequential] {n_new} tokens in {dt:.2f}s "
+              f"({n_new/dt:.1f} tok/s incl. compile)")
+        print("sample row:", np.asarray(toks[0, -args.gen_len:]).tolist())
+        return toks
+
+    eng = ServeEngine(params, cfg, n_slots=min(args.batch, 8),
+                      page_size=args.page_size,
+                      max_len=args.prompt_len + args.gen_len,
+                      prefill_chunk=args.prefill_chunk)
+    reqs = [Request(id=i, prompt=tuple(int(t) for t in np.asarray(p)),
+                    max_new=args.gen_len)
+            for i, p in enumerate(prompts)]
+    t0 = time.time()
+    outs = eng.run(reqs)
+    dt = time.time() - t0
+    n_new = sum(len(o.tokens) for o in outs)
+    print(f"[engine] {n_new} tokens in {dt:.2f}s "
+          f"({n_new/dt:.1f} tok/s incl. compile) "
+          f"peak_cache_bytes={eng.stats()['peak_cache_bytes']}")
+    print("sample row:", list(outs[0].tokens))
+    toks = jnp.concatenate(
+        [prompts, jnp.asarray([o.tokens for o in outs], jnp.int32)], axis=1)
     return toks
 
 

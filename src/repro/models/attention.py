@@ -262,6 +262,48 @@ def decode_attention(
 
 
 # ---------------------------------------------------------------------------
+# paged attention (serving) — per-row positions over a gathered page span
+# ---------------------------------------------------------------------------
+
+def paged_attention(
+    q: jax.Array,            # [B, C, H, D] chunk of queries per slot
+    k: jax.Array,            # [B, T, K, D] gathered from the page pool
+    v: jax.Array,            # [B, T, K, D]
+    q_pos: jax.Array,        # [B, C] int32 absolute position of each query
+    *,
+    window: int = 0,
+    softcap: float = 0.0,
+) -> jax.Array:
+    """Dense reference semantics for gather-by-block-table attention
+    (DESIGN.md §13).  Unlike :func:`decode_attention` the positions are
+    per-(slot, token): every serving slot sits at its own offset, and a
+    chunked-prefill slice carries C > 1 consecutive queries.
+
+    The causal mask ``k_pos <= q_pos`` is also the slot-reuse guarantee:
+    pool rows holding stale K/V from an evicted sequence only ever appear
+    at logical positions >= the new sequence's length, so they are masked
+    without any cache zeroing.
+    """
+    b, c, h, d = q.shape
+    t = k.shape[1]
+    kh = k.shape[2]
+    g = h // kh
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, jnp.float32))
+    qf = q.reshape(b, c, kh, g, d).astype(jnp.float32) * scale
+    sc = jnp.einsum("bskgd,btkd->bskgt", qf, k.astype(jnp.float32))
+    if softcap:
+        sc = layers.softcap(sc, softcap)
+    k_pos = jnp.arange(t)
+    mask = k_pos[None, None, :] <= q_pos[:, :, None]          # [B, C, T]
+    if window:
+        mask &= k_pos[None, None, :] > q_pos[:, :, None] - window
+    sc = jnp.where(mask[:, :, None, None, :], sc, NEG_INF)
+    p = jax.nn.softmax(sc, axis=-1)
+    out = jnp.einsum("bskgt,btkd->bskgd", p, v.astype(jnp.float32))
+    return out.reshape(b, c, h, d).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
 # cross attention (VLM) — queries from text, KV from image embeddings
 # ---------------------------------------------------------------------------
 

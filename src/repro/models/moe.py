@@ -46,13 +46,19 @@ def init_moe(key, d_model: int, d_ff: int, cfg: MoEConfig,
 
 
 def moe_ffn(params: PyTree, x: jax.Array, cfg: MoEConfig, *,
-            expert_spec=None):
+            expert_spec=None, token_mask=None):
     """x: [B, S, d] -> (y, aux_loss).
 
     Top-k routing with per-expert capacity C = ceil(T*k/E * factor); overflow
     tokens are dropped (standard capacity semantics).  Dispatch is
     scatter/gather based — peak extra memory O(E*C*d), *not* the O(T*E*C)
     one-hot dispatch tensor (which would be terabytes at arctic scale).
+
+    ``token_mask`` [B, S] bool (serving): masked-out tokens are excluded from
+    routing — they consume no expert capacity, produce zero output, and do
+    not enter the load-balance statistics.  Without this, the junk padding
+    in a serving batch would steal queue positions from real tokens and make
+    outputs depend on whatever sits in the padded rows.
     """
     b, s, d = x.shape
     e, k = cfg.n_experts, cfg.top_k
@@ -71,9 +77,15 @@ def moe_ffn(params: PyTree, x: jax.Array, cfg: MoEConfig, *,
     # cumsum over the flattened (token, slot) stream:  [T*k]
     flat_e = expert_idx.reshape(-1)                       # [T*k] int32
     onehot = jax.nn.one_hot(flat_e, e, dtype=jnp.int32)   # [T*k, E]
+    tmask = None
+    if token_mask is not None:
+        tmask = token_mask.reshape(-1)                    # [T] bool
+        onehot = onehot * jnp.repeat(tmask, k)[:, None].astype(onehot.dtype)
     pos = (jnp.cumsum(onehot, axis=0) - 1) * onehot       # pos on own column
     flat_pos = jnp.sum(pos, axis=-1)                      # [T*k]
     valid = flat_pos < capacity
+    if tmask is not None:
+        valid &= jnp.repeat(tmask, k)
 
     # scatter token ids / gates into per-expert queues [E*C]
     slot = jnp.where(valid, flat_e * capacity + flat_pos, e * capacity)
@@ -107,8 +119,14 @@ def moe_ffn(params: PyTree, x: jax.Array, cfg: MoEConfig, *,
         y = y + layers.swiglu(tokens, dp["gate"], dp["up"], dp["down"])
 
     # Switch-style load-balance loss
-    me = jnp.mean(probs, axis=0)                              # mean router prob
-    ce = jnp.mean(jax.nn.one_hot(expert_idx[:, 0], e), axis=0)  # top-1 load
+    if tmask is None:
+        me = jnp.mean(probs, axis=0)                          # mean router prob
+        ce = jnp.mean(jax.nn.one_hot(expert_idx[:, 0], e), axis=0)  # top-1 load
+    else:
+        w = tmask.astype(jnp.float32)[:, None]
+        denom = jnp.maximum(jnp.sum(w), 1.0)
+        me = jnp.sum(probs * w, axis=0) / denom
+        ce = jnp.sum(jax.nn.one_hot(expert_idx[:, 0], e) * w, axis=0) / denom
     aux = cfg.aux_loss_coef * e * jnp.sum(me * ce)
 
     return y.reshape(b, s, d), aux

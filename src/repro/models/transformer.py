@@ -11,9 +11,14 @@ A model is a repeating *period* of block kinds (see configs.base.ModelConfig):
 
 The main stack is ``lax.scan`` over periods (stacked params, compact HLO);
 ``tail_layers`` and the zamba2 shared-attention block are applied outside the
-scan.  Three entry points: ``train_loss`` (tokens+labels -> scalar),
+scan.  Four entry points: ``train_loss`` (tokens+labels -> scalar),
 ``prefill`` (tokens -> last logits + KV caches), ``decode_step`` (one token +
-caches -> logits + caches).
+caches -> logits + caches), and ``paged_step`` (a chunk of tokens per serving
+slot against the paged KV pool — the continuous-batching serving path,
+DESIGN.md §13: every slot carries its own absolute position, K/V are
+scattered into fixed-size pages addressed by a per-slot block table, and
+attention gathers the slot's pages back; one traced shape handles chunked
+prefill (chunk=C) and batched decode (chunk=1)).
 """
 from __future__ import annotations
 
@@ -56,6 +61,30 @@ class RunCtx:
     repeat_kv: bool = False         # GQA: repeat K/V to full head count
     head_spec: Any = None           # pin q/k/v heads to 'model' (Megatron)
     moe_expert_spec: Any = None     # pin MoE dispatch to expert-parallel
+    pages: Any = None               # paged mode: PageInfo (block tables etc.)
+
+
+@dataclasses.dataclass(frozen=True)
+class PageInfo:
+    """Per-call paged-KV addressing, computed ONCE in :func:`paged_step` and
+    shared by every attention layer (pages are per-layer, the block table is
+    per-slot).  Token ``i`` of slot ``b`` sits at absolute position
+    ``q_pos[b, i]``; its page-pool row is ``scatter_idx[b*C + i]`` (an
+    out-of-bounds sentinel drops writes for inactive slots / prompt
+    overhang).  ``gather_idx[b, t]`` maps the slot's logical position ``t``
+    back to a pool row — positions beyond the allocated pages clip to row 0
+    and are killed by the causal mask (``t`` <= current position implies the
+    row was written by THIS sequence, so slot/page reuse needs no cache
+    zeroing)."""
+
+    q_pos: Any          # [B, C] int32 absolute positions of the chunk
+    scatter_idx: Any    # [B*C] int32 flat pool rows (OOB sentinel = drop)
+    gather_idx: Any     # [B, T] int32 pool row per logical position
+    last_idx: Any       # [B] int32 chunk index of the last valid token
+    block_tables: Any   # [B, P] int32 page ids, -1 = unallocated
+    lengths: Any        # [B] int32 slot length AFTER this chunk lands
+    token_mask: Any = None  # [B, C] bool — False on padded/junk chunk rows
+    use_pallas: bool = False   # decode (C==1): gather-free Pallas kernel
 
 
 # ---------------------------------------------------------------------------
@@ -167,10 +196,45 @@ def init_cache(cfg: ModelConfig, batch: int, cache_len: int,
 # block application
 # ---------------------------------------------------------------------------
 
+def _paged_self_attn(p, x, window: int, ctx: RunCtx, cache):
+    """Paged-KV attention for one layer: scatter the chunk's K/V into the
+    layer's page pool, then attend over the slot's gathered pages (or the
+    gather-free Pallas kernel for single-token decode).  ``cache`` is
+    ``{"k": [NP, ps, KH, D], "v": ...}`` — the pool, NOT a per-slot
+    buffer."""
+    cfg, pg = ctx.cfg, ctx.pages
+    hd = cfg.resolved_head_dim
+    b, c, _ = x.shape
+    q, k, v = attention.qkv(p, x, cfg.n_heads, cfg.n_kv_heads, hd)
+    q = layers.apply_rope(q, pg.q_pos, cfg.rope_theta)
+    k = layers.apply_rope(k, pg.q_pos, cfg.rope_theta)
+    n_pages, ps, kh, _ = cache["k"].shape
+    kf = cache["k"].reshape(n_pages * ps, kh, hd)
+    vf = cache["v"].reshape(n_pages * ps, kh, hd)
+    kf = kf.at[pg.scatter_idx].set(k.reshape(b * c, kh, hd), mode="drop")
+    vf = vf.at[pg.scatter_idx].set(v.reshape(b * c, kh, hd), mode="drop")
+    new_cache = {"k": kf.reshape(n_pages, ps, kh, hd),
+                 "v": vf.reshape(n_pages, ps, kh, hd)}
+    if pg.use_pallas and c == 1:
+        from repro.kernels import ops as kops
+        out = kops.paged_decode_attention(
+            q, new_cache["k"], new_cache["v"], pg.block_tables, pg.lengths,
+            window=window, softcap=cfg.attn_softcap)
+    else:
+        ks = jnp.take(kf, pg.gather_idx, axis=0)   # [B, T, KH, D]
+        vs = jnp.take(vf, pg.gather_idx, axis=0)
+        out = attention.paged_attention(q, ks, vs, pg.q_pos, window=window,
+                                        softcap=cfg.attn_softcap)
+    out = out.reshape(b, c, cfg.n_heads * hd)
+    return jnp.einsum("...f,fd->...d", out, p["wo"]), new_cache
+
+
 def _self_attn(p, x, kind: str, ctx: RunCtx, cache):
     cfg = ctx.cfg
     hd = cfg.resolved_head_dim
     window = cfg.window if kind == "local" else 0
+    if ctx.mode == "paged":
+        return _paged_self_attn(p, x, window, ctx, cache)
     if ctx.mode == "decode":
         b = x.shape[0]
         q, k, v = attention.qkv(p, x, cfg.n_heads, cfg.n_kv_heads, hd)
@@ -245,6 +309,10 @@ def _self_attn(p, x, kind: str, ctx: RunCtx, cache):
 def apply_block(kind: str, p, x, ctx: RunCtx, cache):
     cfg = ctx.cfg
     aux = jnp.zeros((), jnp.float32)
+    if ctx.mode == "paged" and kind not in ATTN_KINDS:
+        raise NotImplementedError(
+            f"paged serving supports attention-only stacks; block kind "
+            f"{kind!r} (mamba/cross state caches are per-slot, not paged)")
     if kind == "mamba":
         h = layers.rms_norm(x, p["ln"], cfg.norm_eps)
         if ctx.mode == "decode":
@@ -297,8 +365,12 @@ def apply_block(kind: str, p, x, ctx: RunCtx, cache):
     x = x + out
     h = layers.rms_norm(x, p["ln2"], cfg.norm_eps)
     if kind == "moe":
+        # paged batches carry junk beyond each slot's n_valid; keep it out
+        # of the capacity queues (see moe_ffn docstring)
+        tm = ctx.pages.token_mask if ctx.mode == "paged" else None
         y, aux = moe_lib.moe_ffn(p["moe"], h, cfg.moe,
-                                 expert_spec=ctx.moe_expert_spec)
+                                 expert_spec=ctx.moe_expert_spec,
+                                 token_mask=tm)
     else:
         y = layers.swiglu(h, p["mlp"]["gate"], p["mlp"]["up"], p["mlp"]["down"])
     return x + y, aux, new_cache
@@ -362,12 +434,13 @@ def forward(params, tokens, cfg: ModelConfig, *, mode: str,
             unroll: bool = False, remat_attention: bool = False,
             cache_constraint=None, decode_lowp: bool = False,
             act_spec=None, repeat_kv: bool = False, head_spec=None,
-            moe_expert_spec=None):
+            moe_expert_spec=None, pages=None):
     """Shared driver. Returns (logits, aux_loss, new_cache).
 
     train:   tokens [B,S]   -> logits [B,S,Vp], aux, None
     prefill: tokens [B,S]   -> logits [B,Vp] (last pos), aux, cache
     decode:  tokens [B,1]   -> logits [B,Vp], aux, cache
+    paged:   tokens [B,C]   -> logits [B,Vp] (per-slot last valid), aux, pages
     """
     ctx = RunCtx(cfg=cfg, mode=mode, pos=pos, img=img, chunk=chunk,
                  ssd_chunk=ssd_chunk, cache_len=cache_len,
@@ -377,12 +450,12 @@ def forward(params, tokens, cfg: ModelConfig, *, mode: str,
                  cache_constraint=cache_constraint, decode_lowp=decode_lowp,
                  act_spec=act_spec if mode != "decode" else None,
                  repeat_kv=repeat_kv, head_spec=head_spec,
-                 moe_expert_spec=moe_expert_spec)
+                 moe_expert_spec=moe_expert_spec, pages=pages)
     x = _embed(params, tokens, cfg)
     if act_spec is not None and mode != "decode":
         x = jax.lax.with_sharding_constraint(x, act_spec)
     aux_total = jnp.zeros((), jnp.float32)
-    with_cache = mode in ("prefill", "decode")
+    with_cache = mode in ("prefill", "decode", "paged")
 
     shared_p = params.get("shared_attn")
 
@@ -410,7 +483,7 @@ def forward(params, tokens, cfg: ModelConfig, *, mode: str,
 
     def scan_fn(carry, xs):
         x, aux_acc = carry
-        if mode == "decode":
+        if mode in ("decode", "paged"):
             bp, bc, sc = xs
         else:
             (bp,), bc, sc = xs, None, None
@@ -418,7 +491,7 @@ def forward(params, tokens, cfg: ModelConfig, *, mode: str,
         out = (ncs, nsc) if with_cache else None
         return (x, aux_acc + aux_p), out
 
-    if mode == "decode":
+    if mode in ("decode", "paged"):
         shared_c = cache.get("shared_attn") if shared_p is not None else None
         xs = (params["blocks"], cache["blocks"], shared_c)
     else:
@@ -434,7 +507,7 @@ def forward(params, tokens, cfg: ModelConfig, *, mode: str,
 
     tail_caches = []
     for i, tp in enumerate(params["tail"]):
-        c = cache["tail"][i] if mode == "decode" else None
+        c = cache["tail"][i] if mode in ("decode", "paged") else None
         x, aux, nc = apply_block(cfg.period[0], tp, x, ctx, c)
         aux_total = aux_total + aux
         tail_caches.append(nc)
@@ -445,6 +518,11 @@ def forward(params, tokens, cfg: ModelConfig, *, mode: str,
         return _logits(params, x, cfg), aux_total, None
     if mode == "prefill":
         return _logits(params, x[:, -1], cfg), aux_total, new_cache
+    if mode == "paged":
+        li = jnp.broadcast_to(pages.last_idx[:, None, None],
+                              (x.shape[0], 1, x.shape[2]))
+        x_last = jnp.take_along_axis(x, li, axis=1)[:, 0]
+        return _logits(params, x_last, cfg), aux_total, new_cache
     return _logits(params, x[:, 0], cfg), aux_total, new_cache
 
 
@@ -466,3 +544,89 @@ def decode_step(params, token, pos, cache, cfg: ModelConfig, **kw):
     logits, _, new_cache = forward(params, token, cfg, mode="decode",
                                    cache=cache, pos=pos, **kw)
     return logits, new_cache
+
+
+# ---------------------------------------------------------------------------
+# paged serving (continuous batching — DESIGN.md §13)
+# ---------------------------------------------------------------------------
+
+def supports_paged(cfg: ModelConfig) -> bool:
+    """Paged serving covers attention-only stacks (dense/local/global/moe).
+    Mamba conv/SSM states and VLM cross caches are O(1) per slot and would
+    need per-slot (not paged) storage; the zamba2 shared block is mamba-
+    interleaved anyway."""
+    return (all(k in ATTN_KINDS for k in cfg.period)
+            and not cfg.shared_attn_every and not cfg.n_image_tokens)
+
+
+def init_paged_cache(cfg: ModelConfig, n_pages: int, page_size: int,
+                     dtype=jnp.float32) -> PyTree:
+    """One K/V page pool per attention layer, mirroring :func:`init_cache`'s
+    structure (period-stacked ``blocks`` + ``tail``) so the same scan
+    consumes it.  There is no batch axis: slots address the shared pool
+    through their block tables."""
+    if not supports_paged(cfg):
+        raise NotImplementedError(
+            f"{cfg.name}: paged serving supports attention-only stacks "
+            f"(period={cfg.period}, shared_attn_every="
+            f"{cfg.shared_attn_every}, n_image_tokens={cfg.n_image_tokens})")
+    hd = cfg.resolved_head_dim
+
+    def one():
+        return {"k": jnp.zeros((n_pages, page_size, cfg.n_kv_heads, hd),
+                               dtype),
+                "v": jnp.zeros((n_pages, page_size, cfg.n_kv_heads, hd),
+                               dtype)}
+
+    def stacked():
+        return jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (cfg.n_periods,) + x.shape), one())
+
+    return {"blocks": tuple(stacked() for _ in cfg.period),
+            "tail": tuple(one() for _ in range(cfg.tail_layers))}
+
+
+def paged_step(params, tokens, pos, n_valid, block_tables, pages,
+               cfg: ModelConfig, *, page_size: int,
+               use_pallas: bool = False):
+    """One serving step: each slot consumes a chunk of C tokens at its own
+    absolute position.  C == 1 is batched decode; C == prefill_chunk is one
+    chunked-prefill slice — the SAME trace serves both, so the engine
+    compiles exactly two instances and never recompiles on admission or
+    eviction (slot liveness is data: ``n_valid == 0`` masks a row).
+
+    tokens        [B, C] int32 (junk beyond ``n_valid`` is masked)
+    pos           [B]    int32 start position of the chunk per slot
+    n_valid       [B]    int32 valid tokens in the chunk (0 = inactive slot)
+    block_tables  [B, P] int32 page ids, -1 = unallocated
+    pages         pytree from :func:`init_paged_cache`
+
+    Returns ``(logits [B, Vp] at each slot's last valid token, new_pages)``.
+    """
+    b, c = tokens.shape
+    p_max = block_tables.shape[1]
+    t_total = p_max * page_size
+    n_pages = jax.tree.leaves(pages)[0].shape[-4]
+
+    q_pos = pos[:, None] + jnp.arange(c, dtype=jnp.int32)[None, :]
+    valid = jnp.arange(c)[None, :] < n_valid[:, None]
+    page_slot = jnp.clip(q_pos // page_size, 0, p_max - 1)
+    page_of = jnp.take_along_axis(block_tables, page_slot, axis=1)
+    flat = page_of * page_size + q_pos % page_size
+    # invalid rows scatter to one-past-the-pool: mode="drop" discards them
+    scatter_idx = jnp.where(valid & (page_of >= 0), flat,
+                            n_pages * page_size).reshape(b * c)
+    t_idx = jnp.arange(t_total, dtype=jnp.int32)
+    gather_pages = block_tables[:, t_idx // page_size]
+    # unallocated positions clip to pool row 0; they sit at logical positions
+    # >= the slot's length, so the causal mask in paged_attention kills them
+    gather_idx = jnp.clip(gather_pages * page_size + t_idx % page_size,
+                          0, n_pages * page_size - 1)
+    pi = PageInfo(q_pos=q_pos, scatter_idx=scatter_idx,
+                  gather_idx=gather_idx,
+                  last_idx=jnp.clip(n_valid - 1, 0),
+                  block_tables=block_tables, lengths=pos + n_valid,
+                  token_mask=valid, use_pallas=use_pallas)
+    logits, _, new_pages = forward(params, tokens, cfg, mode="paged",
+                                   cache=pages, pages=pi)
+    return logits, new_pages

@@ -1,0 +1,31 @@
+"""Consensus serving stack: train -> export -> continuous-batching inference.
+
+The bridge from the paper's *training* half (a decentralized fleet driving
+its node-stacked params toward consensus) to the north star's *serving*
+half: :func:`export_consensus` collapses any run or checkpoint into the
+single consensus model, and :class:`ServeEngine` serves it with continuous
+request batching over a paged KV cache (DESIGN.md §13).
+
+    from repro import serve
+    params, cfg = serve.export_consensus(result, state=state)
+    serve.save_serving_checkpoint("model.npz", params, cfg)
+    eng = serve.ServeEngine(params, cfg, n_slots=8)
+    outs = eng.run([serve.Request(id=0, prompt=(1, 2, 3), max_new=16)])
+
+CLI: ``python -m repro.serve --help`` (serve a checkpoint or a fresh
+reduced config; ``--baseline`` runs the sequential dense-cache path).
+"""
+from .engine import Completion, Request, ServeEngine, sequential_generate
+from .export import (config_from_dict, config_to_dict, consensus_params,
+                     export_consensus, load_serving_checkpoint,
+                     params_from_train_checkpoint, resolve_config,
+                     save_serving_checkpoint)
+from .kvcache import PagedKVCache
+
+__all__ = [
+    "Completion", "Request", "ServeEngine", "sequential_generate",
+    "PagedKVCache",
+    "consensus_params", "export_consensus", "params_from_train_checkpoint",
+    "resolve_config", "save_serving_checkpoint", "load_serving_checkpoint",
+    "config_to_dict", "config_from_dict",
+]

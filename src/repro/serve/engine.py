@@ -1,0 +1,279 @@
+"""Continuous-batching serve engine (DESIGN.md §13).
+
+Requests are admitted into a fixed pool of ``n_slots`` in-flight decode
+slots; prefill runs in fixed-size chunks; decode runs one batched step over
+every in-flight slot.  Both phases go through ONE jitted step function
+(``transformer.paged_step``) at exactly TWO shapes — ``[1, prefill_chunk]``
+and ``[n_slots, 1]`` — so admission, progress, and eviction never recompile:
+slot liveness is data (``n_valid == 0`` masks a row), not shape.
+
+Admission policy: FCFS, no head-of-line bypass.  The queue head is admitted
+as soon as (a) a slot is free and (b) the paged KV cache can *reserve* its
+worst case (``prompt + max_new - 1`` pages-worth — the last generated token
+is returned, never written).  Reservation-based admission makes the engine
+deadlock-free with no preemption path: an admitted sequence can always grow
+to its max length (see serve/kvcache.py).
+
+Per-phase host timing rides on the telemetry ``StepTimer`` ring buffers
+("schedule" / "prefill" / "decode"); the decode timer's percentiles ARE the
+per-token latency distribution, since every batched decode step emits one
+token for each in-flight sequence.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer as tf
+from repro.telemetry.trace import StepTimer
+
+from .kvcache import PagedKVCache
+
+PyTree = Any
+
+# ONE jitted step for chunked prefill AND batched decode; the page pools are
+# donated so the engine's cache update is in-place, not a copy per step
+_paged_step = jax.jit(tf.paged_step,
+                      static_argnames=("cfg", "page_size", "use_pallas"),
+                      donate_argnames=("pages",))
+
+
+@dataclasses.dataclass(frozen=True)
+class Request:
+    id: int
+    prompt: tuple[int, ...]
+    max_new: int
+
+    def __post_init__(self):
+        if not self.prompt or self.max_new < 1:
+            raise ValueError("Request needs a non-empty prompt, max_new >= 1")
+
+
+@dataclasses.dataclass
+class Completion:
+    id: int
+    prompt: tuple[int, ...]
+    tokens: tuple[int, ...]       # the max_new generated tokens
+
+
+@dataclasses.dataclass
+class _Seq:
+    """One in-flight sequence (host-side bookkeeping)."""
+    req: Request
+    slot: int
+    order: int                    # admission sequence number (FCFS tie-break)
+    consumed: int = 0             # prompt tokens already prefilled
+    generated: list = dataclasses.field(default_factory=list)
+    pending: Optional[int] = None  # next token to feed (None: still prefilling)
+
+    @property
+    def pos(self) -> int:
+        """Absolute position of the pending token."""
+        return len(self.req.prompt) + len(self.generated) - 1
+
+
+class ServeEngine:
+    """Continuous-batching greedy-decode engine over a paged KV cache."""
+
+    def __init__(self, params: PyTree, cfg: ModelConfig, *,
+                 n_slots: int = 8, page_size: int = 16,
+                 max_len: int = 256, n_pages: int | None = None,
+                 prefill_chunk: int = 32, use_pallas: bool = False,
+                 dtype=jnp.float32):
+        if n_pages is None:
+            # default: every slot can grow to max_len (no queueing on pages)
+            n_pages = n_slots * (-(-max_len // page_size))
+        self.params = params
+        self.cfg = cfg
+        self.n_slots = n_slots
+        self.prefill_chunk = prefill_chunk
+        self.use_pallas = use_pallas
+        self.kv = PagedKVCache(cfg, n_slots=n_slots, n_pages=n_pages,
+                               page_size=page_size, max_len=max_len,
+                               dtype=dtype)
+        self.timers = {k: StepTimer(capacity=8192)
+                       for k in ("schedule", "prefill", "decode")}
+        self._order = 0
+
+    # -- the two step shapes ------------------------------------------------
+
+    def _step(self, tokens, pos, n_valid, block_tables):
+        logits, self.kv.pages = _paged_step(
+            self.params, tokens, pos, n_valid, block_tables, self.kv.pages,
+            self.cfg, page_size=self.kv.page_size,
+            use_pallas=self.use_pallas)
+        return logits
+
+    def _prefill_chunk(self, seq: _Seq) -> None:
+        """Advance one sequence's prefill by one [1, prefill_chunk] slice;
+        on the final slice, greedy-sample the first generated token from the
+        returned last-valid-position logits."""
+        c = self.prefill_chunk
+        lo = seq.consumed
+        hi = min(lo + c, len(seq.req.prompt))
+        toks = np.zeros((1, c), np.int32)
+        toks[0, :hi - lo] = seq.req.prompt[lo:hi]
+        self.kv.ensure(seq.slot, hi)
+        logits = self._step(jnp.asarray(toks),
+                            jnp.asarray([lo], jnp.int32),
+                            jnp.asarray([hi - lo], jnp.int32),
+                            self.kv.device_table_row(seq.slot))
+        seq.consumed = hi
+        if hi == len(seq.req.prompt):
+            tok = int(jnp.argmax(logits[0]))
+            seq.generated.append(tok)
+            seq.pending = tok
+
+    def _decode_step(self, seqs: list) -> None:
+        """One batched decode step over every decode-ready slot; inactive
+        slots ride along masked (n_valid = 0)."""
+        b = self.n_slots
+        toks = np.zeros((b, 1), np.int32)
+        pos = np.zeros((b,), np.int32)
+        nv = np.zeros((b,), np.int32)
+        for s in seqs:
+            toks[s.slot, 0] = s.pending
+            pos[s.slot] = s.pos
+            nv[s.slot] = 1
+            self.kv.ensure(s.slot, s.pos + 1)
+        logits = self._step(jnp.asarray(toks), jnp.asarray(pos),
+                            jnp.asarray(nv), self.kv.device_tables())
+        nxt = np.asarray(jnp.argmax(logits, axis=-1))
+        for s in seqs:
+            tok = int(nxt[s.slot])
+            s.generated.append(tok)
+            s.pending = tok
+
+    # -- scheduler ----------------------------------------------------------
+
+    def run(self, requests) -> list[Completion]:
+        """Serve a batch of requests to completion; returns completions in
+        REQUEST order.  Reentrant: slot/page state fully drains, so one
+        engine can serve successive waves (pages are never zeroed between
+        waves — the causal mask makes stale rows invisible)."""
+        queue = collections.deque(
+            r if isinstance(r, Request) else
+            Request(id=i, prompt=tuple(r[0]), max_new=int(r[1]))
+            for i, r in enumerate(requests))
+        free_slots = list(range(self.n_slots - 1, -1, -1))
+        active: dict[int, _Seq] = {}
+        done: dict[int, Completion] = {}
+        tm = self.timers
+
+        while queue or active:
+            tm["schedule"].arm()
+            while queue and free_slots:
+                req = queue[0]
+                total = len(req.prompt) + req.max_new - 1
+                if total > self.kv.max_len:
+                    raise ValueError(
+                        f"request {req.id}: {total} tokens exceed engine "
+                        f"max_len {self.kv.max_len}")
+                if not self.kv.can_admit(total):
+                    break                      # FCFS: no head-of-line bypass
+                queue.popleft()
+                slot = free_slots.pop()
+                self.kv.admit(slot, total)
+                active[slot] = _Seq(req=req, slot=slot, order=self._order)
+                self._order += 1
+            tm["schedule"].lap()
+
+            prefilling = [s for s in active.values() if s.pending is None]
+            if prefilling:
+                tm["prefill"].arm()
+                self._prefill_chunk(min(prefilling, key=lambda s: s.order))
+                tm["prefill"].lap()
+
+            decoding = [s for s in active.values()
+                        if s.pending is not None
+                        and len(s.generated) < s.req.max_new]
+            if decoding:
+                tm["decode"].arm()
+                self._decode_step(decoding)
+                tm["decode"].lap()
+
+            for s in list(active.values()):
+                if s.pending is not None and \
+                        len(s.generated) >= s.req.max_new:
+                    done[s.req.id] = Completion(
+                        id=s.req.id, prompt=s.req.prompt,
+                        tokens=tuple(s.generated[:s.req.max_new]))
+                    self.kv.release(s.slot)
+                    free_slots.append(s.slot)
+                    del active[s.slot]
+
+        return [done[k] for k in sorted(done)]
+
+    def stats(self) -> dict:
+        per_page = self.kv.pool_bytes() // self.kv.n_pages
+        return {
+            "n_slots": self.n_slots,
+            "page_size": self.kv.page_size,
+            "n_pages": self.kv.n_pages,
+            "pool_bytes": self.kv.pool_bytes(),
+            "peak_cache_bytes": self.kv.peak_pages_used * per_page,
+            "phases": {k: t.summary() for k, t in self.timers.items()},
+        }
+
+
+# ---------------------------------------------------------------------------
+# sequential dense-cache baseline (the pre-engine serving path)
+# ---------------------------------------------------------------------------
+
+_dense_decode = jax.jit(tf.decode_step, static_argnames=("cfg",))
+
+
+@functools.lru_cache(maxsize=64)
+def _dense_prefill(cfg: ModelConfig, cache_len: int, chunk: int):
+    def f(params, tokens, img):
+        return tf.prefill(params, tokens, cfg, img=img, cache_len=cache_len,
+                          chunk=chunk)
+    return jax.jit(f)
+
+
+def sequential_generate(params, cfg: ModelConfig, prompts, *, gen_len: int,
+                        cache_len: int, img=None, temperature: float = 0.0,
+                        seed: int = 0, chunk: int = 256):
+    """prompts [B, S] -> tokens [B, S + gen_len] through the dense per-batch
+    KV cache (prefill + decode_step).  Token-stream-identical to the old
+    ``launch.serve.generate`` (same sample order, same rng splits), without
+    its ``break``-out-of-the-loop tail: every sampled token's decode step
+    runs, so the returned cache state is consistent and the loop body is
+    reusable as THE baseline decode step.  Unlike the old implementation the
+    jitted prefill/decode functions are hoisted to module scope, so repeated
+    calls at the same shapes reuse their compiles — the throughput gate
+    compares the engine against this (stronger) baseline."""
+    b, s = prompts.shape
+    if gen_len < 1:
+        return prompts
+    rng = jax.random.PRNGKey(seed)
+
+    def sample(rng, logits):
+        if temperature > 0:
+            rng, sub = jax.random.split(rng)
+            return rng, jax.random.categorical(
+                sub, logits / temperature)[:, None]
+        return rng, jnp.argmax(logits, axis=-1)[:, None]
+
+    logits, cache = _dense_prefill(cfg, cache_len, chunk)(params, prompts,
+                                                          img)
+    out = [prompts]
+    rng, tok = sample(rng, logits)
+    for i in range(gen_len - 1):
+        out.append(tok)
+        logits, cache = _dense_decode(params, tok,
+                                      jnp.asarray(s + i, jnp.int32), cache,
+                                      cfg=cfg)
+        rng, tok = sample(rng, logits)
+    out.append(tok)
+    return jnp.concatenate(out, axis=1)
+
+
+__all__ = ["Request", "Completion", "ServeEngine", "sequential_generate"]

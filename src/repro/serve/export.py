@@ -1,0 +1,204 @@
+"""Consensus checkpoint export: TrainState -> single inference model.
+
+The paper's end product is the CONSENSUS model x_bar = (1/n) sum_i x_i — the
+node average every decentralized optimizer in the zoo (QG-DSGDm, DSGDm, MT,
+GUT, CHOCO, ...) drives the fleet toward.  Every runtime backend (vmap /
+sharded / hybrid) keeps the params logically node-stacked ``[n, ...]`` — the
+backends differ only in *placement* — so consensus is one tree-map of a mean
+over the leading axis, on any layout, sharded or not.
+
+Entry points (DESIGN.md §13):
+
+* :func:`export_consensus` — from a finished ``api.run`` (Result + state), a
+  live ``TrainState``, or a ``save_train_state`` ``.npz`` on disk.
+* :func:`save_serving_checkpoint` / :func:`load_serving_checkpoint` — the
+  round-trip serving format: consensus params + the resolved ``ModelConfig``
+  embedded in the npz meta, so ``python -m repro.serve --checkpoint x.npz``
+  needs no spec file.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models.moe import MoEConfig
+from repro.models.ssm import SSMConfig
+from repro.train.checkpoint import _SEP, save_checkpoint
+
+PyTree = Any
+
+# key-path prefix of the params subtree inside a save_train_state npz:
+# {"state": TrainState, "rng": ...} -> DictKey('state') + GetAttrKey('params')
+_PARAMS_PREFIX = f"k:state{_SEP}x:.params{_SEP}"
+
+SERVE_FORMAT = "serve-v1"
+
+
+# ---------------------------------------------------------------------------
+# generic tree rebuild from checkpoint key paths
+# ---------------------------------------------------------------------------
+
+def _tree_from_paths(items: list[tuple[list[str], np.ndarray]]) -> PyTree:
+    """Rebuild a dict/tuple pytree from ('k:'/'i:'-prefixed path parts,
+    leaf) pairs — the inverse of checkpoint._path_str for the containers
+    model params use.  Sequences come back as tuples (what init_lm builds;
+    tuple-vs-list does not affect tree_map or checkpoint round-trips)."""
+    if len(items) == 1 and not items[0][0]:
+        return items[0][1]
+    first = items[0][0][0]
+    groups: dict[str, list] = {}
+    for parts, leaf in items:
+        groups.setdefault(parts[0], []).append((parts[1:], leaf))
+    if first.startswith("k:"):
+        return {k[2:]: _tree_from_paths(v) for k, v in sorted(groups.items())}
+    if first.startswith("i:"):
+        idx = sorted(groups.items(), key=lambda kv: int(kv[0][2:]))
+        return tuple(_tree_from_paths(v) for _, v in idx)
+    raise ValueError(f"unsupported checkpoint path component {first!r}")
+
+
+def params_from_train_checkpoint(path: str) -> PyTree:
+    """Load ONLY the node-stacked params subtree from a full-TrainState
+    checkpoint (``save_train_state`` format) — no ``like`` tree needed, the
+    structure is rebuilt from the stored key paths (opt/comm state and the
+    rng carry are ignored)."""
+    data = np.load(path if path.endswith(".npz") else path + ".npz",
+                   allow_pickle=False)
+    items = [(k[len(_PARAMS_PREFIX):].split(_SEP), data[k])
+             for k in data.files if k.startswith(_PARAMS_PREFIX)]
+    if not items:
+        raise ValueError(
+            f"{path}: no '{_PARAMS_PREFIX}*' leaves — not a "
+            f"save_train_state checkpoint")
+    return _tree_from_paths(items)
+
+
+# ---------------------------------------------------------------------------
+# consensus
+# ---------------------------------------------------------------------------
+
+def consensus_params(params: PyTree) -> PyTree:
+    """Mean over the node axis of every leaf: [n, ...] -> [...].  fp32
+    accumulation so bf16 fleets average without precision loss."""
+    def mean0(leaf):
+        x = jnp.asarray(leaf)
+        return jnp.mean(x.astype(jnp.float32), axis=0).astype(x.dtype)
+    return jax.tree.map(mean0, params)
+
+
+def resolve_config(spec) -> ModelConfig | None:
+    """ModelConfig from an ExperimentSpec or its to_dict() form; None for
+    non-transformer models (mlp / resnet consensus exports still work, they
+    just cannot be served by the token engine)."""
+    from repro.api.models import resolve_transformer_config
+    from repro.api.spec import ExperimentSpec
+
+    if isinstance(spec, dict):
+        spec = ExperimentSpec.from_dict(spec)
+    if spec.model.name != "transformer":
+        return None
+    return resolve_transformer_config(spec.model)
+
+
+def export_consensus(source, *, state=None,
+                     spec=None) -> tuple[PyTree, ModelConfig | None]:
+    """Consensus-average a node-stacked run into ``(params, cfg)``.
+
+    ``source`` is one of:
+
+    * a ``save_train_state`` checkpoint path (``.npz``) — pass ``spec`` to
+      also resolve the ModelConfig (the train checkpoint stores no spec);
+    * an ``api.Result`` (pass the final ``state`` from
+      ``run(spec, with_state=True)`` as ``state=``) — cfg resolves from
+      ``result.spec``;
+    * a ``TrainState`` or a bare node-stacked params tree.
+    """
+    if isinstance(source, str):
+        stacked = params_from_train_checkpoint(source)
+    elif hasattr(source, "spec") and hasattr(source, "history"):  # Result
+        if state is None:
+            raise ValueError(
+                "export_consensus(result) needs state=: run the spec with "
+                "with_state=True and pass the returned final state")
+        spec = source.spec if spec is None else spec
+        stacked = state.params
+    elif hasattr(source, "params"):                               # TrainState
+        stacked = source.params
+    else:                                                         # params tree
+        stacked = source
+    cfg = resolve_config(spec) if spec is not None else None
+    return consensus_params(stacked), cfg
+
+
+# ---------------------------------------------------------------------------
+# serving checkpoint format (params + embedded ModelConfig)
+# ---------------------------------------------------------------------------
+
+def config_to_dict(cfg: ModelConfig) -> dict:
+    return dataclasses.asdict(cfg)
+
+
+def config_from_dict(d: dict) -> ModelConfig:
+    d = dict(d)
+    d["period"] = tuple(d["period"])
+    if d.get("moe") is not None:
+        d["moe"] = MoEConfig(**d["moe"])
+    if d.get("ssm") is not None:
+        d["ssm"] = SSMConfig(**d["ssm"])
+    return ModelConfig(**d)
+
+
+def save_serving_checkpoint(path: str, params: PyTree,
+                            cfg: ModelConfig) -> None:
+    """Consensus params + ModelConfig in one npz; round-trips through
+    :func:`load_serving_checkpoint` with no side-channel spec."""
+    save_checkpoint(path, {"params": params},
+                    extra={"format": SERVE_FORMAT,
+                           "model_config": config_to_dict(cfg)})
+
+
+def load_serving_checkpoint(path: str) -> tuple[PyTree, ModelConfig]:
+    from repro.models import transformer as tf
+    from repro.train.checkpoint import _path_str
+
+    data = np.load(path if path.endswith(".npz") else path + ".npz",
+                   allow_pickle=False)
+    meta = json.loads(str(data["__meta__"]))
+    extra = meta.get("extra", {})
+    if extra.get("format") != SERVE_FORMAT:
+        raise ValueError(
+            f"{path}: not a serving checkpoint (format="
+            f"{extra.get('format')!r}); export one with save_serving_"
+            f"checkpoint / --export-consensus")
+    cfg = config_from_dict(extra["model_config"])
+    # restore into init_lm's canonical structure (via eval_shape, no real
+    # init) — leaf-less containers (e.g. an empty tail tuple) leave no key
+    # paths in the npz, so a pure path rebuild would drop them
+    like = jax.eval_shape(lambda k: tf.init_lm(k, cfg),
+                          jax.random.PRNGKey(0))
+    prefix = f"k:params{_SEP}"
+    paths_leaves, treedef = jax.tree_util.tree_flatten_with_path(like)
+    leaves = []
+    for kp, leaf in paths_leaves:
+        key = prefix + _path_str(kp)
+        if key not in data:
+            raise KeyError(f"{path}: serving checkpoint missing leaf {key}")
+        arr = data[key]
+        if tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(f"{path}: shape mismatch at {key}: "
+                             f"{arr.shape} vs {leaf.shape} — checkpoint and "
+                             f"embedded ModelConfig disagree")
+        leaves.append(jnp.asarray(arr))
+    return jax.tree_util.tree_unflatten(treedef, leaves), cfg
+
+
+__all__ = ["consensus_params", "export_consensus",
+           "params_from_train_checkpoint", "resolve_config",
+           "save_serving_checkpoint", "load_serving_checkpoint",
+           "config_to_dict", "config_from_dict", "SERVE_FORMAT"]

@@ -104,6 +104,7 @@ class StepTimer:
             "mean_s": mean,
             "p50_s": pct(0.50),
             "p90_s": pct(0.90),
+            "p95_s": pct(0.95),
             "p99_s": pct(0.99),
             "steps_per_s": (1.0 / mean) if mean > 0 else float("inf"),
         }
