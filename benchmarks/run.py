@@ -392,9 +392,43 @@ def serve(quick=False):
 
 
 def kernels(quick=False):
+    import subprocess
+    import sys
+
     import jax
     import jax.numpy as jnp
     from repro.kernels import ops, ref
+
+    # fused-chain loop bench (subprocess: fresh compile caches; DESIGN.md
+    # §14).  Gates: fused bytes-moved <= 0.5x the unfused stage-by-stage
+    # pass count on the qg_dsgdm ring-8 loop, and parity mismatches == 0.
+    # model large enough (~0.5M stacked elems) that the PACK_TILE pad
+    # quantum charged to the fused side stays <2% of the byte model
+    spec = {"method": "qg_dsgdm", "n": 8, "steps": 8 if quick else 20,
+            "d": 512, "c": 128}
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src" + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    res = subprocess.run(
+        [sys.executable, "-m", "benchmarks.kernels_worker",
+         json.dumps(spec)],
+        capture_output=True, text=True, timeout=3600, env=env,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+    lines = [ln for ln in res.stdout.splitlines()
+             if ln.startswith("KERNEL_ROWS ")]
+    if not lines:
+        raise RuntimeError(f"kernels_worker failed: {res.stderr[-2000:]}")
+    rows = json.loads(lines[0][len("KERNEL_ROWS "):])
+    by_mode = {r["mode"]: r for r in rows}
+    ratio = (by_mode["fused"]["bytes_moved_per_step"]
+             / by_mode["unfused"]["bytes_moved_per_step"])
+    for r in rows:
+        extra = (f"bytes_moved_per_step={r['bytes_moved_per_step']},"
+                 f"mismatches={r['mismatches']}")
+        if r["mode"] == "fused":
+            extra += f",bytes_ratio={ratio:.3f}"
+        csv_row(f"kernels/chain_{r['method']}_ring{r['n']}/{r['mode']}",
+                r["us_per_step"], extra)
 
     key = jax.random.PRNGKey(0)
     reps = 3 if quick else 10
@@ -416,6 +450,20 @@ def kernels(quick=False):
     us_r = bench(jax.jit(lambda *a: ref.qg_local_step_ref(
         *a, eta=0.1, beta=0.9, nesterov=False)), x, m, g)
     csv_row("kernels/qg_local_step_pallas_interp", us_k,
+            f"jnp_ref_us={us_r:.1f}")
+
+    eta = jnp.float32(0.1)
+    us_k = bench(ops.fused_halfstep, x, m, g, eta, beta=0.9, wd=1e-4,
+                 emit_m=False)
+    us_r = bench(jax.jit(lambda *a: ref.fused_halfstep_ref(
+        *a, beta=0.9, wd=1e-4)[0]), x, m, g, eta)
+    csv_row("kernels/fused_halfstep_pallas_interp", us_k,
+            f"jnp_ref_us={us_r:.1f}")
+
+    us_k = bench(ops.gamma_correct, x, m, g, gamma=0.5)
+    us_r = bench(jax.jit(lambda *a: ref.gamma_correct_ref(
+        *a, gamma=0.5)), x, m, g)
+    csv_row("kernels/gamma_correct_pallas_interp", us_k,
             f"jnp_ref_us={us_r:.1f}")
 
     xc = jax.random.normal(jax.random.fold_in(key, 20), (16, 8192))

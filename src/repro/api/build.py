@@ -74,10 +74,10 @@ def _make_opt(spec: ExperimentSpec):
     o = spec.optim
     if o.stages:
         return ChainOptimizer(
-            lr=o.lr, weight_decay=o.weight_decay,
+            lr=o.lr, weight_decay=o.weight_decay, fused=o.fused,
             stage_specs=tuple((n, dict(kw)) for n, kw in o.stages))
     return make_optimizer(o.name, lr=o.lr, weight_decay=o.weight_decay,
-                          **o.kwargs)
+                          fused=o.fused, **o.kwargs)
 
 
 def build(spec: ExperimentSpec, *, mesh: Any = None) -> Experiment:
@@ -138,6 +138,15 @@ def build(spec: ExperimentSpec, *, mesh: Any = None) -> Experiment:
         if "messages_per_step" in ws:
             telemetry_cfg.static["wire_messages_per_step"] = (
                 ws["messages_per_step"])
+        # analytic optimizer HBM traffic for the path actually taken
+        # (fused='auto' resolves against the live backend) — the 'kernel'
+        # collector surfaces it as tm.kernel_bytes_moved (DESIGN.md §14)
+        from repro.core import transforms as T
+        opt = trainer.optimizer
+        n_elems = sum(int(np.prod(l.shape))
+                      for l in jax.tree.leaves(state.params))
+        telemetry_cfg.static["kernel_bytes_moved"] = float(
+            T.chain_bytes_moved(opt._stages(), n_elems, fused=opt.fused))
     return Experiment(spec=spec, trainer=trainer, state=state, task=task,
                       bundle=bundle)
 

@@ -80,6 +80,7 @@ class OptimSpec:
     weight_decay: float = 1e-4
     kwargs: dict = dataclasses.field(default_factory=dict)
     stages: tuple = ()
+    fused: str = "auto"               # 'pallas' | 'off' | 'auto' (§14)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -90,7 +91,7 @@ class CommSpec:
     compressor: str = "dense"
     gamma: float | None = None        # None -> per-compressor default
     error_feedback: bool = False      # EF14 value exchange vs CHOCO replicas
-    backend: str = "jnp"              # 'jnp' | 'pallas'
+    backend: str = "jnp"              # 'jnp' | 'pallas' | 'auto' (TPU->pallas)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -291,6 +292,9 @@ class ExperimentSpec:
                 f"{sorted(OPTIMIZERS)}")
         if self.optim.lr <= 0:
             err("optim.lr", f"must be > 0, got {self.optim.lr}")
+        if self.optim.fused not in ("pallas", "off", "auto"):
+            err("optim.fused", f"must be 'pallas', 'off' or 'auto', got "
+                f"{self.optim.fused!r}")
         # comm (make_compressor lists the valid forms)
         try:
             make_compressor(self.comm.compressor)
@@ -299,8 +303,8 @@ class ExperimentSpec:
         if self.comm.gamma is not None and not 0.0 < self.comm.gamma <= 1.0:
             err("comm.gamma", f"must be in (0, 1] or None, got "
                 f"{self.comm.gamma}")
-        if self.comm.backend not in ("jnp", "pallas"):
-            err("comm.backend", f"must be 'jnp' or 'pallas', got "
+        if self.comm.backend not in ("jnp", "pallas", "auto"):
+            err("comm.backend", f"must be 'jnp', 'pallas' or 'auto', got "
                 f"{self.comm.backend!r}")
         # runtime (the mesh itself is a build(..., mesh=) argument; the
         # sharded backend re-validates axis x n against the actual mesh)

@@ -190,9 +190,27 @@ class CompressedGossip:
         with jax.named_scope("tm/comm/anchor_exchange"):
             mixed = (mix_impl or gossip.mix_dense)(w, anchor)
         with jax.named_scope("tm/comm/decompress"):
-            out = jax.tree.map(
-                lambda x, mh, h: x + gamma * (mh - h), tree, mixed, anchor)
+            out = self._decompress(tree, mixed, anchor, gamma)
         return out, new_site
+
+    def _decompress(self, tree, mixed, anchor, gamma):
+        """Post-exchange correction x + gamma*(mixed - anchor).  With the
+        Pallas backend the whole tree is packed (kernels/pack.py) and
+        streamed through the fused ``gamma_correct`` kernel in ONE pass —
+        the other half of the wire-boundary fusion (DESIGN.md §14; the
+        pre-exchange half is the compressor's fused compress+residual).
+        The 'jnp' path re-reads every leaf three times via tree.map."""
+        if self.compressor.backend == "pallas" and all(
+                l.dtype == jnp.float32 for l in jax.tree.leaves(tree)):
+            from repro.kernels import ops
+            from repro.kernels import pack as _kp
+            spec = _kp.plan_pack(tree)
+            out = ops.gamma_correct(
+                _kp.pack(spec, tree), _kp.pack(spec, mixed),
+                _kp.pack(spec, anchor), gamma=float(gamma))
+            return _kp.unpack(spec, out)
+        return jax.tree.map(
+            lambda x, mh, h: x + gamma * (mh - h), tree, mixed, anchor)
 
     # -- trainer hook ----------------------------------------------------------
     def make_mix_fn(self, sites_in: list[dict], sites_out: list[dict],

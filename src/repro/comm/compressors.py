@@ -19,10 +19,16 @@ Two families, with the constants CHOCO/EF theory needs exposed as methods:
 ``wire_bits(d)`` is the wire cost (bits) of one compressed d-element message;
 the dense baseline is ``32 * d``.  The `comm` benchmark table divides the two.
 
-Hot paths (threshold+mask+residual, quantize/dequantize) can be routed
-through the fused Pallas kernels in ``repro.kernels.compress`` with
-``backend='pallas'``; the default 'jnp' path is the reference semantics
-(`kernels/ref.py`) and is what the parity tests pin the kernels against.
+Hot paths are wired through the fused Pallas kernels in
+``repro.kernels.compress`` when ``backend='pallas'``: top-k's
+threshold+mask+residual and QSGD's quantize/dequantize+residual each run as
+ONE VMEM pass, and ``comm/choco.py`` pairs them with the fused
+``gamma_correct`` post-exchange decompress over the packed tree — the full
+wire-boundary fusion (DESIGN.md §14).  ``backend='auto'`` resolves to
+'pallas' on a TPU backend and 'jnp' elsewhere (interpret-mode Pallas on CPU
+is slower than plain XLA, so CI and laptops keep the reference path).  The
+'jnp' path is the reference semantics (``kernels/ref.py``) and is what the
+parity tests pin the kernels against.
 """
 from __future__ import annotations
 
@@ -300,6 +306,10 @@ def make_compressor(spec: str, *, backend: str = "jnp") -> Compressor:
     """Parse 'dense' | 'topk:<frac>' | 'randk:<frac>' | 'signnorm' |
     'qsgd:<bits>' into a compressor instance.
 
+    ``backend='auto'`` picks the fused Pallas kernels iff a TPU backend is
+    present (the interpret-mode fallback: on CPU the kernels only emulate,
+    so 'jnp' is faster and bit-identical to the oracles).
+
     Every malformed spec — empty argument (``'topk:'``), non-numeric or
     out-of-range argument (``'qsgd:0'``), an argument where none is taken,
     an unknown name — raises ``ValueError`` listing the valid forms.
@@ -309,6 +319,8 @@ def make_compressor(spec: str, *, backend: str = "jnp") -> Compressor:
             f"malformed compressor spec {spec!r}: {why}; valid forms: "
             + " | ".join(VALID_COMPRESSOR_FORMS))
 
+    if backend == "auto":
+        backend = "pallas" if jax.default_backend() == "tpu" else "jnp"
     if not isinstance(spec, str):
         bad(f"expected a string, got {type(spec).__name__}")
     kind, sep, arg = spec.partition(":")

@@ -78,6 +78,10 @@ class DecentralizedOptimizer:
     weight_decay: float = 0.0
     mix_fn: MixFn = dataclasses.field(default=gossip.mix_dense)
     name: str = "base"
+    #: fused chain execution: 'pallas' routes supported segments through the
+    #: packed one-pass kernels, 'off' is stage-by-stage, 'auto' picks
+    #: 'pallas' iff a TPU backend is present (DESIGN.md §14)
+    fused: str = "auto"
 
     def _stages(self) -> tuple[T.Stage, ...]:
         raise NotImplementedError
@@ -95,7 +99,8 @@ class DecentralizedOptimizer:
                         axis_name=axis_name, n_nodes=n_nodes)
         sv = T.StepVars(grads=grads, update=grads, params=params,
                         params_pre_mix=params)
-        sv, new_state = T.chain_apply(self._stages(), ctx, sv, state)
+        sv, new_state = T.chain_apply(self._stages(), ctx, sv, state,
+                                      fused=self.fused)
         return sv.params, new_state
 
     def _lr(self, lr):

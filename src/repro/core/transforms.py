@@ -50,6 +50,7 @@ MixFn = Callable[[jax.Array, PyTree], PyTree]
 
 __all__ = [
     "Stage", "StepCtx", "StepVars", "chain", "chain_init", "chain_apply",
+    "chain_bytes_moved",
     "weight_decay", "heavyball", "qhm_momentum", "adam_scale", "gossip_mix",
     "descent", "qg_buffer", "qg_adam_buffer", "dmsgd_buffer", "grad_track",
     "d2_correction", "slow_outer", "buffer_sync", "STAGES", "make_stage",
@@ -141,11 +142,19 @@ class StepVars:
 
 @dataclasses.dataclass(frozen=True)
 class Stage:
-    """A named, pure (init, apply) transform stage."""
+    """A named, pure (init, apply) transform stage.
+
+    ``meta`` is the optional fusion descriptor (DESIGN.md §14): factories
+    whose arithmetic the packed Pallas path can absorb annotate
+    ``{"kind": ..., <static coefficients>}`` so the fused executor can
+    pattern-match a chain segment without inspecting closures.  Stages
+    without meta always run unfused — fusion is best-effort by design.
+    """
 
     name: str
     init: Callable[[PyTree], Optional[PyTree]]
     apply: Callable[[StepCtx, StepVars, dict], tuple[StepVars, dict]]
+    meta: Optional[dict] = None
 
 
 def chain(*stages: Stage) -> tuple[Stage, ...]:
@@ -168,7 +177,15 @@ def chain_init(stages: tuple[Stage, ...], params: PyTree) -> dict:
 
 
 def chain_apply(stages: tuple[Stage, ...], ctx: StepCtx, sv: StepVars,
-                states: dict) -> tuple[StepVars, dict]:
+                states: dict, *, fused: str = "off") -> tuple[StepVars, dict]:
+    """Run the chain.  ``fused='pallas'`` routes supported segments through
+    the packed one-pass kernels (``kernels/qg_update.py`` via
+    ``kernels/pack.py``); unsupported stages run unfused — fusion is
+    best-effort and never changes which stages execute.  ``'auto'`` means
+    'pallas' on a TPU backend and 'off' elsewhere (interpret-mode Pallas on
+    CPU is strictly slower, so CI keeps the stage-by-stage path)."""
+    if _fused_enabled(fused):
+        return _chain_apply_fused(stages, ctx, sv, states)
     states = dict(states)
     for s in stages:
         # tm/ spans label the per-stage HLO for profile captures
@@ -179,8 +196,19 @@ def chain_apply(stages: tuple[Stage, ...], ctx: StepCtx, sv: StepVars,
     return sv, states
 
 
-def _stateless(name: str, fn) -> Stage:
-    return Stage(name=name, init=lambda params: None, apply=fn)
+def _fused_enabled(fused: str) -> bool:
+    if fused == "off":
+        return False
+    if fused == "pallas":
+        return True
+    if fused == "auto":
+        return jax.default_backend() == "tpu"
+    raise ValueError(
+        f"fused must be one of 'pallas', 'off', 'auto'; got {fused!r}")
+
+
+def _stateless(name: str, fn, *, meta: Optional[dict] = None) -> Stage:
+    return Stage(name=name, init=lambda params: None, apply=fn, meta=meta)
 
 
 # ---------------------------------------------------------------------------
@@ -197,7 +225,8 @@ def weight_decay(wd: float, *, name: str = "weight_decay") -> Stage:
         g = _tmap(lambda g_, p: g_ + wd * p, sv.update, sv.params_pre_mix)
         return sv.replace(update=g, grads=g), states
 
-    return _stateless(name, apply)
+    return _stateless(name, apply,
+                      meta={"kind": "weight_decay", "wd": float(wd)})
 
 
 # ---------------------------------------------------------------------------
@@ -228,7 +257,9 @@ def heavyball(beta: float, *, nesterov: bool = False,
             return sv, states
         return sv, {**states, name: {"m": m}}
 
-    return Stage(name=name, init=init, apply=apply)
+    return Stage(name=name, init=init, apply=apply,
+                 meta={"kind": "heavyball", "beta": float(beta),
+                       "nesterov": bool(nesterov), "seed_from": seed_from})
 
 
 def qhm_momentum(beta: float, mu: float, *, name: str = "qhm") -> Stage:
@@ -365,7 +396,7 @@ def gossip_mix(*, name: str = "gossip_mix") -> Stage:
         mixed = ctx.mix_fn(ctx.w, half)
         return sv.replace(params=mixed, params_post_mix=mixed), states
 
-    return _stateless(name, apply)
+    return _stateless(name, apply, meta={"kind": "gossip_mix"})
 
 
 def descent(*, name: str = "descent") -> Stage:
@@ -408,7 +439,9 @@ def qg_buffer(mu: float, *, tau: int = 1, name: str = "qg_buffer") -> Stage:
                 new_m_hat, m_hat)
         return sv, {**states, name: {"m_hat": new_m_hat}}
 
-    return Stage(name=name, init=init, apply=apply)
+    return Stage(name=name, init=init, apply=apply,
+                 meta={"kind": "qg_buffer", "mu": float(mu),
+                       "tau": int(tau)})
 
 
 def qg_adam_buffer(beta1: float, beta2: float, *,
@@ -577,3 +610,200 @@ def make_stage(name: str, /, **kwargs) -> Stage:
     except TypeError as e:
         raise ValueError(
             f"bad kwargs for stage {name!r}: {e}") from None
+
+
+# ---------------------------------------------------------------------------
+# fused execution (packed one-pass Pallas segments — DESIGN.md §14)
+# ---------------------------------------------------------------------------
+#
+# The fusion boundary is the mix site: gossip (ctx.mix_fn) needs the
+# per-node tree, so a fused segment may cover everything BETWEEN mix sites
+# but never across one.  Two segments exist today:
+#
+#   pre-mix   [weight_decay?] heavyball gossip_mix   -> fused_halfstep
+#   post-mix  qg_buffer                              -> fused_qg_buffer
+#
+# Each packs the node-stacked pytrees into one contiguous fp32 buffer per
+# role (kernels/pack.py) and streams them through VMEM once, instead of one
+# _tmap pass per leaf per stage.  Segments that don't pattern-match (or
+# whose leaves aren't fp32) run unfused — identical stages, identical
+# semantics, just more HBM passes.
+
+#: stage kinds that may legally follow a fused gossip_mix: they read only
+#: params_pre_mix/params_post_mix and their own state, never sv.update or
+#: sv.grads (which the fused pass leaves stale — unobservable otherwise,
+#: since step() returns only params + states).
+_FUSED_TRAILING = ("qg_buffer",)
+
+
+def _meta_kind(s: Stage) -> Optional[str]:
+    return (s.meta or {}).get("kind")
+
+
+def _all_f32(*trees) -> bool:
+    return all(l.dtype == jnp.float32
+               for t in trees for l in jax.tree.leaves(t))
+
+
+def _match_halfstep(stages: tuple[Stage, ...], i: int):
+    """Match ``[weight_decay?] heavyball gossip_mix`` at ``stages[i:]`` with
+    only fusion-safe trailing stages.  Returns (wd, heavyball_stage,
+    n_consumed) or None."""
+    j, wd = i, 0.0
+    if j < len(stages) and _meta_kind(stages[j]) == "weight_decay":
+        wd = stages[j].meta["wd"]
+        j += 1
+    if j >= len(stages) or _meta_kind(stages[j]) != "heavyball":
+        return None
+    hb = stages[j]
+    j += 1
+    if j >= len(stages) or _meta_kind(stages[j]) != "gossip_mix":
+        return None
+    j += 1
+    if any(_meta_kind(s) not in _FUSED_TRAILING for s in stages[j:]):
+        return None
+    return wd, hb, j - i
+
+
+def _apply_fused_halfstep(ctx, sv, states, wd, hb, m_prev):
+    """weight_decay + heavyball + the gossip half step in ONE packed pass;
+    then the (unfusable) gossip exchange on the unpacked tree."""
+    from repro.kernels import ops, pack as _kp
+
+    hbm = hb.meta
+    spec = _kp.plan_pack(sv.params)
+    x = _kp.pack(spec, sv.params)
+    m = _kp.pack(spec, m_prev)
+    g = _kp.pack(spec, sv.update)
+    emit_m = hbm["seed_from"] is None
+    with jax.named_scope("tm/fused_update"):
+        out = ops.fused_halfstep(
+            x, m, g, ctx.lr, beta=hbm["beta"], wd=wd,
+            nesterov=hbm["nesterov"], emit_m=emit_m)
+    if emit_m:
+        half_buf, m_buf = out
+        states = {**states, hb.name: {"m": _kp.unpack(spec, m_buf)}}
+    else:
+        half_buf = out  # seeded momentum: the local buffer is discarded
+    half = _kp.unpack(spec, half_buf)
+    with jax.named_scope("tm/stage/gossip_mix"):
+        mixed = ctx.mix_fn(ctx.w, half)
+    return sv.replace(params=mixed, params_post_mix=mixed), states
+
+
+def _apply_fused_qg_buffer(ctx, sv, states, stage):
+    from repro.kernels import ops, pack as _kp
+
+    mu, tau = stage.meta["mu"], stage.meta["tau"]
+    m_hat = states[stage.name]["m_hat"]
+    spec = _kp.plan_pack(sv.params_pre_mix)
+    pre = _kp.pack(spec, sv.params_pre_mix)
+    post = _kp.pack(spec, sv.params_post_mix)
+    m = _kp.pack(spec, m_hat)
+    refresh = ((jnp.asarray(ctx.t) + 1) % tau == 0) if tau > 1 \
+        else jnp.float32(1.0)
+    with jax.named_scope("tm/fused_update"):
+        new = ops.fused_qg_buffer(pre, post, m, ctx.lr, refresh, mu=mu)
+    return sv, {**states, stage.name: {"m_hat": _kp.unpack(spec, new)}}
+
+
+def _chain_apply_fused(stages, ctx, sv, states):
+    states = dict(states)
+    i = 0
+    while i < len(stages):
+        s = stages[i]
+        seg = _match_halfstep(stages, i)
+        if seg is not None:
+            wd, hb, consumed = seg
+            hbm = hb.meta
+            m_prev = (states[hbm["seed_from"]]["m_hat"]
+                      if hbm["seed_from"] else states[hb.name]["m"])
+            # params identity: an earlier stage rewriting params would
+            # desync the weight-decay read (params_pre_mix) from the
+            # half-step base (params) — no such chain exists, but fall
+            # back rather than silently fuse the wrong expression
+            if (sv.params is sv.params_pre_mix
+                    and _all_f32(sv.params, sv.update, m_prev)):
+                sv, states = _apply_fused_halfstep(
+                    ctx, sv, states, wd, hb, m_prev)
+                i += consumed
+                continue
+        if (_meta_kind(s) == "qg_buffer"
+                and sv.params_post_mix is not None
+                and _all_f32(sv.params_pre_mix, sv.params_post_mix,
+                             states[s.name]["m_hat"])):
+            sv, states = _apply_fused_qg_buffer(ctx, sv, states, s)
+            i += 1
+            continue
+        with jax.named_scope(f"tm/stage/{s.name}"):
+            sv, states = s.apply(ctx, sv, states)
+        i += 1
+    return sv, states
+
+
+# ---------------------------------------------------------------------------
+# analytic HBM traffic model (roofline gate + tm.kernel_bytes_moved)
+# ---------------------------------------------------------------------------
+
+#: streaming passes (reads + writes of one n-element fp32 array) per
+#: unfused stage, by fusion kind.  The gossip EXCHANGE itself is excluded
+#: everywhere — it is identical fused or not, so it cancels in the gate.
+_PASSES_BY_KIND = {
+    "weight_decay": lambda m: 3 if m["wd"] else 0,
+    "heavyball": lambda m: 6 if m["nesterov"] else 3,
+    "gossip_mix": lambda m: 3,
+    "qg_buffer": lambda m: 8 + (3 if m["tau"] > 1 else 0),
+}
+
+#: fallback passes by stage name for un-annotated stages (the zoo's other
+#: transforms; informational only — no fused counterpart exists for them)
+_PASSES_BY_NAME = {
+    "qhm": 6, "adam": 9, "grad_track": 4, "descent": 3, "d2": 4,
+    "qg_adam": 12, "dmsgd_buffer": 8, "slow_outer": 9, "buffer_sync": 0,
+}
+
+
+def _stage_passes(s: Stage) -> int:
+    kind = _meta_kind(s)
+    if kind in _PASSES_BY_KIND:
+        return _PASSES_BY_KIND[kind](s.meta)
+    return _PASSES_BY_NAME.get(s.name, 3)
+
+
+def chain_bytes_moved(stages: tuple[Stage, ...], n_elems: int, *,
+                      fused: str = "off") -> int:
+    """Analytic HBM bytes per optimizer step for an ``n_elems``-parameter
+    node-stacked model (DESIGN.md §14).
+
+    The optimizer hot path is pure streaming, so traffic = passes x bytes:
+    each unfused ``_tmap`` stage re-reads its operands and writes one
+    output; each fused segment streams every operand exactly once.  Fused
+    byte counts use the quantum-padded packed length (``pack.PACK_TILE``),
+    so the <=1-tile pad waste is charged against the fused side.  This is
+    what the BENCH_kernels gate compares — roofline-anchored, not
+    wall-clock, because single-core interpret-mode CI can't see the win.
+    """
+    if not _fused_enabled(fused):
+        return sum(_stage_passes(s) for s in stages) * n_elems * 4
+
+    from repro.kernels.pack import PACK_TILE
+    padded = max(PACK_TILE, -(-n_elems // PACK_TILE) * PACK_TILE)
+    total = 0
+    i = 0
+    while i < len(stages):
+        seg = _match_halfstep(stages, i)
+        if seg is not None:
+            _, hb, consumed = seg
+            # 3 reads (x, m, g) + half write (+ m_new write if stateful)
+            total += (4 if hb.meta["seed_from"] else 5) * padded * 4
+            i += consumed
+            continue
+        s = stages[i]
+        if _meta_kind(s) == "qg_buffer":
+            # 3 reads (pre, post, m_hat) + 1 write
+            total += 4 * padded * 4
+            i += 1
+            continue
+        total += _stage_passes(s) * n_elems * 4
+        i += 1
+    return total

@@ -11,12 +11,20 @@ both the compressed value and the residual in the same pass:
     [rows] reduction done outside; the O(d) mask+residual is the fused part)
   * ``quantize_dequantize``  QSGD stochastic quantize->dequantize + residual,
     q = sign(x) * scale * min(floor(|x|/scale*L + u), L) / L
+  * ``gamma_correct``        the post-exchange wire-boundary fusion
+    (DESIGN.md §14): the CHOCO/EF decompress  out = x + gamma*(mixed -
+    anchor)  in one pass instead of the three-read tree.map re-read —
+    ``comm/choco.mix_site`` packs the whole tree (``kernels/pack.py``) and
+    calls it ONCE per mix site
 
 Grid layout follows qg_update.py: (rows, feature-tiles) over VMEM blocks of
 the flattened per-node message; per-row scalars (threshold / scale) ride in
-[rows, 1] blocks.  Oracles: ``ref.threshold_mask_ref`` /
-``ref.quantize_dequantize_ref``; parity is pinned in tests/test_comm.py,
-including non-tile-multiple shapes.
+[rows, 1] blocks.  Feature-tile padding is bucketed to power-of-two tile
+multiples (``pack.bucket_size``) so heterogeneous message widths compile
+O(log n) variants.  Oracles: ``ref.threshold_mask_ref`` /
+``ref.quantize_dequantize_ref`` / ``ref.gamma_correct_ref``; parity is
+pinned in tests/test_comm.py and tests/test_kernels.py, including
+non-tile-multiple shapes.
 """
 from __future__ import annotations
 
@@ -26,7 +34,10 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from . import pack as _pack
+
 TILE = 16 * 1024  # fp32 lanes per block: 64 KiB/operand, 5 operands < 1 MiB
+_FLOOR = 128
 
 _TINY = 1e-12
 
@@ -53,8 +64,9 @@ def _rowwise_call(kernel, x2d, row_scalars, extras, *, interpret):
     """Launch over (rows, feature-tiles); ``row_scalars`` are [rows] values
     broadcast per row, ``extras`` are [rows, f] element-wise operands."""
     rows, f = x2d.shape
-    tile = min(TILE, max(128, f))
-    pad = (-f) % tile
+    padded_f = _pack.bucket_size(f, tile=TILE, floor=_FLOOR)
+    tile = min(TILE, padded_f)
+    pad = padded_f - f
     full = [x2d.astype(jnp.float32)] + [e.astype(jnp.float32) for e in extras]
     if pad:
         full = [jnp.pad(a, ((0, 0), (0, pad))) for a in full]
@@ -93,3 +105,19 @@ def quantize_dequantize(x2d, scale, u, *, levels: int,
     Returns (dequantized, residual), fp32."""
     kernel = functools.partial(_qdq_kernel, levels=levels)
     return _rowwise_call(kernel, x2d, [scale], [u], interpret=interpret)
+
+
+def _gamma_correct_kernel(x_ref, mx_ref, h_ref, o_ref, *, gamma):
+    o_ref[...] = x_ref[...] + gamma * (mx_ref[...] - h_ref[...])
+
+
+@functools.partial(jax.jit, static_argnames=("gamma", "interpret"))
+def gamma_correct(x, mixed, anchor, *, gamma: float, interpret: bool = True):
+    """Fused CHOCO/EF post-exchange correction in one VMEM pass:
+    ``out = x + gamma * (mixed - anchor)``.  Unfused this is a three-read
+    tree.map over every leaf; packed (see ``kernels/pack.py``) it streams
+    the whole tree once.  ``gamma`` is the resolved consensus step size —
+    a static, it never changes within a run."""
+    kernel = functools.partial(_gamma_correct_kernel, gamma=gamma)
+    return _pack.flat_call(kernel, (x, mixed, anchor), tile=TILE,
+                           floor=_FLOOR, interpret=interpret)

@@ -33,6 +33,26 @@ def qg_buffer_update(x_old, x_new, m_hat, *, eta, mu, interpret=None):
         interpret=_default_interpret() if interpret is None else interpret)
 
 
+def fused_halfstep(x, m, g, eta, *, beta, wd=0.0, nesterov=False,
+                   emit_m=True, interpret=None):
+    return _qg.fused_halfstep(
+        x, m, g, eta, beta=beta, wd=wd, nesterov=nesterov, emit_m=emit_m,
+        interpret=_default_interpret() if interpret is None else interpret)
+
+
+def fused_qg_buffer(x_pre, x_post, m_hat, eta, refresh, *, mu,
+                    interpret=None):
+    return _qg.fused_qg_buffer(
+        x_pre, x_post, m_hat, eta, refresh, mu=mu,
+        interpret=_default_interpret() if interpret is None else interpret)
+
+
+def gamma_correct(x, mixed, anchor, *, gamma, interpret=None):
+    return _cmp.gamma_correct(
+        x, mixed, anchor, gamma=gamma,
+        interpret=_default_interpret() if interpret is None else interpret)
+
+
 def threshold_mask(x2d, thr, *, interpret=None):
     return _cmp.threshold_mask(
         x2d, thr,

@@ -29,6 +29,33 @@ def qg_buffer_update_ref(x_old, x_new, m_hat, *, eta: float,
     return mu * m_hat + (1.0 - mu) * (x_old - x_new) / eta
 
 
+def fused_halfstep_ref(x, m, g, eta, *, beta: float, wd: float = 0.0,
+                       nesterov: bool = False):
+    """One-pass pre-mix chain segment (weight decay + HeavyBall/QG-seeded
+    momentum + the gossip half step).  Expression order matches the unfused
+    transform stages so the fused chain stays bit-identical.  Returns
+    (half, m_new)."""
+    ge = g + wd * x if wd else g
+    mn = beta * m + ge
+    upd = beta * mn + ge if nesterov else mn
+    return -eta * upd + x, mn
+
+
+def fused_qg_buffer_ref(x_pre, x_post, m_hat, eta, refresh, *, mu: float):
+    """Post-mix QG buffer refresh with the Alg. 3 tau gate: where ``refresh``
+    is nonzero,  m_hat <- mu*m_hat + (1-mu)*(x_pre - x_post)/eta,  else the
+    old buffer carries through."""
+    s = 1.0 / eta
+    d = s * (x_pre - x_post)
+    new = mu * m_hat + (1.0 - mu) * d
+    return jnp.where(jnp.asarray(refresh, jnp.float32) != 0.0, new, m_hat)
+
+
+def gamma_correct_ref(x, mixed, anchor, *, gamma: float) -> jax.Array:
+    """CHOCO/EF post-exchange correction: x + gamma * (mixed - anchor)."""
+    return x + gamma * (mixed - anchor)
+
+
 # ---------------------------------------------------------------------------
 # compress — fused gossip-compression hot paths (comm subsystem)
 # ---------------------------------------------------------------------------

@@ -114,16 +114,63 @@ def serve_table(path: str) -> str:
     return table
 
 
+def kernels_table(path: str) -> str:
+    """§Kernels table from a ``BENCH_kernels.json`` (benchmarks.run --only
+    kernels): the fused-chain loop bench (analytic bytes-moved per step +
+    trajectory parity) and the per-kernel interpret-mode microbench rows.
+    The gate line compares the fused chain's HBM byte model against the
+    unfused stage-by-stage pass count — roofline-anchored, not wall-clock
+    (DESIGN.md §14).  Tolerates an absent/empty file."""
+    if not os.path.exists(path):
+        return f"*no kernels bench found at {path}*"
+    try:
+        rows = json.load(open(path))
+    except (OSError, json.JSONDecodeError):
+        return f"*unreadable kernels bench at {path}*"
+    by_mode = {}
+    out = []
+    for r in rows:
+        name = r.get("name", "")
+        if not name.startswith("kernels/"):
+            continue
+        if "bytes_moved_per_step" in r:
+            by_mode[name.rsplit("/", 1)[-1]] = r
+        out.append([
+            name, f"{r.get('us_per_call', 0.0):.1f}",
+            str(int(r["bytes_moved_per_step"]))
+            if "bytes_moved_per_step" in r else "-",
+            str(int(r["mismatches"])) if "mismatches" in r else "-",
+            f"{r['jnp_ref_us']:.1f}" if "jnp_ref_us" in r else "-"])
+    if not out:
+        return f"*no kernels rows in {path}*"
+    table = markdown_table(
+        ["kernel path", "us/call", "bytes moved/step", "mismatches",
+         "jnp ref us"], out)
+    if "fused" in by_mode and "unfused" in by_mode and \
+            by_mode["unfused"].get("bytes_moved_per_step"):
+        ratio = (by_mode["fused"]["bytes_moved_per_step"]
+                 / by_mode["unfused"]["bytes_moved_per_step"])
+        mism = int(by_mode["fused"].get("mismatches", 0) or 0)
+        table += (f"\n\nfused vs unfused bytes-moved: **{ratio:.3f}x** "
+                  f"(gate: <= 0.5x); trajectory parity mismatches: "
+                  f"**{mism}** (gate: == 0)")
+    return table
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--dir", default="experiments/dryrun")
     ap.add_argument("--what", default="roofline",
-                    choices=["roofline", "dryrun", "serve", "both", "all"])
+                    choices=["roofline", "dryrun", "serve", "kernels",
+                             "both", "all"])
     ap.add_argument("--mesh", default="single")
     ap.add_argument("--gossip", default=None)
     ap.add_argument("--bench-serve", default="BENCH_serve.json",
                     metavar="PATH", help="serve bench JSON for --what "
                     "serve/all (absent file renders a placeholder)")
+    ap.add_argument("--bench-kernels", default="BENCH_kernels.json",
+                    metavar="PATH", help="kernels bench JSON for --what "
+                    "kernels/all (absent file renders a placeholder)")
     ap.add_argument("--out", default=None,
                     help="write the rendered markdown here instead of stdout")
     args = ap.parse_args(argv)
@@ -136,6 +183,8 @@ def main(argv=None):
         parts.append(dryrun_table(recs))
     if args.what in ("serve", "all"):
         parts.append(serve_table(args.bench_serve))
+    if args.what in ("kernels", "all"):
+        parts.append(kernels_table(args.bench_kernels))
     text = "\n\n".join(parts)
     if args.out:
         with open(args.out, "w") as fh:

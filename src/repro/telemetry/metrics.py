@@ -217,6 +217,20 @@ def _wire(ctx: CollectorCtx) -> dict:
     return out
 
 
+def _kernel(ctx: CollectorCtx) -> dict:
+    """Optimizer-kernel HBM traffic (DESIGN.md §14): the analytic
+    bytes-moved-per-step of the transform chain for the execution path the
+    run actually took (``core.transforms.chain_bytes_moved`` with the
+    resolved ``fused`` mode) — a build-time static replayed into every row,
+    so a report can show the fusion win next to the wire stats.  Emits
+    nothing when the static is absent (telemetry built without a trainer)."""
+    s = ctx.static
+    if "kernel_bytes_moved" not in s:
+        return {}
+    return {"kernel_bytes_moved": jnp.asarray(s["kernel_bytes_moved"],
+                                              jnp.float32)}
+
+
 def _mixing(ctx: CollectorCtx) -> dict:
     """Spectral-gap-normalized mixing progress.
 
@@ -295,6 +309,7 @@ METRICS: dict[str, Callable[[CollectorCtx], dict]] = {
     "grad_norms": _grad_norms,
     "alignment": _alignment,
     "comm_buffers": _comm_buffers,
+    "kernel": _kernel,
     "wire": _wire,
     "mixing": _mixing,
     "scenario": _scenario,

@@ -125,6 +125,11 @@ class DecentralizedTrainer:
                                    # participation, the exact default graph.
 
     def __post_init__(self):
+        if getattr(self.optimizer, "fused", "off") not in ("pallas", "off",
+                                                           "auto"):
+            raise ValueError(
+                f"optimizer.fused must be 'pallas', 'off' or 'auto', got "
+                f"{self.optimizer.fused!r}")
         if self.lr_fn is None:
             lr = self.optimizer.lr
             self.lr_fn = lambda t: jnp.asarray(lr, jnp.float32)

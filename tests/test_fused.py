@@ -1,0 +1,253 @@
+"""Fused Pallas hot path (DESIGN.md §14): ``fused='pallas'`` must reproduce
+the stage-by-stage unfused trajectory across the zoo, both execution
+runtimes, and compressed comm — fusion is a memory-traffic optimization,
+never an algorithm change.  Tolerances are allclose, not bitwise: the fused
+kernels trace the same jnp ops, but packing reorders XLA's fusion/FMA
+choices by ~1 ULP per step (observed max over 13 steps: 2e-7)."""
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import api
+from repro.comm import make_comm
+from repro.core import optim, topology, transforms
+from repro.train import DecentralizedTrainer, run_training
+
+N, D, C, STEPS = 4, 6, 5, 13
+
+
+def _task(n=N, d=D, c=C):
+    def init_fn(key):
+        k1, _ = jax.random.split(key)
+        return ({"w": jax.random.normal(k1, (d, c)) * 0.3,
+                 "b": jnp.zeros(c)}, {})
+
+    def loss_fn(p, ms, batch, rng):
+        xb, yb = batch
+        logits = xb @ p["w"] + p["b"]
+        ce = jnp.mean(jax.nn.logsumexp(logits, -1) - jnp.take_along_axis(
+            logits, yb[:, None].astype(jnp.int32), -1)[:, 0])
+        return ce, ({}, {})
+
+    def batches(steps, seed=0):
+        rng = np.random.default_rng(seed)
+        for _ in range(steps):
+            yield (rng.normal(size=(n, 4, d)).astype(np.float32),
+                   rng.integers(0, c, size=(n, 4)))
+
+    return init_fn, loss_fn, batches
+
+
+def _trajectory(method, fused, *, steps=STEPS, comm=None, **kw):
+    init_fn, loss_fn, batches = _task()
+    opt = optim.make_optimizer(method, lr=0.1, fused=fused, **kw)
+    tr = DecentralizedTrainer(loss_fn, opt, topology.ring(N), comm=comm)
+    st = tr.init(jax.random.PRNGKey(0), init_fn)
+    st, hist = run_training(tr, st, batches(steps), steps,
+                            rng=jax.random.PRNGKey(1), log_every=1,
+                            log_fn=lambda *_: None)
+    return st, hist
+
+
+def _assert_params_close(st_a, st_b, atol=1e-5):
+    for a, b in zip(jax.tree.leaves(st_a.params),
+                    jax.tree.leaves(st_b.params)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-5, atol=atol)
+
+
+# ---------------------------------------------------------------------------
+# golden trajectories: fused vs unfused, vmap runtime
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("method,kw", [
+    ("qg_dsgdm", {"weight_decay": 1e-4}),   # seeded momentum (emit_m=False)
+    ("qg_dsgdm_n", {}),                     # nesterov halfstep
+    ("qg_dsgdm_tau", {}),                   # gated buffer refresh (tau=4)
+    ("mt_dsgdm", {}),                       # tracking family (falls back)
+    ("dsgdm", {"weight_decay": 1e-4}),      # stateful momentum (emit_m=True)
+])
+def test_fused_matches_unfused_trajectory(method, kw):
+    st_off, h_off = _trajectory(method, "off", **kw)
+    st_pal, h_pal = _trajectory(method, "pallas", **kw)
+    _assert_params_close(st_off, st_pal)
+    assert len(h_off) == len(h_pal) == STEPS
+    for a, b in zip(h_off, h_pal):
+        assert a.keys() == b.keys()
+        for k in a:
+            np.testing.assert_allclose(a[k], b[k], rtol=1e-5, atol=1e-6,
+                                       err_msg=f"{method} {k}")
+
+
+def test_fused_matches_unfused_with_choco():
+    """Compressed comm at the mix site composes with the fused pre/post-mix
+    segments — the wire boundary is exactly where the fusion must stop."""
+    st_off, _ = _trajectory("qg_dsgdm", "off",
+                            comm=make_comm("topk:0.5", backend="jnp"))
+    st_pal, _ = _trajectory("qg_dsgdm", "pallas",
+                            comm=make_comm("topk:0.5", backend="pallas"))
+    _assert_params_close(st_off, st_pal)
+
+
+@pytest.mark.parametrize("spec", ["topk:0.5", "qsgd:8"])
+def test_choco_pallas_backend_matches_jnp(spec):
+    """The fused wire-boundary kernels (one-pass compress+residual, packed
+    gamma_correct decompress) change bytes moved, not the trajectory."""
+    st_j, _ = _trajectory("dsgd", "off", comm=make_comm(spec, backend="jnp"))
+    st_p, _ = _trajectory("dsgd", "off",
+                          comm=make_comm(spec, backend="pallas"))
+    _assert_params_close(st_j, st_p)
+
+
+# ---------------------------------------------------------------------------
+# knob resolution + validation
+# ---------------------------------------------------------------------------
+
+def test_fused_knob_resolution():
+    assert transforms._fused_enabled("off") is False
+    assert transforms._fused_enabled("pallas") is True
+    assert transforms._fused_enabled("auto") == \
+        (jax.default_backend() == "tpu")
+    with pytest.raises(ValueError, match="fused"):
+        transforms._fused_enabled("bogus")
+
+
+def test_trainer_rejects_bad_fused():
+    init_fn, loss_fn, _ = _task()
+    with pytest.raises(ValueError, match="fused"):
+        DecentralizedTrainer(
+            loss_fn, optim.make_optimizer("dsgd", lr=0.1, fused="bogus"),
+            topology.ring(N))
+
+
+def test_spec_validates_fused_and_comm_backend():
+    assert api.ExperimentSpec().optim.fused == "auto"
+    with pytest.raises(ValueError, match="fused"):
+        api.ExperimentSpec(
+            optim=api.OptimSpec(fused="bogus")).validate()
+    with pytest.raises(ValueError, match="backend"):
+        api.ExperimentSpec(
+            comm=api.CommSpec(compressor="topk:0.5",
+                              backend="bogus")).validate()
+
+
+def test_make_compressor_auto_backend():
+    from repro.comm.compressors import make_compressor
+    c = make_compressor("topk:0.5", backend="auto")
+    want = "pallas" if jax.default_backend() == "tpu" else "jnp"
+    assert c.backend == want
+
+
+# ---------------------------------------------------------------------------
+# bytes-moved accounting (the roofline gate's numerator/denominator)
+# ---------------------------------------------------------------------------
+
+def test_chain_bytes_moved_gate_math():
+    """On a model large enough that quantum-pad waste is negligible, the
+    fused qg_dsgdm chain must move <= 0.5x the unfused bytes — the same
+    inequality the benchmark gate (BENCH_kernels.json) enforces."""
+    opt = optim.make_optimizer("qg_dsgdm", lr=0.1, weight_decay=1e-4)
+    stages = opt._stages()
+    n_elems = 525_000
+    b_off = transforms.chain_bytes_moved(stages, n_elems, fused="off")
+    b_pal = transforms.chain_bytes_moved(stages, n_elems, fused="pallas")
+    assert b_off == 17 * n_elems * 4            # wd 3 + hb 3 + mix 3 + qg 8
+    assert b_pal <= 0.5 * b_off
+    # tiny model: the PACK_TILE quantum dominates and fusion can't win
+    assert transforms.chain_bytes_moved(stages, 100, fused="pallas") > \
+        transforms.chain_bytes_moved(stages, 100, fused="off")
+
+
+def test_kernel_bytes_moved_telemetry_static():
+    """build() stamps the analytic per-step byte model into telemetry
+    statics; the 'kernel' metric surfaces it as a constant channel."""
+    from repro.api import presets
+    from repro.telemetry import DEFAULT_METRICS, METRICS
+    assert "kernel" in METRICS and "kernel" in DEFAULT_METRICS
+    spec = presets.get("quickstart_ring16_alpha0.1_qg").override(
+        "loop.steps=4").replace(telemetry={"enabled": True,
+                                           "sink": "memory"})
+    res = api.run(spec, log_fn=lambda *_: None)
+    stat = res.telemetry["static"]
+    ex = api.build(spec)
+    opt = ex.trainer.optimizer
+    n_elems = sum(int(np.prod(l.shape))
+                  for l in jax.tree.leaves(ex.state.params))
+    want = transforms.chain_bytes_moved(opt._stages(), n_elems,
+                                        fused=opt.fused)
+    assert stat["kernel_bytes_moved"] == float(want) > 0
+
+
+# ---------------------------------------------------------------------------
+# sharded runtime parity (subprocess: forced host devices)
+# ---------------------------------------------------------------------------
+
+_SHARDED_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import numpy as np
+import jax, jax.numpy as jnp
+from repro.core import optim, topology
+from repro.launch.mesh import make_debug_mesh
+from repro.train import DecentralizedTrainer, run_training
+
+n, d, c, steps = 4, 6, 5, 13
+
+
+def init_fn(key):
+    k1, _ = jax.random.split(key)
+    return ({"w": jax.random.normal(k1, (d, c)) * 0.3,
+             "b": jnp.zeros(c)}, {})
+
+
+def loss_fn(p, ms, batch, rng):
+    xb, yb = batch
+    logits = xb @ p["w"] + p["b"]
+    ce = jnp.mean(jax.nn.logsumexp(logits, -1) - jnp.take_along_axis(
+        logits, yb[:, None].astype(jnp.int32), -1)[:, 0])
+    return ce, ({}, {})
+
+
+def batches(steps, seed=0):
+    rng = np.random.default_rng(seed)
+    return [(rng.normal(size=(n, 4, d)).astype(np.float32),
+             rng.integers(0, c, size=(n, 4))) for _ in range(steps)]
+
+
+def run(method, fused):
+    mesh = make_debug_mesh(shape=(n,), axes=("data",))
+    opt = optim.make_optimizer(method, lr=0.1, fused=fused)
+    tr = DecentralizedTrainer(loss_fn, opt, topology.ring(n), mesh=mesh,
+                              node_axis="data")
+    st = tr.init(jax.random.PRNGKey(0), init_fn)
+    st, _ = run_training(tr, st, iter(batches(steps)), steps,
+                         rng=jax.random.PRNGKey(1), log_every=0,
+                         log_fn=lambda *_: None)
+    return st
+
+
+for method in ("qg_dsgdm", "dsgdm"):
+    st_off, st_pal = run(method, "off"), run(method, "pallas")
+    for a, b in zip(jax.tree.leaves(st_off.params),
+                    jax.tree.leaves(st_pal.params)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-5, atol=1e-5, err_msg=method)
+print("FUSED_SHARDED_OK")
+"""
+
+
+def test_fused_matches_unfused_on_sharded_runtime():
+    """Acceptance: the fused chain is runtime-agnostic — inside shard_map
+    the packed kernels see each device's node-local shard and produce the
+    same trajectory as the unfused stages (4 forced host devices)."""
+    res = subprocess.run(
+        [sys.executable, "-c", _SHARDED_SCRIPT], capture_output=True,
+        text=True, timeout=900, env={**os.environ, "PYTHONPATH": "src"},
+        cwd=os.path.dirname(os.path.dirname(__file__)))
+    assert "FUSED_SHARDED_OK" in res.stdout, \
+        res.stdout[-1500:] + res.stderr[-3000:]

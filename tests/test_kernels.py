@@ -40,6 +40,122 @@ def test_qg_buffer_update(shape, mu):
 
 
 # ---------------------------------------------------------------------------
+# fused chain kernels (DESIGN.md §14)
+# ---------------------------------------------------------------------------
+
+# non-tile-multiple, ragged-2D, odd-3D, and 0-d leaves — every shape the
+# packed/bucketed launchers must pad and un-pad correctly
+FUSED_SHAPES = [(17,), (1000, 7), (3, 5, 11), ()]
+
+# interpret-mode kernels trace the same jnp ops as the jitted reference, so
+# the only divergence from the EAGER oracle is XLA FMA contraction under
+# jit (~1 ULP) — hence allclose at 1e-6, not bitwise.
+_TOL = dict(rtol=1e-6, atol=1e-6)
+
+
+@pytest.mark.parametrize("shape", FUSED_SHAPES)
+@pytest.mark.parametrize("emit_m", [True, False])
+@pytest.mark.parametrize("wd,nesterov", [(0.0, False), (1e-4, True)])
+def test_fused_halfstep(shape, emit_m, wd, nesterov):
+    x, m, g = rnd(shape, k=50), rnd(shape, k=51), rnd(shape, k=52)
+    eta = jnp.float32(0.1)                      # traced scalar, not a static
+    out = ops.fused_halfstep(x, m, g, eta, beta=0.9, wd=wd,
+                             nesterov=nesterov, emit_m=emit_m)
+    half_e, m_e = ref.fused_halfstep_ref(x, m, g, 0.1, beta=0.9, wd=wd,
+                                         nesterov=nesterov)
+    half = out[0] if emit_m else out
+    assert half.shape == shape
+    np.testing.assert_allclose(np.asarray(half), np.asarray(half_e), **_TOL)
+    if emit_m:
+        np.testing.assert_allclose(np.asarray(out[1]), np.asarray(m_e),
+                                   **_TOL)
+
+
+@pytest.mark.parametrize("shape", FUSED_SHAPES)
+@pytest.mark.parametrize("refresh", [0.0, 1.0])
+def test_fused_qg_buffer(shape, refresh):
+    xo, xn, mh = rnd(shape, k=53), rnd(shape, k=54), rnd(shape, k=55)
+    out = ops.fused_qg_buffer(xo, xn, mh, jnp.float32(0.05),
+                              jnp.float32(refresh), mu=0.9)
+    exp = ref.fused_qg_buffer_ref(xo, xn, mh, 0.05, refresh, mu=0.9)
+    assert out.shape == shape
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp), **_TOL)
+    if refresh == 0.0:                          # off-cadence tau step: no-op
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(mh))
+
+
+@pytest.mark.parametrize("shape", FUSED_SHAPES)
+def test_gamma_correct(shape):
+    x, mx, h = rnd(shape, k=56), rnd(shape, k=57), rnd(shape, k=58)
+    out = ops.gamma_correct(x, mx, h, gamma=0.7)
+    exp = ref.gamma_correct_ref(x, mx, h, gamma=0.7)
+    assert out.shape == shape
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp), **_TOL)
+
+
+# ---------------------------------------------------------------------------
+# packed flat-param layout + launch bucketing (kernels/pack.py)
+# ---------------------------------------------------------------------------
+
+def test_pack_unpack_roundtrip():
+    from repro.kernels import pack as kp
+    tree = {"w": rnd((37, 3), k=60), "b": rnd((5,), k=61),
+            "s": rnd((), k=62), "h": rnd((2, 3, 4), jnp.bfloat16, 63)}
+    spec = kp.plan_pack(tree)
+    assert spec.total == 37 * 3 + 5 + 1 + 24
+    assert spec.padded % spec.tile == 0 and spec.padded >= spec.total
+    buf = kp.pack(spec, tree)
+    assert buf.shape == (spec.padded,) and buf.dtype == jnp.float32
+    out = kp.unpack(spec, buf)
+    assert jax.tree.structure(out) == jax.tree.structure(tree)
+    for a, b in zip(jax.tree.leaves(out), jax.tree.leaves(tree)):
+        assert a.shape == b.shape and a.dtype == b.dtype
+        # bf16 -> f32 -> bf16 is exact, so the roundtrip is bitwise
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_pack_spec_is_shared_across_roles():
+    """One offset table packs params, momentum and grads alike — the fused
+    segments rely on role-interchangeable specs."""
+    from repro.kernels import pack as kp
+    tree = {"w": rnd((11, 4), k=64), "b": rnd((9,), k=65)}
+    other = jax.tree.map(jnp.zeros_like, tree)
+    spec = kp.plan_pack(tree)
+    np.testing.assert_array_equal(
+        np.asarray(kp.pack(spec, other)), np.zeros(spec.padded, np.float32))
+
+
+def test_pack_leaf_count_mismatch_raises():
+    from repro.kernels import pack as kp
+    spec = kp.plan_pack({"w": rnd((4,), k=66)})
+    with pytest.raises(ValueError, match="leaves"):
+        kp.pack(spec, {"w": rnd((4,), k=66), "b": rnd((2,), k=67)})
+
+
+def test_bucket_size_properties():
+    from repro.kernels.pack import bucket_size, bucket_stats, \
+        reset_bucket_stats
+    reset_bucket_stats()
+    tile, floor = 1024, 32
+    seen = set()
+    for n in [1, 5, 31, 32, 33, 100, 1000, 1024, 1025, 5000, 10 ** 6]:
+        p = bucket_size(n, tile=tile, floor=floor)
+        assert p >= n and p >= floor
+        assert p <= max(2 * n, floor)            # pad waste capped at 2x
+        assert p % floor == 0
+        if p > tile:                             # pow2 number of tiles
+            assert p % tile == 0 and (p // tile) & (p // tile - 1) == 0
+        seen.add(p)
+    st = bucket_stats()
+    assert set(st) == seen                       # O(log n) distinct buckets
+    assert all(v["hits"] >= 1 and 0.0 <= v["max_waste"] < 1.0
+               for v in st.values())
+    reset_bucket_stats()
+    assert bucket_stats() == {}
+
+
+# ---------------------------------------------------------------------------
 # flash_attention
 # ---------------------------------------------------------------------------
 
